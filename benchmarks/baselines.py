@@ -1,0 +1,275 @@
+"""Baseline C/R backends (paper §6.1), replaying the same workload trace.
+
+All baselines capture *both* state dimensions (otherwise rollback
+determinism breaks, §2.2):
+
+* ``FullCopyCR``  (CRIU+cp analogue)  — checkpoint = synchronous deep copy of
+  (files, heap); restore = deep copy back.
+* ``ReplayCR``    (replay+cp)         — checkpoint = record the event index
+  (one pristine copy per trace); restore = rebuild from pristine + re-execute
+  the recorded prefix (cold replay), paying per-action execution time.
+* ``DiffMergeCR`` (FC-Diff+dm)        — checkpoint = synchronous chunk diff
+  against the parent snapshot (cheap-ish); restore = materialize base +
+  merge the diff chain along the ancestor path (expensive).
+* ``VMSnapshotCR`` (E2B diff)         — checkpoint/restore = serialize and
+  reload the *whole-sandbox* image (incl. the read-only base "VM" blob),
+  VM-granular like a microVM pause/resume.
+
+``DeltaBoxCR`` adapts the real StateManager to the same interface.
+"""
+from __future__ import annotations
+
+import copy
+import pickle
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    CowArrayState,
+    DeltaCR,
+    DeltaFS,
+    Sandbox,
+    StateManager,
+)
+from repro.search.archetypes import ArchetypeSpec
+
+from .workload import DictState, Event, SandboxState, apply_event, init_state
+
+
+class FullCopyCR:
+    name = "full_copy"
+
+    def __init__(self, spec: ArchetypeSpec, *, replay_cost_s: float = 0.0):
+        self.state = DictState()
+        init_state(spec, self.state)
+        self.spec = spec
+        self.snapshots: Dict[int, Tuple[dict, dict]] = {}
+        self._next = 1
+
+    def api(self):
+        return self.state
+
+    def checkpoint(self) -> int:
+        cid = self._next
+        self._next += 1
+        self.snapshots[cid] = (
+            {k: v.copy() for k, v in self.state.files.items()},
+            {k: v.copy() for k, v in self.state.heap.items()},
+        )
+        return cid
+
+    def restore(self, cid: int) -> None:
+        files, heap = self.snapshots[cid]
+        self.state.files = {k: v.copy() for k, v in files.items()}
+        self.state.heap = {k: v.copy() for k, v in heap.items()}
+
+    def storage_bytes(self) -> int:
+        return sum(
+            a.nbytes for f, h in self.snapshots.values() for a in list(f.values()) + list(h.values())
+        )
+
+
+class ReplayCR:
+    name = "replay"
+
+    def __init__(self, spec: ArchetypeSpec, *, replay_cost_s: float = 0.002):
+        self.spec = spec
+        self.state = DictState()
+        init_state(spec, self.state)
+        self.pristine = (
+            {k: v.copy() for k, v in self.state.files.items()},
+            {k: v.copy() for k, v in self.state.heap.items()},
+        )
+        self.log: List[Event] = []
+        self.snapshots: Dict[int, int] = {}
+        self.replay_cost_s = replay_cost_s          # per-action re-execution cost
+        self._next = 1
+
+    def api(self):
+        return self.state
+
+    def note_event(self, ev: Event) -> None:
+        self.log.append(ev)
+
+    def checkpoint(self) -> int:
+        cid = self._next
+        self._next += 1
+        self.snapshots[cid] = len(self.log)
+        return cid
+
+    def restore(self, cid: int) -> None:
+        upto = self.snapshots[cid]
+        files, heap = self.pristine
+        self.state.files = {k: v.copy() for k, v in files.items()}
+        self.state.heap = {k: v.copy() for k, v in heap.items()}
+        for ev in self.log[:upto]:
+            apply_event(self.spec, self.state, ev)
+            if self.replay_cost_s:
+                time.sleep(self.replay_cost_s)
+        del self.log[upto:]
+        for cid2 in [c for c, n in self.snapshots.items() if n > upto]:
+            del self.snapshots[cid2]
+
+    def storage_bytes(self) -> int:
+        files, heap = self.pristine
+        return sum(a.nbytes for a in list(files.values()) + list(heap.values()))
+
+
+class DiffMergeCR:
+    name = "diff_merge"
+    CHUNK = 4096
+
+    def __init__(self, spec: ArchetypeSpec, **_):
+        self.spec = spec
+        self.state = DictState()
+        init_state(spec, self.state)
+        self.base = self._snapshot_arrays()
+        self.diffs: Dict[int, Tuple[Optional[int], dict]] = {}   # cid -> (parent, delta)
+        self._shadow = self._snapshot_arrays()
+        self._next = 1
+        self._current: Optional[int] = None
+
+    def api(self):
+        return self.state
+
+    def _snapshot_arrays(self) -> Dict[str, np.ndarray]:
+        out = {}
+        for k, v in self.state.files.items():
+            out["f/" + k] = v.copy()
+        for k, v in self.state.heap.items():
+            out["h/" + k] = v.copy()
+        return out
+
+    def _diff(self, old: Dict[str, np.ndarray], new: Dict[str, np.ndarray]) -> dict:
+        delta = {}
+        for k, arr in new.items():
+            prev = old.get(k)
+            if prev is None or prev.shape != arr.shape:
+                delta[k] = ("full", arr.copy())
+                continue
+            a = prev.view(np.uint8).reshape(-1)
+            b = arr.view(np.uint8).reshape(-1)
+            n = len(b)
+            chunks = []
+            for off in range(0, n, self.CHUNK):
+                if not np.array_equal(a[off : off + self.CHUNK], b[off : off + self.CHUNK]):
+                    chunks.append((off, b[off : off + self.CHUNK].copy()))
+            if chunks:
+                delta[k] = ("delta", chunks)
+        return delta
+
+    def checkpoint(self) -> int:
+        cid = self._next
+        self._next += 1
+        new = self._snapshot_arrays()
+        self.diffs[cid] = (self._current, self._diff(self._shadow, new))
+        self._shadow = new
+        self._current = cid
+        return cid
+
+    def restore(self, cid: int) -> None:
+        # materialize base, then merge the diff chain root→cid (the expensive
+        # restore the paper measures for FC-Diff)
+        chain = []
+        walk: Optional[int] = cid
+        while walk is not None:
+            parent, delta = self.diffs[walk]
+            chain.append(delta)
+            walk = parent
+        arrays = {k: v.copy() for k, v in self.base.items()}
+        for delta in reversed(chain):
+            for k, payload in delta.items():
+                kind, data = payload
+                if kind == "full":
+                    arrays[k] = data.copy()
+                else:
+                    flat = arrays[k].view(np.uint8).reshape(-1)
+                    for off, blob in data:
+                        flat[off : off + len(blob)] = blob
+        self.state.files = {k[2:]: v for k, v in arrays.items() if k.startswith("f/")}
+        self.state.heap = {k[2:]: v for k, v in arrays.items() if k.startswith("h/")}
+        self._shadow = self._snapshot_arrays()
+        self._current = cid
+
+    def storage_bytes(self) -> int:
+        total = sum(a.nbytes for a in self.base.values())
+        for _, delta in self.diffs.values():
+            for kind, data in delta.values():
+                if kind == "full":
+                    total += data.nbytes
+                else:
+                    total += sum(len(b) for _, b in data)
+        return total
+
+
+class VMSnapshotCR:
+    name = "vm_snapshot"
+
+    def __init__(self, spec: ArchetypeSpec, *, vm_base_mb: float = 64.0, **_):
+        self.spec = spec
+        self.state = DictState()
+        init_state(spec, self.state)
+        # the "VM image": kernel + daemons + runtime the microVM must pause
+        self.vm_base = np.random.default_rng(1).integers(
+            0, 255, size=int(vm_base_mb * (1 << 20)), dtype=np.uint8
+        )
+        self.snapshots: Dict[int, bytes] = {}
+        self._next = 1
+
+    def api(self):
+        return self.state
+
+    def checkpoint(self) -> int:
+        cid = self._next
+        self._next += 1
+        self.snapshots[cid] = pickle.dumps(
+            (self.state.files, self.state.heap, self.vm_base), protocol=5
+        )
+        return cid
+
+    def restore(self, cid: int) -> None:
+        files, heap, base = pickle.loads(self.snapshots[cid])
+        self.state.files = {k: v.copy() for k, v in files.items()}
+        self.state.heap = {k: v.copy() for k, v in heap.items()}
+
+    def storage_bytes(self) -> int:
+        return sum(len(b) for b in self.snapshots.values())
+
+
+class DeltaBoxCR:
+    name = "deltabox"
+
+    def __init__(self, spec: ArchetypeSpec, *, chunk_bytes: int = 4096, pool: int = 64, **_):
+        self.spec = spec
+        fs = DeltaFS(chunk_bytes=chunk_bytes)
+        self.cr = DeltaCR(
+            store=fs.store,
+            restore_fn=lambda p: CowArrayState({k: v.copy() for k, v in p.items()}),
+            template_pool_size=pool,
+        )
+        proc = CowArrayState({}, hot_keys=("heap_0", "heap_1"))
+        self.sandbox = Sandbox(fs, proc)
+        self.sm = StateManager(self.sandbox, self.cr)
+        self.adapter = SandboxState(self.sandbox)
+        init_state(spec, self.adapter)
+
+    def api(self):
+        return self.adapter
+
+    def checkpoint(self) -> int:
+        return self.sm.checkpoint()
+
+    def restore(self, cid: int) -> None:
+        self.sm.restore(cid)
+        self.adapter.sandbox = self.sandbox     # proc object swapped on restore
+
+    def wait_async(self) -> None:
+        self.cr.wait_dumps()
+
+    def storage_bytes(self) -> int:
+        return self.sandbox.fs.store.stats.physical_bytes
+
+
+BASELINES = [DeltaBoxCR, FullCopyCR, ReplayCR, DiffMergeCR, VMSnapshotCR]

@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, quick mode, CSV rows."""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+def quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_ms(fn: Callable[[], Any], repeats: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) * 1e3 / repeats
+
+
+class EventTimer:
+    """Collects per-event wall times by label."""
+
+    def __init__(self):
+        self.samples: Dict[str, List[float]] = {}
+
+    def record(self, label: str, seconds: float) -> None:
+        self.samples.setdefault(label, []).append(seconds * 1e3)
+
+    def timeit(self, label: str, fn: Callable[[], Any]) -> Any:
+        t0 = time.perf_counter()
+        out = fn()
+        self.record(label, time.perf_counter() - t0)
+        return out
+
+    def mean_ms(self, label: str) -> float:
+        xs = self.samples.get(label, [])
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def p(self, label: str, q: float) -> float:
+        import numpy as np
+
+        xs = self.samples.get(label, [])
+        return float(np.percentile(xs, q)) if xs else float("nan")

@@ -1,0 +1,69 @@
+"""Table 3 analogue: fork-out latency and footprint vs fan-out width.
+
+The warm template is the "stdlib-only agent with the real trajectory in its
+heap (~15 MB RSS)": a CowArrayState with a 15 MB heap.  Also reports the
+write-sensitivity pass: each child dirtying W MB raises its resident by
+exactly that (CoW accounting).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import CowArrayState
+from repro.search import fork_n
+
+from .common import Row, quick
+
+
+def run() -> List[Row]:
+    heap_mb = 15
+    elems = heap_mb * (1 << 20) // 4
+    rng = np.random.default_rng(0)
+    template = CowArrayState(
+        {f"seg{i}": rng.standard_normal(elems // 8).astype(np.float32) for i in range(8)}
+    )
+    rows: List[Row] = []
+    widths = [1, 4, 16] if quick() else [1, 4, 16, 64]
+    for n in widths:
+        reps = 3 if quick() else 5
+        p50s, p99s, fps, rss = [], [], [], []
+        for _ in range(reps):
+            children, res = fork_n(template, n)
+            p50s.append(res.p50_ms)
+            p99s.append(res.p99_ms)
+            fps.append(res.forks_per_s)
+            rss.append(res.resident_bytes)
+            for c in children:
+                c.release()
+        rows.append(
+            Row(
+                f"table3/fork_n{n}",
+                float(np.median(p50s)) * 1e3,
+                f"p99_ms={float(np.median(p99s)):.3f};forks_per_s={float(np.median(fps)):.0f};"
+                f"rss_mb={float(np.median(rss))/1e6:.1f}",
+            )
+        )
+    # write-sensitivity: child dirties 4 MB -> resident grows by ~that
+    children, _ = fork_n(template, 4)
+    child = children[0]
+    before = child.resident_bytes()
+    child.mutate("seg0", lambda a: a.__setitem__(slice(None), 1.0))
+    child.mutate("seg1", lambda a: a.__setitem__(slice(None), 1.0))
+    grown = child.resident_bytes() - before
+    expected = 2 * (elems // 8) * 4 * (1 - 1 / 5)   # privatized minus shared release
+    rows.append(
+        Row(
+            "table3/write_sensitivity", 0.0,
+            f"dirtied_mb={2*(elems//8)*4/1e6:.1f};resident_growth_mb={grown/1e6:.1f}",
+        )
+    )
+    for c in children:
+        c.release()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

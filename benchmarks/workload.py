@@ -1,0 +1,122 @@
+"""Deterministic SWE-bench-archetype workload, replayable through any C/R
+backend.
+
+A *trace* is a seeded sequence of events; each event mutates the repo
+("filesystem") and the heap ("process memory") exactly as
+``search.archetypes`` does, but through an abstract state API so the
+baseline backends (plain dicts) and DeltaBox (Sandbox) replay the identical
+logical workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Protocol
+
+import numpy as np
+
+from repro.search.archetypes import ARCHETYPES, ArchetypeSpec
+
+
+class StateAPI(Protocol):
+    def read_file(self, key: str) -> np.ndarray: ...
+    def write_file(self, key: str, value: np.ndarray) -> None: ...
+    def read_heap(self, key: str) -> np.ndarray: ...
+    def write_heap(self, key: str, value: np.ndarray) -> None: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    seed: int
+    readonly: bool
+
+
+def make_trace(spec: ArchetypeSpec, n_events: int, seed: int = 0) -> List[Event]:
+    rng = np.random.default_rng(seed)
+    return [
+        Event(seed=int(rng.integers(1 << 31)), readonly=bool(rng.random() < spec.readonly_prob))
+        for _ in range(n_events)
+    ]
+
+
+def init_state(spec: ArchetypeSpec, api: StateAPI, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    file_elems = spec.file_kb * 1024 // 4
+    for i in range(spec.n_files):
+        api.write_file(f"file_{i:04d}", rng.standard_normal(file_elems).astype(np.float32))
+    heap_elems = int(spec.heap_mb * (1 << 20)) // 4
+    per = max(heap_elems // spec.heap_arrays, 1)
+    for j in range(spec.heap_arrays):
+        api.write_heap(f"heap_{j}", rng.standard_normal(per).astype(np.float32))
+    api.write_heap("cursor", np.zeros(4, np.int64))
+
+
+def apply_event(spec: ArchetypeSpec, api: StateAPI, ev: Event) -> None:
+    rng = np.random.default_rng(ev.seed)
+    # heap mutation (process dimension)
+    for j in range(spec.heap_arrays):
+        if rng.random() < spec.heap_dirty_fraction * 2:
+            arr = api.read_heap(f"heap_{j}").copy()
+            n = max(1, int(arr.size * spec.heap_dirty_fraction))
+            idx = rng.integers(0, arr.size, size=n)
+            arr[idx] = rng.standard_normal(n).astype(arr.dtype)
+            api.write_heap(f"heap_{j}", arr)
+    cur = api.read_heap("cursor").copy()
+    cur[0] += 1
+    api.write_heap("cursor", cur)
+    if ev.readonly:
+        for i in range(min(4, spec.n_files)):
+            api.read_file(f"file_{i:04d}")
+        return
+    file_ids = rng.integers(0, spec.n_files, size=spec.write_files_per_step)
+    for fid in file_ids:
+        key = f"file_{int(fid):04d}"
+        arr = api.read_file(key).copy()
+        n = max(1, int(arr.size * spec.edit_fraction))
+        pos = int(rng.integers(0, max(arr.size - n, 1)))
+        arr[pos : pos + n] = rng.standard_normal(n).astype(arr.dtype)
+        api.write_file(key, arr)
+
+
+# ---------------------------------------------------------------- adapters
+class DictState:
+    """Plain in-memory state for baseline backends."""
+
+    def __init__(self):
+        self.files: Dict[str, np.ndarray] = {}
+        self.heap: Dict[str, np.ndarray] = {}
+
+    def read_file(self, key):
+        return self.files[key]
+
+    def write_file(self, key, value):
+        self.files[key] = value
+
+    def read_heap(self, key):
+        return self.heap[key]
+
+    def write_heap(self, key, value):
+        self.heap[key] = value
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.files.values()) + sum(
+            a.nbytes for a in self.heap.values()
+        )
+
+
+class SandboxState:
+    """Adapter over a DeltaBox Sandbox (DeltaFS + CowArrayState)."""
+
+    def __init__(self, sandbox):
+        self.sandbox = sandbox
+
+    def read_file(self, key):
+        return self.sandbox.fs.read("repo/" + key)
+
+    def write_file(self, key, value):
+        self.sandbox.fs.write("repo/" + key, value)
+
+    def read_heap(self, key):
+        return self.sandbox.proc.get(key)
+
+    def write_heap(self, key, value):
+        self.sandbox.proc.set(key, value)

@@ -1,0 +1,68 @@
+"""Quickstart: DeltaState in 60 lines.
+
+A sandbox is a coupled (DeltaFS filesystem, forkable process state) pair.
+Checkpoints duplicate only deltas; rollback is O(1); dumps are async.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    CowArrayState,
+    DeltaCR,
+    DeltaFS,
+    Sandbox,
+    StateManager,
+    reachability_gc,
+)
+
+
+def main():
+    # --- build a sandbox: repo tensors (durable) + agent heap (ephemeral)
+    fs = DeltaFS(chunk_bytes=4096)
+    fs.write("repo/main.py", np.arange(50_000, dtype=np.int32))
+    proc = CowArrayState({"heap": np.zeros(1_000_000, np.float32)}, hot_keys=("heap",))
+    cr = DeltaCR(
+        store=fs.store,
+        restore_fn=lambda p: CowArrayState({k: v.copy() for k, v in p.items()}),
+        template_pool_size=8,
+    )
+    sm = StateManager(Sandbox(fs, proc), cr)
+
+    # --- checkpoint, mutate, checkpoint
+    c1 = sm.checkpoint()                      # O(1) layer freeze + template fork
+    sm.sandbox.fs.write("repo/main.py", np.ones(50_000, np.int32))
+    sm.sandbox.proc.mutate("heap", lambda h: h.__setitem__(slice(0, 10), 1.0))
+    c2 = sm.checkpoint()
+
+    # --- rollback: coupled, millisecond-class, arbitrary target
+    mode = sm.restore(c1)
+    assert sm.sandbox.fs.read("repo/main.py")[0] == 0
+    assert sm.sandbox.proc.get("heap")[0] == 0.0
+    print(f"restored c1 via {mode} path")
+
+    mode = sm.restore(c2)
+    assert sm.sandbox.proc.get("heap")[0] == 1.0
+    print(f"restored c2 via {mode} path")
+
+    # --- value-time test isolation: side effects rolled back unconditionally
+    def run_tests(sb):
+        sb.fs.write("repo/__pycache__", np.zeros(8, np.int8))
+        return 0.83
+
+    value = sm.isolated_eval(run_tests)
+    assert not sm.sandbox.fs.exists("repo/__pycache__")
+    print(f"isolated eval -> {value}, side effects undone")
+
+    # --- storage is delta-based
+    cr.wait_dumps()
+    stats = fs.store.stats
+    print(f"physical={stats.physical_bytes/1e6:.2f} MB "
+          f"logical={stats.logical_bytes/1e6:.2f} MB "
+          f"(sharing={stats.logical_bytes/max(stats.physical_bytes,1):.1f}x)")
+    reachability_gc(sm)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

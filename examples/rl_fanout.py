@@ -1,0 +1,100 @@
+"""RL training step with warm-template rollout fan-out (paper §6.2.2).
+
+Each step: fork N rollout sessions from one warm template (page-table copy),
+generate completions, score them, REINFORCE-update the policy, tear down.
+The fork primitive keeps the accelerator busy: sandbox time is microseconds
+against seconds of generation/training.
+
+    PYTHONPATH=src python examples/rl_fanout.py [--steps 3 --rollouts 8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.search import fork_n, sync_gpu_occupation
+from repro.serve import Engine, PagePool, SamplingParams
+from repro.train.optim import OptimizerConfig, adamw_init, adamw_update
+
+
+def reward_fn(tokens):
+    """Toy reward: prefer token diversity in the completion."""
+    return len(set(tokens)) / max(len(tokens), 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--rollouts", type=int, default=8)
+    ap.add_argument("--gen-tokens", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_config("olmo-1b-tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(peak_lr=1e-4, warmup_steps=2, total_steps=100)
+    opt_state = adamw_init(params, opt_cfg)
+    pool = PagePool(cfg, num_pages=4096, page_size=8, max_pages_per_session=32)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+
+    def reinforce_loss(p, tokens, advantage):
+        toks = jnp.asarray([tokens], jnp.int32)
+        hidden, _ = model.forward(p, toks[:, :-1], remat=False)
+        from repro.models.model import L
+
+        hidden = L.apply_norm(cfg.norm, p["final_norm"], hidden)
+        logits = model._logits(p, hidden)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(logp, toks[:, 1:, None], axis=-1)[..., 0]
+        return -advantage * jnp.mean(gold)
+
+    grad_fn = jax.jit(jax.grad(reinforce_loss))
+
+    for step in range(args.steps):
+        engine = Engine(model, params, pool)
+        template = engine.new_session(prompt, SamplingParams(temperature=1.0, seed=step))
+
+        # --- fan-out: N forks from the warm template -----------------------
+        t0 = time.perf_counter()
+        children, fan = fork_n(template, args.rollouts)
+        t_sandbox = time.perf_counter() - t0
+
+        # --- rollouts (distinct RNG per child -> distinct trajectories) ----
+        t0 = time.perf_counter()
+        rewards = []
+        for i, child in enumerate(children):
+            child.extras["rng_seed"] = np.asarray([1000 * step + i], np.int64)
+            child.extras["rng_counter"] = np.asarray([0], np.int64)
+            engine.generate(child, args.gen_tokens)
+            rewards.append(reward_fn(child.tokens[len(prompt):]))
+        t_gen = time.perf_counter() - t0
+
+        # --- REINFORCE update on advantage-weighted trajectories -----------
+        t0 = time.perf_counter()
+        baseline = float(np.mean(rewards))
+        gsum = jax.tree.map(jnp.zeros_like, params)
+        for child, r in zip(children, rewards):
+            g = grad_fn(params, child.tokens, r - baseline)
+            gsum = jax.tree.map(jnp.add, gsum, g)
+        grads = jax.tree.map(lambda g: g / len(children), gsum)
+        params, opt_state, info = adamw_update(params, grads, opt_state, opt_cfg)
+        t_train = time.perf_counter() - t0
+
+        for child in children:
+            child.release()
+        template.release()
+        occ = sync_gpu_occupation(t_sandbox, t_gen, t_train)
+        print(
+            f"step {step}: fork_p50={fan.p50_ms:.3f}ms sandbox={t_sandbox*1e3:.1f}ms "
+            f"gen={t_gen:.2f}s train={t_train:.2f}s occupation={occ:.3f} "
+            f"mean_reward={baseline:.3f}"
+        )
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""DeltaState — the paper's primary contribution as a composable JAX module.
+
+Change-based, millisecond-class checkpoint/rollback for stateful agent
+workloads: a transactional (durable, ephemeral) state pair built from
+
+* :class:`~repro.core.chunk_store.ChunkStore` — refcounted reflink-analogue base storage,
+* :class:`~repro.core.deltafs.DeltaFS` — runtime-switchable overlay layers (O(1) ckpt/rollback),
+* :class:`~repro.core.deltacr.DeltaCR` — template-fork fast restores + async delta dumps,
+* :class:`~repro.core.state_manager.StateManager` — the coupled-consistency protocol,
+* :mod:`~repro.core.gc` — reachability-aware snapshot GC,
+* :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue).
+"""
+from .chunk_store import ChunkStore, ChunkStoreStats
+from .deltafs import DeltaFS, LayerConfig, TensorMeta
+from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
+from .gc import reachability_gc, recency_gc
+from .npd import InferenceProxy, ProxyRequest
+from .persist import load_store, save_store
+from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
+
+__all__ = [
+    "ChunkStore",
+    "ChunkStoreStats",
+    "DeltaFS",
+    "LayerConfig",
+    "TensorMeta",
+    "CowArrayState",
+    "DeltaCR",
+    "DumpImage",
+    "ForkableState",
+    "reachability_gc",
+    "recency_gc",
+    "InferenceProxy",
+    "load_store",
+    "save_store",
+    "ProxyRequest",
+    "CheckpointError",
+    "Sandbox",
+    "SnapshotNode",
+    "StateManager",
+]

@@ -1,0 +1,170 @@
+"""Refcounted, content-dedupable chunk store — the XFS-reflink analogue.
+
+DeltaFS layers and DeltaCR dump images never hold tensor bytes directly;
+they hold *references* to immutable chunks in this store.  A chunk that is
+unmodified across N checkpoints is stored exactly once and shared by all N
+generations ("reflink composes transitively", paper §4.1).  Releasing the
+last reference frees the physical bytes.
+
+Two sharing mechanisms:
+
+* **Structural sharing** (always on): when DeltaFS copies a tensor up into a
+  new layer it re-references the parent's chunk ids for every chunk the write
+  did not touch — the analogue of ``vfs_clone_file_range`` preserving the
+  extent map.
+* **Content dedupe** (optional, beyond-paper): chunks are keyed by a
+  blake2b digest so *identical* payloads written independently collapse to
+  one physical chunk (e.g. ``__pycache__`` regenerated after a rollback).
+
+The store is process-local and thread-safe; it is the "base storage"
+(Layer 1) of the paper's architecture.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["ChunkStore", "ChunkStoreStats"]
+
+
+@dataclass
+class ChunkStoreStats:
+    """Physical vs logical accounting, used by the write-amplification bench."""
+
+    physical_bytes: int = 0          # bytes actually resident
+    logical_bytes: int = 0           # bytes across all live references
+    chunks_alive: int = 0
+    puts: int = 0                    # put() calls
+    dedup_hits: int = 0              # puts resolved by content dedupe
+    bytes_written: int = 0           # physical bytes written by puts (copy-up volume)
+    peak_physical_bytes: int = 0
+
+    def snapshot(self) -> "ChunkStoreStats":
+        return ChunkStoreStats(**vars(self))
+
+
+@dataclass
+class _Chunk:
+    data: bytes
+    refs: int = 1
+    digest: Optional[bytes] = None
+    pad: int = 0  # trailing pad bytes (last chunk of a tensor)
+
+
+class ChunkStore:
+    """Immutable chunk storage with explicit reference counting.
+
+    Chunk ids are opaque monotonically increasing ints.  All methods are
+    thread-safe (DeltaCR's dump worker and the foreground DeltaFS path share
+    one store).
+    """
+
+    def __init__(self, *, chunk_bytes: int = 64 * 1024, dedupe: bool = True):
+        if chunk_bytes <= 0:
+            raise ValueError("chunk_bytes must be positive")
+        self.chunk_bytes = int(chunk_bytes)
+        self.dedupe = bool(dedupe)
+        self._lock = threading.RLock()
+        self._chunks: Dict[int, _Chunk] = {}
+        self._by_digest: Dict[bytes, int] = {}
+        self._next_id = 1
+        self.stats = ChunkStoreStats()
+
+    # ------------------------------------------------------------------ put
+    def put(self, data: bytes, *, pad: int = 0) -> int:
+        """Store one chunk, returning its id with one reference held."""
+        with self._lock:
+            self.stats.puts += 1
+            digest = None
+            if self.dedupe:
+                digest = hashlib.blake2b(data, digest_size=16).digest()
+                hit = self._by_digest.get(digest)
+                if hit is not None:
+                    chunk = self._chunks[hit]
+                    chunk.refs += 1
+                    self.stats.dedup_hits += 1
+                    self.stats.logical_bytes += len(data)
+                    return hit
+            cid = self._next_id
+            self._next_id += 1
+            self._chunks[cid] = _Chunk(data=data, digest=digest, pad=pad)
+            if digest is not None:
+                self._by_digest[digest] = cid
+            self.stats.chunks_alive += 1
+            self.stats.physical_bytes += len(data)
+            self.stats.logical_bytes += len(data)
+            self.stats.bytes_written += len(data)
+            self.stats.peak_physical_bytes = max(
+                self.stats.peak_physical_bytes, self.stats.physical_bytes
+            )
+            return cid
+
+    # ------------------------------------------------------------------ get
+    def get(self, cid: int) -> bytes:
+        with self._lock:
+            return self._chunks[cid].data
+
+    def pad_of(self, cid: int) -> int:
+        with self._lock:
+            return self._chunks[cid].pad
+
+    # ----------------------------------------------------------- refcounting
+    def incref(self, cid: int, n: int = 1) -> None:
+        with self._lock:
+            chunk = self._chunks[cid]
+            chunk.refs += n
+            self.stats.logical_bytes += n * len(chunk.data)
+
+    def decref(self, cid: int, n: int = 1) -> None:
+        with self._lock:
+            chunk = self._chunks[cid]
+            if chunk.refs < n:
+                raise RuntimeError(f"chunk {cid}: decref below zero")
+            chunk.refs -= n
+            self.stats.logical_bytes -= n * len(chunk.data)
+            if chunk.refs == 0:
+                if chunk.digest is not None:
+                    self._by_digest.pop(chunk.digest, None)
+                self.stats.chunks_alive -= 1
+                self.stats.physical_bytes -= len(chunk.data)
+                del self._chunks[cid]
+
+    def refs(self, cid: int) -> int:
+        with self._lock:
+            return self._chunks[cid].refs
+
+    def __contains__(self, cid: int) -> bool:
+        with self._lock:
+            return cid in self._chunks
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._chunks)
+
+    # ------------------------------------------------------- tensor helpers
+    def put_array(self, arr: np.ndarray) -> tuple[int, ...]:
+        """Chunk a host array's byte view; returns the chunk-id tuple."""
+        raw = np.ascontiguousarray(arr).tobytes()
+        return self.put_bytes(raw)
+
+    def put_bytes(self, raw: bytes) -> tuple[int, ...]:
+        cb = self.chunk_bytes
+        ids = []
+        for off in range(0, max(len(raw), 1), cb):
+            piece = raw[off : off + cb]
+            ids.append(self.put(piece))
+        return tuple(ids)
+
+    def get_bytes(self, ids: tuple[int, ...]) -> bytes:
+        return b"".join(self.get(cid) for cid in ids)
+
+    def get_array(
+        self, ids: tuple[int, ...], shape: tuple[int, ...], dtype: np.dtype
+    ) -> np.ndarray:
+        raw = self.get_bytes(ids)
+        flat = np.frombuffer(raw, dtype=dtype)
+        return flat.reshape(shape).copy()

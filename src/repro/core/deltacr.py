@@ -1,0 +1,431 @@
+"""DeltaCR — template-fork fast path + async delta dumps for session state.
+
+The ephemeral dimension of a DeltaBox sandbox.  On TPU the "process memory"
+is the live agent-session state: paged KV cache, recurrent SSM state, decode
+cursors, RNG keys, environment buffers.  DeltaCR manages it with the paper's
+two co-designed paths:
+
+* **Template pool (fast path).**  At every checkpoint the session is *forked*
+  at a quiesce point — for immutable JAX arrays this is aliasing; for the
+  paged KV pool it is a page-table copy plus refcount bumps (the page-table-
+  only ``fork()`` analogue, no data movement).  The frozen fork is registered
+  as that checkpoint's template.  Restore = fork the template again: O(state
+  metadata), independent of memory footprint.  A bounded pool evicts LRU
+  templates (releasing their page references); eviction costs only latency,
+  never correctness.
+
+* **Async dump (durable slow path).**  Concurrently, the template's payload
+  is serialized to the chunk store on a single-worker background thread (the
+  CRIU-dump-to-tmpfs analogue), *delta-encoded* against the parent
+  checkpoint's image: unchanged chunks are re-referenced, so dump bytes are
+  proportional to the inter-checkpoint delta.  The dump is masked by the LLM
+  inference window — the caller never blocks on it.
+
+* **Async-warm.**  After a fork, ``warm()`` runs on a background thread to
+  pre-privatize the pages the session will write next (the CoW-fault
+  absorption thread of §4.2.2).
+
+States plug in through the :class:`ForkableState` protocol; ``CowArrayState``
+is the host-side reference implementation and ``serve.kvcache.KVCacheState``
+the device-side one.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from .chunk_store import ChunkStore
+from .deltafs import TensorMeta
+
+__all__ = [
+    "ForkableState",
+    "CowArrayState",
+    "DumpImage",
+    "DeltaCR",
+    "DeltaCRStats",
+]
+
+
+# --------------------------------------------------------------------------
+# ForkableState protocol + host reference implementation
+# --------------------------------------------------------------------------
+@runtime_checkable
+class ForkableState(Protocol):
+    """The contract DeltaCR needs from a session state."""
+
+    def fork(self) -> "ForkableState":
+        """O(metadata) copy-on-write clone observing the same instant."""
+
+    def release(self) -> None:
+        """Drop this clone's references (template eviction / session kill)."""
+
+    def warm(self) -> None:
+        """Pre-privatize the hot write set (async-warm); optional no-op."""
+
+    def dump_payload(self) -> Dict[str, np.ndarray]:
+        """Flat name→host-array payload capturing the full state."""
+
+
+class CowArrayState:
+    """Host-side ForkableState over a dict of numpy arrays.
+
+    Fork shares every array by reference (refcounted); the first write to a
+    shared array copies it (the CoW fault).  ``warm`` pre-copies arrays in
+    the declared hot set so later writes find them private — the async-warm
+    analogue.  Used for RL environment state and as the benchmark archetype
+    substrate.
+    """
+
+    def __init__(
+        self,
+        arrays: Optional[Dict[str, np.ndarray]] = None,
+        *,
+        hot_keys: Tuple[str, ...] = (),
+        restore_hook: Optional[Callable[["CowArrayState"], None]] = None,
+    ):
+        self._arrays: Dict[str, np.ndarray] = dict(arrays or {})
+        self._shared: Dict[str, "_SharedCell"] = {
+            k: _SharedCell(refs=1) for k in self._arrays
+        }
+        self.hot_keys = tuple(hot_keys)
+        self.restore_hook = restore_hook
+        self.cow_faults = 0           # inline (critical-path) CoW copies
+        self.warmed_copies = 0        # copies absorbed by async-warm
+        self._released = False
+
+    # -- reads ---------------------------------------------------------
+    def get(self, key: str) -> np.ndarray:
+        return self._arrays[key]
+
+    def keys(self):
+        return self._arrays.keys()
+
+    # -- writes (CoW) ----------------------------------------------------
+    def _privatize(self, key: str, *, warm: bool = False) -> None:
+        cell = self._shared[key]
+        with cell.lock:
+            if cell.refs > 1:
+                cell.refs -= 1
+                self._arrays[key] = self._arrays[key].copy()
+                self._shared[key] = _SharedCell(refs=1)
+                if warm:
+                    self.warmed_copies += 1
+                else:
+                    self.cow_faults += 1
+
+    def set(self, key: str, value: np.ndarray) -> None:
+        if key in self._arrays:
+            self._privatize(key)
+            self._arrays[key] = np.asarray(value)
+        else:
+            self._arrays[key] = np.asarray(value)
+            self._shared[key] = _SharedCell(refs=1)
+
+    def mutate(self, key: str, fn: Callable[[np.ndarray], None]) -> None:
+        """In-place mutation with a CoW fault if the array is shared."""
+        self._privatize(key)
+        fn(self._arrays[key])
+
+    # -- ForkableState ---------------------------------------------------
+    def fork(self) -> "CowArrayState":
+        clone = CowArrayState.__new__(CowArrayState)
+        clone._arrays = dict(self._arrays)
+        clone._shared = dict(self._shared)
+        for key, cell in self._shared.items():
+            with cell.lock:
+                cell.refs += 1
+        clone.hot_keys = self.hot_keys
+        clone.restore_hook = self.restore_hook
+        clone.cow_faults = 0
+        clone.warmed_copies = 0
+        clone._released = False
+        return clone
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        for key, cell in self._shared.items():
+            with cell.lock:
+                cell.refs -= 1
+        self._arrays.clear()
+        self._shared.clear()
+
+    def warm(self) -> None:
+        for key in self.hot_keys:
+            if key in self._arrays:
+                self._privatize(key, warm=True)
+
+    def dump_payload(self) -> Dict[str, np.ndarray]:
+        return {k: np.ascontiguousarray(v) for k, v in self._arrays.items()}
+
+    # -- footprint accounting (Table 3 analogue) -------------------------
+    def resident_bytes(self) -> int:
+        """Bytes attributable to this clone: private arrays + shared/refs."""
+        total = 0.0
+        for key, cell in self._shared.items():
+            total += self._arrays[key].nbytes / max(cell.refs, 1)
+        return int(total)
+
+
+@dataclass
+class _SharedCell:
+    refs: int
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+# --------------------------------------------------------------------------
+# Dump images (the CRIU-image analogue)
+# --------------------------------------------------------------------------
+@dataclass
+class DumpImage:
+    """A durable, delta-encoded state image in the chunk store.
+
+    Self-contained: holds a full chunk map per tensor with unchanged chunks
+    *shared* with the parent image (so restore never walks an image chain,
+    while storage stays proportional to the delta)."""
+
+    image_id: int
+    parent_id: Optional[int]
+    entries: Dict[str, TensorMeta]
+    dirtied_chunks: int
+    dump_bytes: int          # physical bytes this image added
+    wall_ms: float
+
+
+class DeltaCRStats:
+    def __init__(self) -> None:
+        self.dumps = 0
+        self.dump_dirty_chunks = 0
+        self.dump_bytes = 0
+        self.fast_restores = 0
+        self.slow_restores = 0
+        self.evictions = 0
+        self.lock = threading.Lock()
+
+
+# --------------------------------------------------------------------------
+# DeltaCR
+# --------------------------------------------------------------------------
+class DeltaCR:
+    """Coordinates the template pool and async delta dumps for one sandbox."""
+
+    def __init__(
+        self,
+        store: Optional[ChunkStore] = None,
+        *,
+        template_pool_size: int = 8,
+        restore_fn: Optional[Callable[[Dict[str, np.ndarray]], ForkableState]] = None,
+        async_warm: bool = True,
+        chunk_bytes: int = 64 * 1024,
+    ):
+        self.store = store or ChunkStore(chunk_bytes=chunk_bytes)
+        self.template_pool_size = int(template_pool_size)
+        self.restore_fn = restore_fn
+        self.async_warm = async_warm
+        # Single-worker pool, like the paper's GSD dump thread.
+        self._dump_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-dump")
+        self._warm_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-warm")
+        self._templates: "OrderedDict[int, ForkableState]" = OrderedDict()
+        self._images: Dict[int, Future] = {}        # ckpt_id -> Future[DumpImage]
+        self._image_by_id: Dict[int, DumpImage] = {}
+        self._parents: Dict[int, Optional[int]] = {}
+        self._lock = threading.RLock()
+        self._next_image_id = 1
+        self.stats = DeltaCRStats()
+
+    # ---------------------------------------------------------- checkpoint
+    def checkpoint(
+        self,
+        state: ForkableState,
+        ckpt_id: int,
+        parent_ckpt: Optional[int] = None,
+        *,
+        dump: bool = True,
+    ) -> None:
+        """Fork a template at the quiesce point and submit the async dump.
+
+        Synchronous work is the fork only (the paper's ~9 ms stash fork);
+        serialization runs on the background worker, masked by inference.
+        """
+        template = state.fork()
+        with self._lock:
+            if dump:
+                # The dump holds its *own* fork: LRU eviction may release the
+                # pool template before the background dump runs, and a dump
+                # source must survive until serialization completes.
+                dump_src = template.fork()
+                # The parent image is resolved *inside* the worker: the dump
+                # queue is single-worker FIFO, so the parent dump has always
+                # completed by the time this task runs (never blocks).
+                parent_fut = self._images.get(parent_ckpt) if parent_ckpt is not None else None
+                fut = self._dump_executor.submit(self._do_dump, dump_src, parent_fut)
+                self._images[ckpt_id] = fut
+            self._admit_template(ckpt_id, template)
+            self._parents[ckpt_id] = parent_ckpt
+
+    def _admit_template(self, ckpt_id: int, template: ForkableState) -> None:
+        self._templates[ckpt_id] = template
+        self._templates.move_to_end(ckpt_id)
+        while len(self._templates) > self.template_pool_size:
+            evict_id, evicted = self._templates.popitem(last=False)  # LRU
+            evicted.release()
+            with self.stats.lock:
+                self.stats.evictions += 1
+
+    def _do_dump(self, dump_src: ForkableState, parent_fut: Optional[Future]) -> DumpImage:
+        parent: Optional[DumpImage] = None
+        if parent_fut is not None:
+            try:
+                parent = parent_fut.result(timeout=60.0)  # FIFO: already done
+            except Exception:
+                parent = None  # parent dump failed: fall back to a full image
+        t0 = time.perf_counter()
+        try:
+            payload = dump_src.dump_payload()
+        finally:
+            dump_src.release()
+        entries: Dict[str, TensorMeta] = {}
+        dirtied = 0
+        bytes_before = self.store.stats.bytes_written
+        cb = self.store.chunk_bytes
+        for name, arr in payload.items():
+            arr = np.ascontiguousarray(arr)
+            raw = arr.tobytes()
+            prev_ids: Tuple[int, ...] = ()
+            if parent is not None:
+                pm = parent.entries.get(name)
+                if pm is not None and pm.shape == tuple(arr.shape) and pm.dtype == str(arr.dtype):
+                    prev_ids = pm.chunk_ids
+            ids = []
+            for idx, off in enumerate(range(0, max(len(raw), 1), cb)):
+                piece = raw[off : off + cb]
+                if idx < len(prev_ids) and self.store.get(prev_ids[idx]) == piece:
+                    self.store.incref(prev_ids[idx])
+                    ids.append(prev_ids[idx])
+                else:
+                    ids.append(self.store.put(piece))
+                    dirtied += 1
+            entries[name] = TensorMeta(tuple(arr.shape), str(arr.dtype), tuple(ids))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            image_id = self._next_image_id
+            self._next_image_id += 1
+        image = DumpImage(
+            image_id=image_id,
+            parent_id=parent.image_id if parent else None,
+            entries=entries,
+            dirtied_chunks=dirtied,
+            dump_bytes=self.store.stats.bytes_written - bytes_before,
+            wall_ms=wall_ms,
+        )
+        with self._lock:
+            self._image_by_id[image_id] = image
+        with self.stats.lock:
+            self.stats.dumps += 1
+            self.stats.dump_dirty_chunks += dirtied
+            self.stats.dump_bytes += image.dump_bytes
+        return image
+
+    # -------------------------------------------------------------- restore
+    def has_template(self, ckpt_id: int) -> bool:
+        with self._lock:
+            return ckpt_id in self._templates
+
+    def restore(self, ckpt_id: int) -> Tuple[ForkableState, str]:
+        """Return a fresh session state for ``ckpt_id``.
+
+        Fast path: fork the live template (O(metadata)).  Slow path: rebuild
+        from the dump image, then re-inject the rebuilt state as a template
+        so future restores of this node take the fast path.
+        """
+        with self._lock:
+            template = self._templates.get(ckpt_id)
+            if template is not None:
+                self._templates.move_to_end(ckpt_id)  # LRU touch
+                new_state = template.fork()
+                with self.stats.lock:
+                    self.stats.fast_restores += 1
+                if self.async_warm:
+                    self._warm_executor.submit(self._safe_warm, new_state)
+                return new_state, "fast"
+            fut = self._images.get(ckpt_id)
+        if fut is None:
+            raise KeyError(f"checkpoint {ckpt_id}: no template and no dump image")
+        image = fut.result()  # may wait for the background dump to land
+        if self.restore_fn is None:
+            raise RuntimeError("slow-path restore requires restore_fn")
+        payload = {
+            name: self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
+            for name, meta in image.entries.items()
+        }
+        rebuilt = self.restore_fn(payload)
+        with self._lock:
+            # Re-inject as template (paper: restored process is frozen and
+            # returned to the pool).
+            self._admit_template(ckpt_id, rebuilt.fork())
+        with self.stats.lock:
+            self.stats.slow_restores += 1
+        new_state = rebuilt
+        if self.async_warm:
+            self._warm_executor.submit(self._safe_warm, new_state)
+        return new_state, "slow"
+
+    @staticmethod
+    def _safe_warm(state: ForkableState) -> None:
+        try:
+            state.warm()
+        except Exception:
+            pass  # warm is best-effort; plain CoW remains correct
+
+    # --------------------------------------------------------------- admin
+    def dump_future(self, ckpt_id: int) -> Optional[Future]:
+        with self._lock:
+            return self._images.get(ckpt_id)
+
+    def wait_dumps(self, timeout: Optional[float] = None) -> None:
+        with self._lock:
+            futs = list(self._images.values())
+        for fut in futs:
+            fut.result(timeout=timeout)
+
+    def evict_template(self, ckpt_id: int) -> bool:
+        with self._lock:
+            template = self._templates.pop(ckpt_id, None)
+        if template is None:
+            return False
+        template.release()
+        with self.stats.lock:
+            self.stats.evictions += 1
+        return True
+
+    def drop_checkpoint(self, ckpt_id: int) -> None:
+        """Reclaim all storage for a checkpoint (GC of unreachable nodes)."""
+        self.evict_template(ckpt_id)
+        with self._lock:
+            fut = self._images.pop(ckpt_id, None)
+            self._parents.pop(ckpt_id, None)
+        if fut is not None:
+            try:
+                image = fut.result(timeout=60.0)
+            except Exception:
+                return
+            for meta in image.entries.values():
+                for cid in meta.chunk_ids:
+                    self.store.decref(cid)
+            with self._lock:
+                self._image_by_id.pop(image.image_id, None)
+
+    def template_count(self) -> int:
+        with self._lock:
+            return len(self._templates)
+
+    def shutdown(self) -> None:
+        self._dump_executor.shutdown(wait=True)
+        self._warm_executor.shutdown(wait=True)

@@ -1,0 +1,280 @@
+"""DeltaFS — runtime-reconfigurable overlay layers over a tensor namespace.
+
+The durable dimension of a DeltaBox sandbox.  A ``DeltaFS`` instance manages
+a *namespace* of named host tensors ("files") resolved through a stack of
+immutable delta layers plus one writable upper layer:
+
+* ``write``     — whole-tensor copy-up into the upper layer, with every chunk
+                  the write did not change *re-referenced* from the parent
+                  generation (the reflink extent-map-preservation analogue):
+                  physical write amplification is O(dirtied chunks).
+* ``checkpoint`` — freeze the upper layer, splice it as the topmost lower and
+                  install a fresh upper.  O(1) metadata; no data copied.
+* ``switch``    — replace the layer stack with any previously frozen
+                  configuration (rollback / restore).  O(1).
+* ``checkpoint_gen`` — per-filesystem generation counter.  Read resolutions
+                  are cached per key tagged with the generation at which they
+                  were resolved; a gen mismatch lazily re-resolves against the
+                  new stack (the paper's lazy switch for open files, §4.1.1).
+
+Layers and the chunks they reference are refcounted; releasing a frozen
+configuration (GC) frees exactly the chunks no surviving generation shares.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from .chunk_store import ChunkStore
+
+__all__ = ["DeltaFS", "LayerConfig", "TensorMeta"]
+
+LayerConfig = Tuple[int, ...]  # bottom-to-top tuple of frozen layer ids
+
+
+@dataclass(frozen=True)
+class TensorMeta:
+    shape: Tuple[int, ...]
+    dtype: str
+    chunk_ids: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * int(np.prod(self.shape, dtype=np.int64)))
+
+
+@dataclass
+class _Layer:
+    layer_id: int
+    frozen: bool = False
+    refs: int = 0                       # held by live stack + retained configs
+    entries: Dict[str, TensorMeta] = field(default_factory=dict)
+    tombstones: set = field(default_factory=set)
+
+
+class DeltaFS:
+    """Layered copy-on-write tensor filesystem with O(1) checkpoint/rollback."""
+
+    def __init__(self, store: Optional[ChunkStore] = None, *, chunk_bytes: int = 64 * 1024):
+        self.store = store or ChunkStore(chunk_bytes=chunk_bytes)
+        self._lock = threading.RLock()
+        self._layers: Dict[int, _Layer] = {}
+        self._next_layer_id = 1
+        self._stack: list[int] = []      # bottom-to-top; last element is the writable upper
+        self.checkpoint_gen = 0
+        # key -> (generation, layer_id holding the topmost entry, is_tombstone)
+        self._resolve_cache: Dict[str, Tuple[int, int, bool]] = {}
+        self.lazy_reresolves = 0         # slow-path count (gen mismatch), for tests/benches
+        self._push_fresh_upper()
+
+    # ----------------------------------------------------------- layer mgmt
+    def _new_layer(self) -> _Layer:
+        layer = _Layer(layer_id=self._next_layer_id)
+        self._next_layer_id += 1
+        self._layers[layer.layer_id] = layer
+        return layer
+
+    def _push_fresh_upper(self) -> None:
+        layer = self._new_layer()
+        layer.refs += 1  # held by the live stack
+        self._stack.append(layer.layer_id)
+
+    def _release_layer(self, layer_id: int) -> None:
+        layer = self._layers[layer_id]
+        layer.refs -= 1
+        if layer.refs == 0:
+            for meta in layer.entries.values():
+                for cid in meta.chunk_ids:
+                    self.store.decref(cid)
+            del self._layers[layer_id]
+
+    @property
+    def upper_id(self) -> int:
+        return self._stack[-1]
+
+    @property
+    def stack(self) -> LayerConfig:
+        with self._lock:
+            return tuple(self._stack)
+
+    # -------------------------------------------------------------- resolve
+    def _resolve(self, key: str) -> Optional[TensorMeta]:
+        """Topmost-entry resolution with generation-tagged caching."""
+        cached = self._resolve_cache.get(key)
+        if cached is not None:
+            gen, layer_id, dead = cached
+            if gen == self.checkpoint_gen:  # fast path: same generation
+                if dead:
+                    return None
+                layer = self._layers.get(layer_id)
+                if layer is not None:
+                    entry = layer.entries.get(key)
+                    if entry is not None:
+                        return entry
+            else:
+                self.lazy_reresolves += 1   # slow path: stale gen, re-resolve
+        for layer_id in reversed(self._stack):
+            layer = self._layers[layer_id]
+            if key in layer.tombstones:
+                self._resolve_cache[key] = (self.checkpoint_gen, layer_id, True)
+                return None
+            meta = layer.entries.get(key)
+            if meta is not None:
+                self._resolve_cache[key] = (self.checkpoint_gen, layer_id, False)
+                return meta
+        self._resolve_cache[key] = (self.checkpoint_gen, -1, True)
+        return None
+
+    # ------------------------------------------------------------------ api
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return self._resolve(key) is not None
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            seen: Dict[str, bool] = {}
+            for layer_id in reversed(self._stack):
+                layer = self._layers[layer_id]
+                for k in layer.tombstones:
+                    seen.setdefault(k, False)
+                for k in layer.entries:
+                    seen.setdefault(k, True)
+            return sorted(k for k, alive in seen.items() if alive)
+
+    def read(self, key: str) -> np.ndarray:
+        with self._lock:
+            meta = self._resolve(key)
+            if meta is None:
+                raise KeyError(key)
+            return self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
+
+    def read_meta(self, key: str) -> TensorMeta:
+        with self._lock:
+            meta = self._resolve(key)
+            if meta is None:
+                raise KeyError(key)
+            return meta
+
+    def write(self, key: str, value: np.ndarray) -> int:
+        """Copy-up ``value`` into the upper layer.
+
+        Returns the number of *physical* chunks written (the dirtied-block
+        count); unchanged chunks are shared with the previous generation.
+        """
+        value = np.ascontiguousarray(value)
+        with self._lock:
+            prev = self._resolve(key)
+            raw = value.tobytes()
+            cb = self.store.chunk_bytes
+            prev_ids: Tuple[int, ...] = ()
+            prev_raw: Optional[bytes] = None
+            if (
+                prev is not None
+                and prev.shape == value.shape
+                and prev.dtype == str(value.dtype)
+            ):
+                prev_ids = prev.chunk_ids
+            new_ids = []
+            dirtied = 0
+            for idx, off in enumerate(range(0, max(len(raw), 1), cb)):
+                piece = raw[off : off + cb]
+                if idx < len(prev_ids):
+                    old = self.store.get(prev_ids[idx])
+                    if old == piece:
+                        self.store.incref(prev_ids[idx])
+                        new_ids.append(prev_ids[idx])
+                        continue
+                new_ids.append(self.store.put(piece))
+                dirtied += 1
+            upper = self._layers[self.upper_id]
+            old_entry = upper.entries.get(key)
+            if old_entry is not None:  # second write to same key in this generation
+                for cid in old_entry.chunk_ids:
+                    self.store.decref(cid)
+            upper.entries[key] = TensorMeta(
+                shape=tuple(value.shape), dtype=str(value.dtype), chunk_ids=tuple(new_ids)
+            )
+            upper.tombstones.discard(key)
+            self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, False)
+            return dirtied
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            if self._resolve(key) is None:
+                raise KeyError(key)
+            upper = self._layers[self.upper_id]
+            entry = upper.entries.pop(key, None)
+            if entry is not None:
+                for cid in entry.chunk_ids:
+                    self.store.decref(cid)
+            upper.tombstones.add(key)
+            self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, True)
+
+    # ------------------------------------------------------- checkpointing
+    def checkpoint(self) -> LayerConfig:
+        """Freeze the upper layer and install a fresh one.  O(1) metadata.
+
+        Returns the frozen layer configuration (bottom-to-top), with one
+        reference retained on every layer in it on behalf of the caller.
+        """
+        with self._lock:
+            upper = self._layers[self.upper_id]
+            upper.frozen = True
+            config = tuple(self._stack)
+            for layer_id in config:       # caller's retained reference
+                self._layers[layer_id].refs += 1
+            self._push_fresh_upper()
+            self.checkpoint_gen += 1
+            return config
+
+    def switch(self, config: LayerConfig) -> None:
+        """Atomically replace the layer stack with ``config`` + fresh upper.
+
+        The rollback primitive: O(1) in data, O(stack depth) in metadata.
+        The abandoned (possibly dirty) upper layer is released.
+        """
+        with self._lock:
+            for layer_id in config:
+                layer = self._layers.get(layer_id)
+                if layer is None or not layer.frozen:
+                    raise ValueError(f"layer {layer_id} is not a frozen live layer")
+            old_stack = list(self._stack)
+            for layer_id in config:       # new stack references
+                self._layers[layer_id].refs += 1
+            self._stack = list(config)
+            self._push_fresh_upper()
+            for layer_id in old_stack:    # drop old stack references
+                self._release_layer(layer_id)
+            self.checkpoint_gen += 1
+
+    def retain_config(self, config: LayerConfig) -> None:
+        with self._lock:
+            for layer_id in config:
+                self._layers[layer_id].refs += 1
+
+    def release_config(self, config: LayerConfig) -> None:
+        with self._lock:
+            for layer_id in config:
+                self._release_layer(layer_id)
+
+    # ------------------------------------------------------------- helpers
+    def write_pytree(self, prefix: str, tree: Dict[str, np.ndarray]) -> int:
+        dirtied = 0
+        for name, arr in tree.items():
+            dirtied += self.write(f"{prefix}/{name}", arr)
+        return dirtied
+
+    def layer_count(self) -> int:
+        with self._lock:
+            return len(self._layers)
+
+    def debug_validate(self) -> None:
+        """Invariant check used by property tests: every referenced chunk is alive."""
+        with self._lock:
+            for layer in self._layers.values():
+                for meta in layer.entries.values():
+                    for cid in meta.chunk_ids:
+                        assert cid in self.store, f"dangling chunk {cid}"

@@ -1,0 +1,77 @@
+"""Reachability-aware snapshot garbage collection (paper §4.2.1, §6.3.4).
+
+Template eviction is latency-only (the LRU pool inside DeltaCR handles it);
+reclaiming *snapshot storage* must respect the search: evicting a dormant
+node's image while UCT still holds its Q/visit statistics induces a
+restore-fail re-selection loop.  The reachability rule keeps
+
+  * every node UCT may still select: non-terminal AND with remaining
+    expansion budget (``expandable``),
+  * terminal candidates retained for the final discriminator,
+  * every ancestor of a kept node (LW markers replay through their parents;
+    the index tree must stay connected),
+  * the node the sandbox currently descends from,
+
+and reclaims the rest — safe by construction: only nodes the search itself
+has declared unreachable are dropped.  Non-tree search (Best-of-N), where
+nodes are never re-selected, uses plain recency.
+"""
+from __future__ import annotations
+
+from typing import List, Set
+
+from .state_manager import StateManager
+
+__all__ = ["reachability_gc", "recency_gc"]
+
+
+def reachability_gc(
+    sm: StateManager,
+    *,
+    keep_terminal_candidates: bool = True,
+) -> List[int]:
+    """Run one GC pass; returns the list of reclaimed ckpt ids."""
+    keep: Set[int] = set()
+    for node in sm.live_nodes():
+        selectable = (not node.terminal) and node.expandable
+        terminal_candidate = keep_terminal_candidates and node.terminal
+        if selectable or terminal_candidate:
+            keep.add(node.ckpt_id)
+    if sm.current is not None:
+        keep.add(sm.current)
+    closed = _close_over_replay_chains(sm, keep)
+    reclaimed = []
+    for node in sm.live_nodes():
+        if node.ckpt_id not in closed:
+            sm.reclaim(node.ckpt_id)
+            reclaimed.append(node.ckpt_id)
+    return reclaimed
+
+
+def _close_over_replay_chains(sm: StateManager, keep: Set[int]) -> Set[int]:
+    """Full checkpoints are self-contained (delta images carry a complete
+    chunk map); only *lightweight* markers need their replay chain up to the
+    nearest full ancestor."""
+    closed: Set[int] = set()
+    for ckpt_id in keep:
+        walk = ckpt_id
+        while walk is not None and walk not in closed:
+            closed.add(walk)
+            node = sm.nodes[walk]
+            walk = node.parent_id if node.lightweight else None
+    return closed
+
+
+def recency_gc(sm: StateManager, *, keep_last: int = 8) -> List[int]:
+    """Plain recency policy for non-tree (Best-of-N style) search."""
+    live = sorted(sm.live_nodes(), key=lambda n: n.created_at, reverse=True)
+    protected = {n.ckpt_id for n in live[:keep_last]}
+    if sm.current is not None:
+        protected.add(sm.current)
+    closed = _close_over_replay_chains(sm, protected)
+    reclaimed = []
+    for node in live[keep_last:]:
+        if node.ckpt_id not in closed:
+            sm.reclaim(node.ckpt_id)
+            reclaimed.append(node.ckpt_id)
+    return reclaimed

@@ -1,0 +1,122 @@
+"""Disk persistence for DeltaFS checkpoint stores.
+
+The in-memory chunk store is the paper's tmpfs; real restarts need the
+durable tier.  ``save_store`` writes the chunks + layer metadata of a set of
+retained configurations as a single ``.npz`` (chunks concatenated, offsets
+indexed), preserving structural sharing on disk: a chunk referenced by ten
+generations is written once.  ``load_store`` rebuilds a DeltaFS with the
+same layer configs (fresh ids, mapping returned).
+
+Used by the Trainer for cross-process restart
+(``Trainer.save_checkpoints`` / ``Trainer.load_checkpoints``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .chunk_store import ChunkStore
+from .deltafs import DeltaFS, LayerConfig, TensorMeta
+
+__all__ = ["save_store", "load_store"]
+
+_FORMAT_VERSION = 1
+
+
+def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
+    """Persist the layers reachable from ``configs`` (+ their chunks).
+
+    Returns the number of unique chunks written.  Structural sharing is
+    preserved: each live chunk id appears once in the blob.
+    """
+    layer_ids = sorted({lid for cfg in configs.values() for lid in cfg})
+    chunk_ids: List[int] = []
+    seen = set()
+    layers_meta = {}
+    for lid in layer_ids:
+        layer = fs._layers[lid]
+        entries = {}
+        for key, meta in layer.entries.items():
+            entries[key] = {
+                "shape": list(meta.shape),
+                "dtype": meta.dtype,
+                "chunk_ids": list(meta.chunk_ids),
+            }
+            for cid in meta.chunk_ids:
+                if cid not in seen:
+                    seen.add(cid)
+                    chunk_ids.append(cid)
+        layers_meta[str(lid)] = {
+            "entries": entries,
+            "tombstones": sorted(layer.tombstones),
+        }
+
+    blobs = [fs.store.get(cid) for cid in chunk_ids]
+    offsets = np.zeros((len(blobs) + 1,), np.int64)
+    for i, b in enumerate(blobs):
+        offsets[i + 1] = offsets[i] + len(b)
+    data = np.frombuffer(b"".join(blobs), np.uint8) if blobs else np.zeros(0, np.uint8)
+
+    manifest = {
+        "version": _FORMAT_VERSION,
+        "chunk_bytes": fs.store.chunk_bytes,
+        "chunk_ids": chunk_ids,
+        "layers": layers_meta,
+        "configs": {name: list(cfg) for name, cfg in configs.items()},
+    }
+    tmp = path + ".tmp"
+    np.savez_compressed(
+        tmp if tmp.endswith(".npz") else tmp,
+        data=data,
+        offsets=offsets,
+        manifest=np.frombuffer(json.dumps(manifest).encode(), np.uint8),
+    )
+    # numpy appends .npz; normalize then atomically replace
+    written = tmp if os.path.exists(tmp) else tmp + ".npz"
+    os.replace(written, path)
+    return len(chunk_ids)
+
+
+def load_store(path: str) -> Tuple[DeltaFS, Dict[str, LayerConfig]]:
+    """Rebuild a DeltaFS + named configs from ``save_store`` output."""
+    with np.load(path) as z:
+        manifest = json.loads(bytes(z["manifest"]).decode())
+        data = z["data"]
+        offsets = z["offsets"]
+    assert manifest["version"] == _FORMAT_VERSION
+    fs = DeltaFS(chunk_bytes=int(manifest["chunk_bytes"]))
+    # restore chunks (new ids)
+    cid_map: Dict[int, int] = {}
+    raw = data.tobytes()
+    for i, old_cid in enumerate(manifest["chunk_ids"]):
+        blob = raw[int(offsets[i]) : int(offsets[i + 1])]
+        cid_map[int(old_cid)] = fs.store.put(blob)
+    # rebuild layers bottom-up in id order, as frozen lowers
+    lid_map: Dict[int, int] = {}
+    for old_lid_s, meta in sorted(manifest["layers"].items(), key=lambda kv: int(kv[0])):
+        layer = fs._new_layer()
+        layer.frozen = True
+        for key, ent in meta["entries"].items():
+            ids = []
+            for old_cid in ent["chunk_ids"]:
+                new_cid = cid_map[int(old_cid)]
+                fs.store.incref(new_cid)
+                ids.append(new_cid)
+            layer.entries[key] = TensorMeta(
+                shape=tuple(ent["shape"]), dtype=ent["dtype"], chunk_ids=tuple(ids)
+            )
+        layer.tombstones.update(meta["tombstones"])
+        lid_map[int(old_lid_s)] = layer.layer_id
+    # initial put() refs balance the first incref per chunk
+    for old_cid, new_cid in cid_map.items():
+        fs.store.decref(new_cid)
+    configs = {
+        name: tuple(lid_map[int(l)] for l in cfg)
+        for name, cfg in manifest["configs"].items()
+    }
+    for cfg in configs.values():
+        fs.retain_config(cfg)
+    return fs, configs

@@ -1,0 +1,287 @@
+"""StateManager — coupled (durable, ephemeral) checkpoint/restore protocol.
+
+Enforces the paper's invariant: *every saved state is a consistent
+(filesystem, memory) pair*, here a consistent (DeltaFS namespace, session
+state) pair observed at the same dispatch-quiesce point.
+
+Responsibilities (paper §3.2, §3.3, §4.3):
+
+* ``checkpoint()`` — atomically: freeze+insert the DeltaFS upper layer
+  (synchronous, O(1)) and fork a DeltaCR template + submit the async dump.
+  Both observe the sandbox between committed steps.  On dump-submission
+  failure the DeltaFS switch is rolled back (no half-states).
+* ``restore()`` — kill the current session, switch the DeltaFS stack to the
+  target's layer config *before* the new session state is produced, then
+  template-fork (fast) or image-rebuild (slow).
+* **Snapshot index tree** isomorphic to the search tree: each node records
+  {ckpt id, parent, layer config, dump future, template liveness, UCT stats}.
+* **Lightweight checkpoints** for read-only actions: a metadata marker whose
+  restore replays the recorded actions on the parent's state (§6.3.3).
+* **Value-time test isolation**: pre-test checkpoint + unconditional restore
+  around side-effecting evaluations (§4.3).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .deltacr import DeltaCR, ForkableState
+from .deltafs import DeltaFS, LayerConfig
+from .npd import InferenceProxy
+
+__all__ = ["Sandbox", "SnapshotNode", "StateManager", "CheckpointError"]
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+@dataclass
+class SnapshotNode:
+    """One node of the snapshot index tree (isomorphic to the search tree)."""
+
+    ckpt_id: int
+    parent_id: Optional[int]
+    layer_config: Optional[LayerConfig]          # None for lightweight nodes
+    lightweight: bool = False
+    replay_actions: Tuple[Any, ...] = ()         # LW: actions to replay on parent
+    children: List[int] = field(default_factory=list)
+    # Search bookkeeping consumed by reachability-aware GC:
+    terminal: bool = False
+    expandable: bool = True
+    visits: int = 0
+    value: float = 0.0
+    reclaimed: bool = False
+    created_at: float = field(default_factory=time.monotonic)
+
+
+class Sandbox:
+    """A rollbackable sandbox: DeltaFS namespace + forkable session state.
+
+    The agent "worker" lives inside: callers act on the sandbox through
+    ``fs`` (durable tensors) and ``proc`` (live session state), and the
+    StateManager C/R-protects every step.
+    """
+
+    def __init__(
+        self,
+        fs: DeltaFS,
+        proc: ForkableState,
+        *,
+        proxy: Optional[InferenceProxy] = None,
+        sandbox_id: int = 0,
+    ):
+        self.fs = fs
+        self.proc = proc
+        self.proxy = proxy
+        self.sandbox_id = sandbox_id
+
+    def quiesced(self) -> bool:
+        return self.proxy is None or self.proxy.quiesced()
+
+
+class StateManager:
+    """Host-side Sandbox Controller + guest-side execution, in one process.
+
+    The split in the paper (Controller over vsock → GSD) is preserved as an
+    API boundary: everything under ``_guest_*`` is what a GSD would execute
+    locally inside the VM/device island.
+    """
+
+    def __init__(
+        self,
+        sandbox: Sandbox,
+        deltacr: DeltaCR,
+        *,
+        require_quiesce: bool = True,
+        fail_dump_for_test: Optional[Callable[[int], bool]] = None,
+    ):
+        self.sandbox = sandbox
+        self.deltacr = deltacr
+        self.require_quiesce = require_quiesce
+        self._fail_dump_for_test = fail_dump_for_test
+        self.nodes: Dict[int, SnapshotNode] = {}
+        self._next_ckpt = 1
+        self._current: Optional[int] = None      # checkpoint the session descends from
+        self._lock = threading.RLock()
+        # replay-from for LW restore: ckpt_id -> action applier
+        self.action_applier: Optional[Callable[[Sandbox, Any], None]] = None
+        self.restore_count = 0
+        self.checkpoint_count = 0
+
+    # ------------------------------------------------------------ tree api
+    @property
+    def current(self) -> Optional[int]:
+        return self._current
+
+    def node(self, ckpt_id: int) -> SnapshotNode:
+        return self.nodes[ckpt_id]
+
+    def root(self) -> Optional[SnapshotNode]:
+        for node in self.nodes.values():
+            if node.parent_id is None:
+                return node
+        return None
+
+    # ---------------------------------------------------------- checkpoint
+    def checkpoint(
+        self,
+        *,
+        lightweight: bool = False,
+        actions: Tuple[Any, ...] = (),
+        dump: bool = True,
+    ) -> int:
+        """Take a coupled checkpoint of the sandbox; returns the ckpt id.
+
+        Blocking work: DeltaFS layer freeze+insert + template fork (both
+        O(metadata)).  The durable dump runs asynchronously, masked by the
+        inference window.
+        """
+        with self._lock:
+            if self.require_quiesce and not self.sandbox.quiesced():
+                raise CheckpointError("sandbox not quiesced: in-flight dispatch")
+            ckpt_id = self._next_ckpt
+            self._next_ckpt += 1
+            parent = self._current
+
+            if lightweight:
+                # §6.3.3: read-only/idempotent step — metadata marker only.
+                node = SnapshotNode(
+                    ckpt_id=ckpt_id,
+                    parent_id=parent,
+                    layer_config=None,
+                    lightweight=True,
+                    replay_actions=tuple(actions),
+                )
+                self.nodes[ckpt_id] = node
+                if parent is not None:
+                    self.nodes[parent].children.append(ckpt_id)
+                self._current = ckpt_id
+                self.checkpoint_count += 1
+                return ckpt_id
+
+            # 1. DeltaFS: synchronous freeze + fresh upper (the ioctl).
+            config = self.sandbox.fs.checkpoint()
+            try:
+                if self._fail_dump_for_test and self._fail_dump_for_test(ckpt_id):
+                    raise CheckpointError("injected dump failure")
+                # 2. DeltaCR: template fork + async dump submission.
+                self.deltacr.checkpoint(
+                    self.sandbox.proc, ckpt_id, self._nearest_full(parent), dump=dump
+                )
+            except Exception as exc:
+                # §4.3 failure handling: roll the filesystem back so no
+                # inconsistent half-state is ever registered.
+                self.sandbox.fs.switch(config[:-1] if len(config) > 1 else config)
+                self.sandbox.fs.release_config(config)
+                raise CheckpointError(f"checkpoint {ckpt_id} aborted: {exc}") from exc
+
+            node = SnapshotNode(ckpt_id=ckpt_id, parent_id=parent, layer_config=config)
+            self.nodes[ckpt_id] = node
+            if parent is not None:
+                self.nodes[parent].children.append(ckpt_id)
+            self._current = ckpt_id
+            self.checkpoint_count += 1
+            return ckpt_id
+
+    def _nearest_full(self, ckpt_id: Optional[int]) -> Optional[int]:
+        """Walk LW markers up to the nearest full checkpoint."""
+        while ckpt_id is not None and self.nodes[ckpt_id].lightweight:
+            ckpt_id = self.nodes[ckpt_id].parent_id
+        return ckpt_id
+
+    # -------------------------------------------------------------- restore
+    def restore(self, ckpt_id: int) -> str:
+        """Roll the sandbox back to ``ckpt_id``; returns 'fast'|'slow'|'replay'.
+
+        Order (§3.3): kill current session → switch DeltaFS stack → rebuild
+        session state → resume.  The new session never observes mismatched
+        files.
+        """
+        with self._lock:
+            node = self.nodes.get(ckpt_id)
+            if node is None or node.reclaimed:
+                raise KeyError(f"checkpoint {ckpt_id} unavailable (reclaimed or unknown)")
+
+            full = self._nearest_full(ckpt_id)
+            if full is None:
+                raise KeyError(f"checkpoint {ckpt_id} has no full ancestor")
+            full_node = self.nodes[full]
+            if full_node.reclaimed:
+                raise KeyError(f"checkpoint base {full} was reclaimed")
+
+            # 1. Kill the current agent session (SIGKILL analogue).
+            self.sandbox.proc.release()
+
+            # 2. DeltaFS switch to the target configuration.
+            assert full_node.layer_config is not None
+            self.sandbox.fs.switch(full_node.layer_config)
+
+            # 3. DeltaCR fast/slow path.
+            new_state, path = self.deltacr.restore(full)
+            self.sandbox.proc = new_state
+
+            # 4. LW replay: re-apply recorded read-only actions on top.
+            mode = path
+            if full != ckpt_id:
+                chain: List[SnapshotNode] = []
+                walk: Optional[int] = ckpt_id
+                while walk is not None and walk != full:
+                    chain.append(self.nodes[walk])
+                    walk = self.nodes[walk].parent_id
+                for lw in reversed(chain):
+                    for action in lw.replay_actions:
+                        if self.action_applier is None:
+                            raise CheckpointError("LW restore requires action_applier")
+                        self.action_applier(self.sandbox, action)
+                mode = f"{path}+replay"
+
+            self._current = ckpt_id
+            self.restore_count += 1
+            return mode
+
+    # ------------------------------------------------- value-time isolation
+    def isolated_eval(self, fn: Callable[[Sandbox], Any]) -> Any:
+        """Run a side-effecting evaluation, then unconditionally roll back.
+
+        The paper's value-time test isolation: pre-test checkpoint, run the
+        tests, read the observation, restore — mimicking a side-effect-free
+        execution for the search's value function.  The pre-test checkpoint
+        is *transient*: no durable dump, and it is removed from the snapshot
+        index after the restore so searches never select it.
+        """
+        pre = self.checkpoint(dump=False)
+        try:
+            return fn(self.sandbox)
+        finally:
+            self.restore(pre)
+            self._drop_transient(pre)
+
+    def _drop_transient(self, ckpt_id: int) -> None:
+        with self._lock:
+            node = self.nodes[ckpt_id]
+            assert not node.children, "transient checkpoint grew children"
+            self.reclaim(ckpt_id)
+            if node.parent_id is not None:
+                self.nodes[node.parent_id].children.remove(ckpt_id)
+            del self.nodes[ckpt_id]
+            if self._current == ckpt_id:
+                self._current = node.parent_id
+
+    # ------------------------------------------------------------------ gc
+    def reclaim(self, ckpt_id: int) -> None:
+        """Release a node's storage (template + dump + layer refs)."""
+        with self._lock:
+            node = self.nodes[ckpt_id]
+            if node.reclaimed:
+                return
+            node.reclaimed = True
+            if not node.lightweight:
+                self.deltacr.drop_checkpoint(ckpt_id)
+                if node.layer_config is not None:
+                    self.sandbox.fs.release_config(node.layer_config)
+
+    def live_nodes(self) -> List[SnapshotNode]:
+        return [n for n in self.nodes.values() if not n.reclaimed]

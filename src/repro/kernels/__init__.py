@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the C/R hot paths the paper optimizes.
+
+* ``paged_attention`` — decode attention through a CoW page table
+  (block-table indirection; what makes fork-shared KV pages readable in place).
+* ``page_copy`` — batched CoW page privatization (fault / async-warm path).
+* ``delta_diff`` / ``delta_apply`` — dirty-chunk detection and scatter-back
+  (the delta-dump and slow-restore paths).
+
+Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec), with the
+jit'd wrappers in ``ops.py`` and pure-jnp oracles in ``ref.py``.
+"""
+from . import ops, ref
+from .ops import delta_apply, delta_compact, delta_diff, delta_encode, page_copy, paged_attention
+
+__all__ = [
+    "ops",
+    "ref",
+    "delta_apply",
+    "delta_compact",
+    "delta_diff",
+    "delta_encode",
+    "page_copy",
+    "paged_attention",
+]

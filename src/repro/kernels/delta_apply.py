@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: scatter compacted dirty chunks into a base tensor.
+
+The slow-path restore: a dump image arrives as (compacted dirty chunks,
+chunk indices); this kernel scatters them into the parent-generation tensor
+in place (donated base).  Index rows with ``idx == -1`` are padding from the
+fixed-capacity compaction and must not write — the grid step visits a
+sacrificial block and skips the store, leaving the aliased base intact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["delta_apply"]
+
+
+def _delta_apply_kernel(idx_ref, data_ref, base_ref, out_ref):
+    del base_ref
+    j = pl.program_id(0)
+
+    @pl.when(idx_ref[j] >= 0)
+    def _():
+        out_ref[...] = data_ref[...]
+
+
+def delta_apply(
+    base: jax.Array,     # (N, C) — donated
+    data: jax.Array,     # (M, C)
+    idx: jax.Array,      # (M,) int32, -1 padding
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    N, C = base.shape
+    M = data.shape[0]
+
+    def _safe(i, idx_ref):
+        v = idx_ref[i]
+        return jnp.where(v >= 0, v, 0)
+
+    data_spec = pl.BlockSpec((1, C), lambda j, i: (j, 0))
+    base_spec = pl.BlockSpec((1, C), lambda j, i: (_safe(j, i), 0))
+    out_spec = pl.BlockSpec((1, C), lambda j, i: (_safe(j, i), 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[data_spec, base_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _delta_apply_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        input_output_aliases={2: 0},  # base (3rd operand incl. scalar) -> out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), data, base)

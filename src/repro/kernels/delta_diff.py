@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: blockwise dirty-chunk detection for delta dumps.
+
+The checkpoint-dump hot path: compare the current generation of a chunked
+tensor against its parent and emit a per-chunk dirty bitmap.  The dump then
+moves only dirty chunks device→host ("duplicate only the changes").  One
+grid step compares a (chunk_block × chunk_elems) tile in VMEM; the reduction
+runs at VREG width and the bitmap lands in a (N, 1) int32 column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["delta_diff"]
+
+
+def _delta_diff_kernel(old_ref, new_ref, dirty_ref):
+    neq = (old_ref[...] != new_ref[...]).astype(jnp.int32)
+    dirty_ref[...] = jnp.max(neq, axis=1, keepdims=True)
+
+
+def delta_diff(
+    old: jax.Array,     # (N, C)
+    new: jax.Array,     # (N, C)
+    *,
+    chunk_block: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-chunk dirty bitmap, (N,) bool."""
+    assert old.shape == new.shape and old.dtype == new.dtype
+    N, C = old.shape
+    block = min(chunk_block, N)
+    grid = (pl.cdiv(N, block),)
+    out = pl.pallas_call(
+        _delta_diff_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, C), lambda i: (i, 0)),
+            pl.BlockSpec((block, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        interpret=interpret,
+    )(old, new)
+    return out[:, 0].astype(jnp.bool_)

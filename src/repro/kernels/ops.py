@@ -1,0 +1,104 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+On TPU the Pallas kernels compile natively; everywhere else (this CPU
+container) they execute in ``interpret=True`` mode, which runs the kernel
+body in Python for bit-correct validation against ``ref.py``.  Set
+``REPRO_FORCE_REF=1`` to bypass Pallas entirely (pure-jnp fallback).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .delta_apply import delta_apply as _delta_apply_kernel
+from .delta_diff import delta_diff as _delta_diff_kernel
+from .page_copy import page_copy as _page_copy_kernel
+from .paged_attention import paged_attention as _paged_attention_kernel
+
+__all__ = [
+    "paged_attention",
+    "page_copy",
+    "delta_diff",
+    "delta_apply",
+    "delta_compact",
+    "use_interpret",
+]
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _paged_attention_jit(q, k_pages, v_pages, page_table, seq_lens, scale):
+    if _force_ref():
+        return _ref.paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, scale=scale)
+    return _paged_attention_kernel(
+        q, k_pages, v_pages, page_table, seq_lens, scale=scale, interpret=use_interpret()
+    )
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *, scale=None):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _paged_attention_jit(q, k_pages, v_pages, page_table, seq_lens, float(scale))
+
+
+@jax.jit
+def _page_copy_jit(pool, src_idx, dst_idx):
+    if _force_ref():
+        return _ref.page_copy_ref(pool, src_idx, dst_idx)
+    return _page_copy_kernel(pool, src_idx, dst_idx, interpret=use_interpret())
+
+
+def page_copy(pool, src_idx, dst_idx):
+    return _page_copy_jit(pool, src_idx, dst_idx)
+
+
+@jax.jit
+def _delta_diff_jit(old, new):
+    if _force_ref():
+        return _ref.delta_diff_ref(old, new)
+    return _delta_diff_kernel(old, new, interpret=use_interpret())
+
+
+def delta_diff(old, new):
+    return _delta_diff_jit(old, new)
+
+
+@jax.jit
+def _delta_apply_jit(base, data, idx):
+    if _force_ref():
+        return _ref.delta_apply_ref(base, data, idx)
+    return _delta_apply_kernel(base, data, idx, interpret=use_interpret())
+
+
+def delta_apply(base, data, idx):
+    return _delta_apply_jit(base, data, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("max_changed",))
+def delta_compact(new, dirty, max_changed: int):
+    """Fixed-capacity compaction of dirty chunks (pure jnp; shape-static)."""
+    return _ref.delta_compact_ref(new, dirty, max_changed)
+
+
+@functools.partial(jax.jit, static_argnames=("max_changed",))
+def delta_encode(old, new, max_changed: int):
+    """diff + compact in one jit: (data, idx, count)."""
+    dirty = (
+        _ref.delta_diff_ref(old, new)
+        if _force_ref()
+        else _delta_diff_kernel(old, new, interpret=use_interpret())
+    )
+    return _ref.delta_compact_ref(new, dirty, max_changed)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: batched CoW page privatization (pool[dst] = pool[src]).
+
+The CoW-fault / async-warm hot path.  When a forked session first appends to
+a page it shares with its template, the allocator hands it a free page and
+this kernel materializes the copy — ``n`` (src, dst) pairs per call so warm
+batches privatize the whole hot set in one kernel launch.
+
+The pool is donated (input/output aliased): pages not named in ``dst_idx``
+are untouched, so the copy is in-place in HBM.  Index pairs are scalar-
+prefetch operands — each grid step DMAs exactly one source page HBM→VMEM and
+writes it back to the destination slot.  dst pages are distinct free pages
+and src∩dst = ∅ (allocator invariant), so steps commute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["page_copy"]
+
+
+def _page_copy_kernel(src_idx_ref, dst_idx_ref, pool_ref, out_ref):
+    del src_idx_ref, dst_idx_ref
+    out_ref[...] = pool_ref[...]
+
+
+def page_copy(
+    pool: jax.Array,       # (P, page_size, KVH, D) — donated
+    src_idx: jax.Array,    # (n,) int32
+    dst_idx: jax.Array,    # (n,) int32, distinct, disjoint from src
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the pool with pages copied; unreferenced pages unchanged."""
+    P = pool.shape[0]
+    n = src_idx.shape[0]
+    block = (1,) + pool.shape[1:]
+
+    in_spec = pl.BlockSpec(block, lambda j, s, d: (s[j],) + (0,) * (pool.ndim - 1))
+    out_spec = pl.BlockSpec(block, lambda j, s, d: (d[j],) + (0,) * (pool.ndim - 1))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _page_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},  # pool (3rd operand incl. scalars) -> out
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), pool)

@@ -1,0 +1,515 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod (16,16) and multi-pod (2,16,16) meshes, every assigned cell's
+step function must ``.lower().compile()`` under GSPMD, and the compiled
+artifact yields the roofline inputs:
+
+* ``compiled.memory_analysis()``  — bytes/device (proves it fits),
+* ``compiled.cost_analysis()``    — HLO FLOPs + bytes accessed,
+* collective bytes                — parsed from the partitioned HLO text
+  (all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+  operand sizes).
+
+Results append incrementally to a JSON file (``--out``), so the sweep is
+resumable (``--resume`` skips completed cells).
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.json --resume
+    python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import arch_names, get_config
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.dist.sharding import (activation_sharding, batch_spec, cache_specs,
+                                 data_axes, enforce_divisible, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.train.optim import OptimizerConfig, adamw_init, adamw_update
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree: Any, specs_tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        shapes_tree,
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _cache_sds(model: Model, batch: int, max_seq: int, mesh, *, long_context: bool):
+    cfg = model.cfg
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    cspecs = cache_specs(cfg, mesh, long_context=long_context)
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        spec = cspecs.get(name, P())
+        nd = len(leaf.shape)
+        t = tuple(spec)[:nd]
+        spec = enforce_divisible(P(*t), leaf.shape, mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    model = Model(cfg)
+    dp = batch_spec(shape.kind, mesh, long_context=(shape.name == "long_500k"))
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.input_mode == "embeddings":
+            out["batch"] = {
+                "embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, mesh, P(dp[0], None, None)),
+                "labels": _sds((B, S), jnp.int32, mesh, P(dp[0], None)),
+            }
+        else:
+            out["batch"] = {
+                "tokens": _sds((B, S), jnp.int32, mesh, dp),
+                "labels": _sds((B, S), jnp.int32, mesh, dp),
+            }
+    elif shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            out["tokens"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh, P(dp[0], None, None))
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32, mesh, dp)
+        out["cache"] = _cache_sds(model, B, S, mesh, long_context=False)
+    else:  # decode: one new token against a seq_len-deep cache
+        long = shape.name == "long_500k"
+        dpa = data_axes(mesh)
+        if cfg.input_mode == "embeddings":
+            out["tokens"] = _sds((B, 1, cfg.d_model), jnp.bfloat16, mesh, P(None if long else dpa, None, None))
+        else:
+            out["tokens"] = _sds((B,), jnp.int32, mesh, P(None if long else dpa))
+        out["cache"] = _cache_sds(model, B, S, mesh, long_context=long)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+# Gradient-accumulation / batch-split factors per (arch, kind): the memory
+# lever for cells whose activations exceed HBM at the full global batch.
+# Recorded per cell in the dry-run output; the roofline model accounts for
+# the extra per-microbatch weight gathers.
+MICROBATCH = {
+    ("jamba-1.5-large-398b", "train"): 16,
+    ("jamba-1.5-large-398b", "prefill"): 2,
+    ("jamba-1.5-large-398b", "decode"): 4,
+    ("gemma3-27b", "train"): 8,
+    ("gemma3-27b", "prefill"): 2,
+    ("dbrx-132b", "train"): 8,
+    ("xlstm-1.3b", "train"): 8,
+    ("qwen3-14b", "train"): 4,
+    ("qwen3-moe-30b-a3b", "train"): 2,
+    ("musicgen-large", "train"): 2,
+}
+
+
+def _cap_micro(n_micro: int, global_batch: int, mesh) -> int:
+    """Each microbatch must still cover the data-parallel axes evenly."""
+    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                      for a in data_axes(mesh)]))
+    cap = max(global_batch // dp, 1)
+    while cap > 1 and global_batch % cap:
+        cap -= 1
+    return max(1, min(n_micro, cap))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeCfg, mesh):
+    """Returns (fn, example_args, donate) for this cell."""
+    model = Model(cfg)
+    pspecs = param_specs(cfg, mesh)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sds = _tree_sds(pshapes, pspecs, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(
+            moment_dtype="bfloat16" if cfg.opt_state_dtype == "bf16" else "float32",
+            total_steps=10_000,
+        )
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), pshapes)
+        opt_sds = {
+            "m": _tree_sds(opt_shapes["m"], pspecs, mesh),
+            "v": _tree_sds(opt_shapes["v"], pspecs, mesh),
+            "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+        }
+
+        n_micro = _cap_micro(MICROBATCH.get((cfg.name, "train"), 1), shape.global_batch, mesh)
+        acc_dtype = jnp.bfloat16 if cfg.opt_state_dtype == "bf16" else jnp.float32
+
+        def train_step(params, opt_state, batch):
+            def loss_of(p, b):
+                loss, _ = model.loss_fn(p, b)
+                return loss
+
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                    batch,
+                )
+
+                def acc(carry, b):
+                    gsum, lsum = carry
+                    loss, g = jax.value_and_grad(loss_of)(params, b)
+                    gsum = jax.tree.map(
+                        lambda a, gg: a + gg.astype(acc_dtype), gsum, g
+                    )
+                    return (gsum, lsum + loss), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+                (gsum, lsum), _ = jax.lax.scan(acc, (zeros, jnp.zeros(())), mb)
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                loss = lsum / n_micro
+            params, opt_state, _ = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        specs = input_specs(cfg, shape, mesh)
+        return train_step, (params_sds, opt_sds, specs["batch"]), (0, 1), None
+
+    long = shape.name == "long_500k"
+    dpa = data_axes(mesh)
+    logits_sh = NamedSharding(mesh, P(None if long else dpa, "model"))
+    specs = input_specs(cfg, shape, mesh)
+    cache_sh = jax.tree.map(
+        lambda s: s.sharding, specs["cache"],
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    out_sh = (logits_sh, cache_sh)   # pin cache out=in so donation aliases
+
+    if shape.kind == "prefill":
+        n_micro = _cap_micro(MICROBATCH.get((cfg.name, "prefill"), 1), shape.global_batch, mesh)
+
+        def prefill_step(params, tokens, cache):
+            if n_micro == 1:
+                return model.prefill(params, tokens, cache)
+            B = tokens.shape[0]
+            bsz = B // n_micro
+
+            def body(full_cache, i):
+                toks = jax.lax.dynamic_slice_in_dim(tokens, i * bsz, bsz, 0)
+                sub = {"lens": jax.lax.dynamic_slice_in_dim(full_cache["lens"], i * bsz, bsz, 0)}
+                for key, entries in full_cache.items():
+                    if key == "lens":
+                        continue
+                    sub[key] = jax.tree.map(
+                        lambda c: jax.lax.dynamic_slice_in_dim(c, i * bsz, bsz, 1), entries
+                    )
+                logits, new_sub = model.prefill(params, toks, sub)
+                full_cache = dict(full_cache)
+                full_cache["lens"] = jax.lax.dynamic_update_slice_in_dim(
+                    full_cache["lens"], new_sub["lens"], i * bsz, 0
+                )
+                for key in list(full_cache.keys()):
+                    if key == "lens":
+                        continue
+                    full_cache[key] = jax.tree.map(
+                        lambda c, nn: jax.lax.dynamic_update_slice_in_dim(
+                            c, nn.astype(c.dtype), i * bsz, 1
+                        ),
+                        full_cache[key],
+                        new_sub[key],
+                    )
+                return full_cache, logits
+
+            cache, logits = jax.lax.scan(body, cache, jnp.arange(n_micro, dtype=jnp.int32))
+            return logits.reshape(B, -1), cache
+
+        return prefill_step, (params_sds, specs["tokens"], specs["cache"]), (2,), out_sh
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return serve_step, (params_sds, specs["tokens"], specs["cache"]), (2,), out_sh
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:to_apply|branch_computations|true_computation|false_computation)="
+    r"\{?%?([\w\.\-,%\s]+)\}?"
+)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in partitioned HLO.
+
+    Trip-count aware: a collective inside a ``while`` body (scan over layers
+    / chunks) executes once *per iteration*, so its bytes are multiplied by
+    the loop's ``known_trip_count`` (nested loops multiply).  A flat parse
+    undercounts scan-over-layers models by ~depth×.
+    """
+    comp_ops: Dict[str, list] = {}
+    comp_edges: Dict[str, list] = {}       # comp -> [(child_comp, factor)]
+    current = "__top__"
+    entry = None
+    for line in hlo_text.splitlines():
+        header = _COMP_RE.match(line) if line and not line.startswith(" ") else None
+        if header:
+            current = header.group(1)
+            comp_ops.setdefault(current, [])
+            comp_edges.setdefault(current, [])
+            if line.startswith("ENTRY"):
+                entry = current
+            continue
+        stripped = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9\-]+)\(",
+            stripped,
+        )
+        op = m.group(1) if m else None
+        if op and op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op == "while":
+            wm = _WHILE_RE.search(stripped)
+            trip = _TRIP_RE.search(stripped)
+            if wm:
+                comp_edges.setdefault(current, []).append(
+                    (wm.group(1), int(trip.group(1)) if trip else 1)
+                )
+            continue
+        if op in ("call", "conditional"):
+            cm = _CALLED_RE.search(stripped)
+            if cm:
+                for child in re.split(r"[,\s%]+", cm.group(1)):
+                    if child:
+                        comp_edges.setdefault(current, []).append((child, 1))
+            continue
+        if op not in _COLLECTIVES:
+            continue
+        paren = stripped[stripped.index("(") :]
+        operands = _SHAPE_RE.findall(paren)
+        if operands:
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in operands)
+        else:
+            res = _SHAPE_RE.search(stripped)
+            nbytes = _shape_bytes(*res.groups()) if res else 0
+        comp_ops.setdefault(current, []).append((op, nbytes))
+
+    # propagate execution multipliers down the call graph from the entry
+    mult: Dict[str, int] = {}
+
+    def visit(comp: str, factor: int, depth=0) -> None:
+        if depth > 20:
+            return
+        mult[comp] = mult.get(comp, 0) + factor
+        for child, f in comp_edges.get(comp, []):
+            if child in comp_ops or child in comp_edges:
+                visit(child, factor * f, depth + 1)
+
+    if entry:
+        visit(entry, 1)
+    for comp in comp_ops:
+        mult.setdefault(comp, 1)           # unreachable: count once
+
+    per_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    flat: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for comp, ops_list in comp_ops.items():
+        for op, nbytes in ops_list:
+            per_op[op] += nbytes * mult[comp]
+            counts[op] += mult[comp]
+            flat[op] += nbytes
+    return {
+        "bytes_by_op": per_op,
+        "counts_by_op": counts,
+        "total_bytes": sum(per_op.values()),
+        "flat_bytes": sum(flat.values()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = cfg.shape(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if shape.skip:
+        rec["status"] = "skip"
+        rec["reason"] = shape.skip_reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, donate, out_sh = build_step(cfg, shape, mesh)
+    long = shape.name == "long_500k"
+    dp = data_axes(mesh)
+    act_ctx = activation_sharding(
+        dp=() if long else dp,
+        # decode caches are seq-sharded over "model" (long: over dp)
+        seq=dp if long else (("model",) if shape.kind == "decode" else ()),
+        model="model",
+        attn_shard=cfg.attn_shard,
+        seq_parallel=(shape.kind in ("train", "prefill")) and not os.environ.get("REPRO_NO_SP"),
+        mesh=mesh,
+    )
+    jit_kwargs = {"donate_argnums": donate}
+    if out_sh is not None:
+        jit_kwargs["out_shardings"] = out_sh
+    with mesh, act_ctx:
+        lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops=float(cost.get("flops", -1.0)) if cost else -1.0,
+        bytes_accessed=float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        collectives=coll,
+        n_devices=mesh.devices.size,
+    )
+    try:
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+    except Exception:
+        rec["memory"] = {"repr": str(mem)}
+    rec["param_count"] = cfg.param_count()
+    rec["active_param_count"] = cfg.active_param_count()
+    rec["microbatches"] = MICROBATCH.get((cfg.name, shape.kind), 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = arch_names() if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in cfg.shapes:
+            if args.shape and shape.name != args.shape:
+                continue
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                cells.append((arch, shape.name, mp))
+
+    done: Dict[str, Any] = {}
+    if args.out and args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for rec in json.load(f):
+                done[f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"] = rec
+
+    results = list(done.values())
+    for arch, shape_name, mp in cells:
+        key = f"{arch}|{shape_name}|{'2x16x16' if mp else '16x16'}"
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        print(f"[run] {key}", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, multi_pod=mp)
+        except Exception as exc:
+            rec = {
+                "arch": arch,
+                "shape": shape_name,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error",
+                "error": f"{type(exc).__name__}: {exc}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        if rec.get("status") == "ok":
+            print(
+                f"  ok: compile={rec['compile_s']}s flops={rec['flops']:.3e} "
+                f"bytes={rec['bytes_accessed']:.3e} coll={rec['collectives']['total_bytes']:.3e}B",
+                flush=True,
+            )
+            print(f"  memory: {rec['memory']}")
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error',''))[:300]}", flush=True)
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skip")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} skip, {n_err} error ===")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips; "pod" is
+an outer pure-DP axis whose gradient all-reduce crosses the inter-pod links
+once per step.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first backend init, and only
+``dryrun.py`` forces the 512-device host platform).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run under launch/dryrun.py (which forces 512 host devices) or on a real pod"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Whatever-is-available mesh for tests/examples: ("data","model")."""
+    devices = jax.devices()
+    n = len(devices)
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"),
+                         devices=devices)

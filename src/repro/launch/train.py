@@ -1,0 +1,40 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--steps N]``.
+
+Full-config training requires a pod; reduced configs (--tiny) run anywhere.
+"""
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--tiny", action="store_true", help="reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.train import DataConfig, OptimizerConfig, Trainer, TrainerConfig
+
+    cfg = get_config(args.arch + ("-tiny" if args.tiny else ""))
+    shape = cfg.shapes[0]
+    seq = args.seq_len or shape.seq_len
+    batch = args.global_batch or shape.global_batch
+    model = Model(cfg)
+    trainer = Trainer(
+        model,
+        OptimizerConfig(total_steps=args.steps),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch),
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every),
+    )
+    params, opt, err = trainer.init_state(0)
+    params, opt, err, step = trainer.run(params, opt, err)
+    print(f"done at step {step}; last loss {trainer.metrics_log[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

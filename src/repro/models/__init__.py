@@ -1,0 +1,5 @@
+"""Model substrate: layers + pattern-based architecture builder."""
+from . import layers
+from .model import Model
+
+__all__ = ["layers", "Model"]

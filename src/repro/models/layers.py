@@ -1,0 +1,823 @@
+"""Model building blocks shared by all ten assigned architectures.
+
+Pure-functional: every block is ``init(key, cfg) -> params`` plus
+``apply(params, x, ...) -> y``.  Blocks are stacked across layers with
+``jax.vmap`` (init) and consumed by ``jax.lax.scan`` (apply) in
+``models/model.py``, so HLO size is depth-independent.
+
+Conventions
+-----------
+* activations ``(B, S, D)``; attention heads grouped under their kv head
+  for GQA: q is ``(B, S, KVH, G, Hd)``.
+* compute dtype configurable (bf16 default), params stored in
+  ``cfg.param_dtype``, reductions in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import constrain
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm_init(key: jax.Array, dim: int, dtype) -> Params:
+    del key
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparametric_ln(x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style LayerNorm without learnable scale/bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(kind: str, key: jax.Array, dim: int, dtype) -> Params:
+    if kind == "rms":
+        return rms_norm_init(key, dim, dtype)
+    if kind == "nonparametric":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params: Params, x: jax.Array) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(params, x)
+    if kind == "nonparametric":
+        return nonparametric_ln(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (RoPE / M-RoPE)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, Hd); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (Hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions_3d: jax.Array,          # (..., S, 3) — (t, h, w) position ids
+    sections: Tuple[int, int, int],   # head_dim/2 split across (t, h, w)
+    *,
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: frequency bands split across 3 axes.
+
+    For pure text all three position ids are equal, reducing to 1-D RoPE.
+    """
+    head_dim = x.shape[-1]
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)                       # (Hd/2,)
+    # band assignment: first sections[0] freqs use t, next use h, rest use w
+    band = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )                                                          # (Hd/2,)
+    pos = positions_3d.astype(jnp.float32)[..., band]          # (..., S, Hd/2)
+    angles = pos * freqs
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window size; None = global
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    softmax_scale: Optional[float] = None
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_init(key: jax.Array, spec: AttnSpec, dtype) -> Params:
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    d, H, KVH, Hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "wq": (jax.random.normal(kq, (d, KVH, spec.group, Hd)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, KVH, Hd)) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, KVH, Hd)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (KVH, spec.group, Hd, d)) * (1.0 / math.sqrt(H * Hd))).astype(dtype),
+    }
+    if spec.qk_norm:
+        params["q_norm"] = rms_norm_init(kn1, Hd, dtype)
+        params["k_norm"] = rms_norm_init(kn2, Hd, dtype)
+    return params
+
+
+def attn_project_qkv(
+    params: Params,
+    spec: AttnSpec,
+    x: jax.Array,                     # (B, S, D)
+    positions: jax.Array,             # (B, S) or (B, S, 3) for M-RoPE
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q (B,S,KVH,G,Hd), k (B,S,KVH,Hd), v (B,S,KVH,Hd), with RoPE
+    and optional qk-norm applied."""
+    q = jnp.einsum("bsd,dkgh->bskgh", x, params["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, params["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, params["wv"])
+    if spec.qk_norm:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    if spec.mrope_sections is not None:
+        rope = lambda t, p: apply_mrope(t, p, spec.mrope_sections, theta=spec.rope_theta)
+        q = rope(q, positions[:, :, None, None, :])
+        k = rope(k, positions[:, :, None, :])
+    else:
+        q = apply_rope(q, positions[:, :, None, None], theta=spec.rope_theta)
+        k = apply_rope(k, positions[:, :, None], theta=spec.rope_theta)
+    if x.shape[1] > 1:  # full-sequence mode: pin batch/head sharding
+        q = constrain(q, ("dp", None, "kv", "group", None))
+        k = constrain(k, ("dp", None, "kv", None))
+        v = constrain(v, ("dp", None, "kv", None))
+    return q, k, v
+
+
+def attn_output(params: Params, ctx: jax.Array) -> jax.Array:
+    """ctx: (B, S, KVH, G, Hd) -> (B, S, D)."""
+    return jnp.einsum("bskgh,kghd->bsd", ctx, params["wo"])
+
+
+def chunked_causal_attention(
+    q: jax.Array,                     # (B, S, KVH, G, Hd)
+    k: jax.Array,                     # (B, S, KVH, Hd)
+    v: jax.Array,                     # (B, S, KVH, Hd)
+    *,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Flash-style causal attention: O(chunk·S) memory, full-precision stats.
+
+    ``window`` enables sliding-window masking (local attention).
+    ``causal_skip`` activates the block-triangular schedule: fully-masked
+    (q-chunk, kv-chunk) pairs are skipped with a real ``lax.cond``,
+    halving attention FLOPs (beyond-paper perf option; see §Perf).
+    """
+    B, S, KVH, G, Hd = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(Hd)
+    chunk = min(chunk, S)
+    n_chunks = S // chunk if S % chunk == 0 else -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+        v = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+    Sp = n_chunks * chunk
+
+    qc = q.reshape(B, n_chunks, chunk, KVH, G, Hd)
+    kc = k.reshape(B, n_chunks, chunk, KVH, Hd)
+    vc = v.reshape(B, n_chunks, chunk, KVH, Hd)
+
+    q_pos_base = jnp.arange(chunk)
+    neg = jnp.float32(-1e30)
+    # Window-limited kv range: with a sliding window w, q chunk i only needs
+    # kv chunks [i - ceil(w/chunk), i] — a *static* count, so local layers
+    # scan O(w/chunk) chunks instead of O(S/chunk) (S²→S·w FLOPs/memory).
+    if window is not None and window < Sp:
+        n_kv_steps = min(-(-window // chunk) + 1, n_chunks)
+    else:
+        n_kv_steps = n_chunks
+
+    def q_chunk_body(i, q_i):
+        """Attend q chunk i over its (causal / window-limited) kv chunks."""
+        q_i = q_i.astype(jnp.float32) * scale
+
+        def kv_step(carry, step):
+            m_prev, l_prev, acc = carry
+            if n_kv_steps == n_chunks:
+                j, step_valid = step, True
+            else:
+                raw = i - (n_kv_steps - 1) + step
+                j = jnp.maximum(raw, 0)
+                step_valid = raw >= 0        # clamped duplicates masked out
+            k_j = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+
+            def compute(operand):
+                m_prev, l_prev, acc = operand
+                s = jnp.einsum(
+                    "bqkgh,bpkh->bkgqp", q_i, k_j.astype(jnp.float32)
+                )                                             # (B,KVH,G,chunk_q,chunk_kv)
+                s = constrain(s, ("dp", "kv", "group", None, None))
+                q_pos = i * chunk + q_pos_base               # (chunk,)
+                kv_pos = j * chunk + jnp.arange(chunk)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                if window is not None:
+                    mask &= q_pos[:, None] - kv_pos[None, :] < window
+                mask &= (kv_pos < S)[None, :]
+                if not isinstance(step_valid, bool):
+                    mask &= step_valid
+                s = jnp.where(mask[None, None, None], s, neg)
+                m_cur = jnp.max(s, axis=-1)
+                m_next = jnp.maximum(m_prev, m_cur)
+                p = jnp.exp(s - m_next[..., None])
+                alpha = jnp.exp(m_prev - m_next)
+                l_next = alpha * l_prev + jnp.sum(p, axis=-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqp,bpkh->bkgqh", p, v_j.astype(jnp.float32)
+                )
+                acc = constrain(acc, ("dp", "kv", "group", None, None))
+                return m_next, l_next, acc
+
+            if causal_skip:
+                live = j <= i
+                if window is not None:
+                    live &= (i - j) * chunk < (window + chunk)
+                m_next, l_next, acc = jax.lax.cond(
+                    live, compute, lambda op: op, (m_prev, l_prev, acc)
+                )
+            else:
+                # masked-full baseline: compute every pair, mask handles validity
+                m_next, l_next, acc = compute((m_prev, l_prev, acc))
+            return (m_next, l_next, acc), None
+
+        m0 = jnp.full((B, KVH, G, chunk), neg, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, chunk, Hd), jnp.float32)
+        # remat per kv block: the bwd recomputes scores instead of saving the
+        # (q_chunks, kv_chunks, ..., chunk, chunk) probability stacks
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False), (m0, l0, a0),
+            jnp.arange(n_kv_steps),
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = acc / l[..., None]                              # (B,KVH,G,chunk,Hd)
+        return out
+
+    # scan over q chunks; qc transposed so chunk axis leads the scan
+    outs = jax.lax.scan(
+        lambda _, xs: (None, q_chunk_body(xs[0], xs[1])),
+        None,
+        (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)),
+    )[1]                                                      # (n_chunks,B,KVH,G,chunk,Hd)
+    out = jnp.moveaxis(outs, 0, 3)                            # (B,KVH,G,n_chunks,chunk,Hd)
+    out = out.reshape(B, KVH, G, Sp, Hd)[:, :, :, :S]
+    out = jnp.moveaxis(out, 3, 1).astype(q.dtype)             # (B,S,KVH,G,Hd)
+    return constrain(out, ("dp", None, "kv", "group", None))
+
+
+# --------------------------------------------------------------------------
+# MLPs (GLU family)
+# --------------------------------------------------------------------------
+
+
+def glu_mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def glu_mlp(params: Params, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if activation == "silu":       # SwiGLU
+        act = jax.nn.silu(gate)
+    elif activation == "gelu":     # GeGLU (gemma)
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(activation)
+    h = constrain(act * up, ("dp", None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (group-local dispatch, EP-shardable)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(math.ceil(tokens_per_group * self.top_k / self.n_experts * self.capacity_factor))
+        return max(8, -(-c // 8) * 8)  # round up to 8 for tile alignment
+
+
+def moe_init(key: jax.Array, spec: MoESpec, dtype) -> Params:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(spec.d_model)
+    s_out = 1.0 / math.sqrt(spec.d_ff)
+    E = spec.n_experts
+    return {
+        "router": (jax.random.normal(kr, (spec.d_model, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k1, (E, spec.d_model, spec.d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (E, spec.d_model, spec.d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (E, spec.d_ff, spec.d_model)) * s_out).astype(dtype),
+    }
+
+
+def _moe_route(params: Params, spec: MoESpec, x_flat: jax.Array):
+    """Router + capacity positions for a flat token group (T, D)."""
+    T, D = x_flat.shape
+    E, K = spec.n_experts, spec.top_k
+    C = spec.capacity(T)
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (T,K)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux
+    density = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux_loss = jnp.sum(density * density_prob) * E
+    # position within each expert's capacity
+    sel = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32).reshape(T * K, E)
+    pos = jnp.sum((jnp.cumsum(sel, axis=0) - sel) * sel, axis=-1)          # (T*K,)
+    flat_e = expert_ids.reshape(T * K)
+    keep = pos < C
+    flat_p = jnp.where(keep, pos, C)                                       # C = drop slot
+    return gate_vals, flat_e, flat_p, keep, aux_loss, C
+
+
+def _moe_dispatch(x_flat, flat_e, flat_p, E, C):
+    """(T,D) tokens -> (E, C, D) capacity slots (local scatter)."""
+    T, D = x_flat.shape
+    K = flat_e.shape[0] // T
+    token_idx = jnp.repeat(jnp.arange(T), K)
+    buf = jnp.zeros((E, C + 1, D), x_flat.dtype)
+    return buf.at[flat_e, flat_p].set(x_flat[token_idx], mode="drop")[:, :C]
+
+
+def _moe_combine(h, flat_e, flat_p, gate_vals, keep, T, D):
+    """(E,C,D) expert outputs -> (T,D) weighted combine (local gather)."""
+    K = flat_e.shape[0] // T
+    C = h.shape[1]
+    safe_p = jnp.minimum(flat_p, C - 1)
+    rows = h[flat_e, safe_p].reshape(T, K, D)                              # (T,K,D)
+    w = (gate_vals * keep.reshape(T, K).astype(gate_vals.dtype)).astype(rows.dtype)
+    return jnp.einsum("tkd,tk->td", rows, w)
+
+
+def _moe_expert_ffn(dispatched, w_gate, w_up, w_down, activation):
+    h_gate = jnp.einsum("ecd,edf->ecf", dispatched, w_gate)
+    h_up = jnp.einsum("ecd,edf->ecf", dispatched, w_up)
+    act = jax.nn.silu(h_gate) if activation == "silu" else jax.nn.gelu(h_gate, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", act * h_up, w_down)                  # (E,C,D)
+
+
+def moe_apply(params: Params, spec: MoESpec, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-bounded top-k MoE; returns (out (B,S,D), aux_loss ()).
+
+    Two execution paths:
+
+    * **local** (single device / tests): scatter-dispatch within each batch
+      row, dense expert einsums.
+    * **shard_map EP** (distributed, when an activation-sharding context with
+      a mesh is installed): per-device dispatch of the *local* token shard,
+      ``all_to_all`` over the "model" axis to the expert owners, local expert
+      FFN with FSDP-gathered weights, reverse ``all_to_all``, local combine.
+      GSPMD never sees the scatters (no full-extent index workspaces), and
+      the EP traffic is exactly two all-to-alls per layer each direction.
+    """
+    from repro.dist.sharding import current_act_ctx
+
+    ctx = current_act_ctx()
+    if ctx is not None and ctx.get("mesh") is not None and ctx.get("model"):
+        return _moe_apply_shard_map(params, spec, x, ctx)
+    B, S, D = x.shape
+    E = spec.n_experts
+
+    def per_group(xg):
+        gate_vals, flat_e, flat_p, keep, aux, C = _moe_route(params, spec, xg)
+        dispatched = _moe_dispatch(xg, flat_e, flat_p, E, C)
+        h = _moe_expert_ffn(
+            dispatched, params["w_gate"], params["w_up"], params["w_down"], spec.activation
+        )
+        return _moe_combine(h, flat_e, flat_p, gate_vals, keep, xg.shape[0], D), aux
+
+    out, aux = jax.vmap(per_group)(x)
+    return out.astype(x.dtype), jnp.mean(aux)
+
+
+def _moe_apply_shard_map(params: Params, spec: MoESpec, x: jax.Array, ctx) -> Tuple[jax.Array, jax.Array]:
+    """Explicit expert parallelism under shard_map (see moe_apply)."""
+    from jax.sharding import PartitionSpec as _P
+
+    mesh = ctx["mesh"]
+    model_axis = ctx["model"]
+    dp_axes = tuple(ctx["dp"]) if ctx["dp"] else ()
+    sp = ctx.get("seq_parallel")
+    fsdp_axis = "data" if "data" in mesh.axis_names else None
+    E = spec.n_experts
+    ep = mesh.shape[model_axis]
+    assert E % ep == 0, f"experts {E} must divide EP degree {ep}"
+
+    x_spec = _P(dp_axes or None, model_axis if sp else None, None)
+    router_spec = _P(fsdp_axis, None)
+    w_in_spec = _P(model_axis, fsdp_axis, None)       # (E, D, F)
+    w_out_spec = _P(model_axis, None, fsdp_axis)      # (E, F, D)
+
+    def local_fn(xl, router, wg, wu, wd):
+        Bl, Sl, D = xl.shape
+        if fsdp_axis:
+            router = jax.lax.all_gather(router, fsdp_axis, axis=0, tiled=True)
+            wg = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fsdp_axis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fsdp_axis, axis=2, tiled=True)
+        x_flat = xl.reshape(Bl * Sl, D)
+        gate_vals, flat_e, flat_p, keep, aux, C = _moe_route({"router": router}, spec, x_flat)
+        dispatched = _moe_dispatch(x_flat, flat_e, flat_p, E, C)       # (E, C, D)
+        # EP all-to-all: capacity slots travel to their expert's owner rank
+        routed = jax.lax.all_to_all(
+            dispatched, model_axis, split_axis=0, concat_axis=1, tiled=True
+        )                                                               # (E/ep, C*ep, D)
+        h = _moe_expert_ffn(routed, wg, wu, wd, spec.activation)
+        back = jax.lax.all_to_all(
+            h, model_axis, split_axis=1, concat_axis=0, tiled=True
+        )                                                               # (E, C, D)
+        out = _moe_combine(back, flat_e, flat_p, gate_vals, keep, Bl * Sl, D)
+        out = out.reshape(Bl, Sl, D)
+        aux = jax.lax.pmean(aux, model_axis)
+        for ax in dp_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return out, aux
+
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(x_spec, router_spec, w_in_spec, w_in_spec, w_out_spec),
+        out_specs=(x_spec, _P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return out.astype(x.dtype), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba (S6 selective SSM) — chunked associative scan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, self.d_model // 16)
+
+
+def mamba_init(key: jax.Array, spec: MambaSpec, dtype) -> Params:
+    keys = jax.random.split(key, 8)
+    d, di, ds, dr = spec.d_model, spec.d_inner, spec.d_state, spec.dt_rank
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    return {
+        "w_in": (jax.random.normal(keys[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (spec.d_conv, di)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x_dbc": (jax.random.normal(keys[2], (di, dr + 2 * ds)) * si).astype(dtype),
+        "w_dt": (jax.random.normal(keys[3], (dr, di)) * (1.0 / math.sqrt(dr))).astype(dtype),
+        "dt_bias": (jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            keys[4], (di,), minval=math.log(1e-3), maxval=math.log(1e-1)))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(keys[5], (di, d)) * si).astype(dtype),
+    }
+
+
+def _mamba_inner(params: Params, spec: MambaSpec, xz: jax.Array, conv_state, ssm_state, *, chunk: int = 256):
+    """Core selective scan. xz: (B, S, 2*d_inner).  Returns (y, conv_state, ssm_state)."""
+    B, S, _ = xz.shape
+    di, ds = spec.d_inner, spec.d_state
+    xz = constrain(xz, ("dp", None, "model"))
+    x, z = jnp.split(xz, 2, axis=-1)                           # (B,S,di)
+
+    # causal depthwise conv with carried state (d_conv-1 trailing inputs)
+    dc = spec.d_conv
+    x_pad = jnp.concatenate([conv_state, x], axis=1)           # (B, S+dc-1, di)
+    new_conv_state = x_pad[:, -(dc - 1):] if dc > 1 else x_pad[:, :0]
+    conv_w = params["conv_w"].astype(jnp.float32)
+    xc = sum(
+        x_pad[:, i : i + S].astype(jnp.float32) * conv_w[i]
+        for i in range(dc)
+    )
+    xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32))  # (B,S,di)
+
+    dbc = jnp.einsum("bsi,ir->bsr", xc.astype(x.dtype), params["w_x_dbc"]).astype(jnp.float32)
+    dt_in, Bmat, Cmat = jnp.split(dbc, [spec.dt_rank, spec.dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in.astype(x.dtype), params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )                                                          # (B,S,di)
+    A = -jnp.exp(params["A_log"])                              # (di,ds)
+
+    # chunked linear recurrence h_t = a_t h_{t-1} + bx_t.
+    # The (B,S,di,ds) discretization is never materialized for the full
+    # sequence: each rematted chunk recomputes its own (a, bx) from the
+    # (B,chunk,di)-sized inputs, so bwd memory is O(chunk), not O(S).
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    Sp = n_chunks * chunk
+    dt_c = dt.reshape(B, n_chunks, chunk, di)
+    B_c = Bmat.reshape(B, n_chunks, chunk, ds)
+    C_c = Cmat.reshape(B, n_chunks, chunk, ds)
+    xc_c = xc.reshape(B, n_chunks, chunk, di)
+
+    def chunk_step(h0, xs):
+        dt_k, B_k, C_k, xc_k = xs                              # (B,chunk,·)
+        a_c = jnp.exp(dt_k[..., None] * A)                     # (B,chunk,di,ds)
+        bx_c = (dt_k * xc_k)[..., None] * B_k[:, :, None, :]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+        h = a_sc * h0[:, None] + b_sc                          # (B,chunk,di,ds)
+        y_c = jnp.sum(h * C_k[:, :, None, :], axis=-1)         # readout folded in
+        return h[:, -1], y_c
+
+    h0 = ssm_state                                             # (B,di,ds)
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False),
+        h0,
+        (
+            jnp.moveaxis(dt_c, 1, 0),
+            jnp.moveaxis(B_c, 1, 0),
+            jnp.moveaxis(C_c, 1, 0),
+            jnp.moveaxis(xc_c, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, di)[:, :S]       # (B,S,di)
+    y = constrain(y, ("dp", None, "model"))
+    xc = xc[:, :S]
+    y = y + params["D"] * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xz.dtype), new_conv_state, h_last
+
+
+def mamba_apply(params: Params, spec: MambaSpec, x: jax.Array, state=None, *, chunk: int = 256):
+    """x: (B,S,D) -> (y, new_state).  state = (conv_state, ssm_state)."""
+    B, S, D = x.shape
+    if state is None:
+        state = mamba_init_state(spec, B, x.dtype)
+    conv_state, ssm_state = state
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    y, conv_state, ssm_state = _mamba_inner(params, spec, xz, conv_state, ssm_state, chunk=chunk)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    return out, (conv_state, ssm_state)
+
+
+def mamba_init_state(spec: MambaSpec, batch: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    conv = jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype)
+    ssm = jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32)
+    return conv, ssm
+
+
+# --------------------------------------------------------------------------
+# xLSTM blocks: mLSTM (matrix memory, chunkwise) and sLSTM (scalar, scan)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    d_model: int
+    n_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def mlstm_init(key: jax.Array, spec: XLSTMSpec, dtype) -> Params:
+    keys = jax.random.split(key, 6)
+    d, H, Hd = spec.d_model, spec.n_heads, spec.head_dim
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(keys[0], (d, H, Hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(keys[1], (d, H, Hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(keys[2], (d, H, Hd)) * s).astype(dtype),
+        "w_if": (jax.random.normal(keys[3], (d, H, 2)) * s).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H, 1)), jnp.full((H, 1), 3.0)], -1).astype(jnp.float32),
+        "wo": (jax.random.normal(keys[4], (H, Hd, d)) * (1.0 / math.sqrt(d))).astype(dtype),
+        "out_norm": rms_norm_init(keys[5], spec.head_dim, dtype),
+    }
+
+
+def mlstm_apply(params: Params, spec: XLSTMSpec, x: jax.Array, state=None, *, chunk: int = 128):
+    """Chunkwise mLSTM (matrix memory C, normalizer n, max-stabilizer m).
+
+    Within a chunk: quadratic (attention-like) path with log-space decay
+    matrix.  Across chunks: recurrent (C, n, m) carry — O(1) state per head.
+    x: (B,S,D) -> (y, new_state).
+    """
+    B, S, D = x.shape
+    H, Hd = spec.n_heads, spec.head_dim
+    if state is None:
+        state = mlstm_init_state(spec, B)
+    C0, n0, m0 = state                                        # (B,H,Hd,Hd),(B,H,Hd),(B,H)
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"]).astype(jnp.float32) / math.sqrt(Hd)
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"]).astype(jnp.float32)
+    q = constrain(q, ("dp", None, "model", None))
+    k = constrain(k, ("dp", None, "model", None))
+    v = constrain(v, ("dp", None, "model", None))
+    if_ = jnp.einsum("bsd,dhe->bshe", x.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    log_i = -jax.nn.softplus(-if_[..., 0])                    # log sigmoid-ish input gate (B,S,H)
+    log_f = -jax.nn.softplus(-if_[..., 1])                    # log forget gate
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+
+    def resh(t, extra=()):
+        return t.reshape((B, n_chunks, L) + t.shape[2:])
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(log_i), resh(log_f)
+
+    def chunk_step(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        q_c, k_c, v_c, li_c, lf_c = xs                         # (B,L,H,·)
+        csum_f = jnp.cumsum(lf_c, axis=1)                      # (B,L,H)
+        # decay from chunk start to position t (inclusive of f_t)
+        b_dec = csum_f                                         # (B,L,H)
+        # intra-chunk log weights: D[t,s] = sum_{s<r<=t} f_r + i_s
+        log_D = (
+            b_dec[:, :, None, :] - b_dec[:, None, :, :] + li_c[:, None, :, :]
+        )                                                      # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        log_D = jnp.where(tri[None, :, :, None], log_D, -jnp.inf)
+        # stabilizer: m_t = max(m_prev + cumf, max_s log_D[t,s])
+        m_inter = m_prev[:, None, :] + b_dec                   # (B,L,H)
+        m_intra = jnp.max(log_D, axis=2)                       # (B,L,H)
+        m_t = jnp.maximum(m_inter, m_intra)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        # inter-chunk contribution: q_t · C_prev, scaled exp(m_prev + cumf - m_t)
+        w_inter = jnp.exp(m_inter - m_t)                       # (B,L,H)
+        y_inter = jnp.einsum("blhe,bhef->blhf", q_c, C_prev) * w_inter[..., None]
+        n_inter = jnp.einsum("blhe,bhe->blh", q_c, n_prev) * w_inter
+
+        # intra-chunk: scores q_t·k_s with weight exp(log_D - m_t)
+        s_qk = jnp.einsum("blhe,bshe->blsh", q_c, k_c)         # (B,L,S,H)
+        w_intra = jnp.exp(log_D - m_t[:, :, None, :])
+        sw = s_qk * w_intra
+        y_intra = jnp.einsum("blsh,bshf->blhf", sw, v_c)
+        n_intra = jnp.sum(sw, axis=2)                          # (B,L,H)
+
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        y = (y_inter + y_intra) / denom[..., None]             # (B,L,H,Hd)
+
+        # state update to end of chunk
+        f_total = b_dec[:, -1]                                 # (B,H)
+        m_next = jnp.maximum(m_prev + f_total, jnp.max(li_c + (f_total[:, None] - b_dec), axis=1))
+        # per-position weight for kv outer products: exp(i_s + f_{s+1..L} - m_next)
+        w_kv = jnp.exp(li_c + (f_total[:, None] - b_dec) - m_next[:, None])  # (B,L,H)
+        C_next = C_prev * jnp.exp(m_prev + f_total - m_next)[..., None, None] + jnp.einsum(
+            "blhe,blhf,blh->bhef", k_c, v_c, w_kv
+        )
+        n_next = n_prev * jnp.exp(m_prev + f_total - m_next)[..., None] + jnp.einsum(
+            "blhe,blh->bhe", k_c, w_kv
+        )
+        C_next = constrain(C_next, ("dp", "model", None, None))
+        return (C_next, n_next, m_next), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, lic, lfc))
+    (C1, n1, m1), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * L, H, Hd)[:, :S]
+    y = rms_norm(params["out_norm"], y.astype(x.dtype))
+    out = jnp.einsum("bshe,hed->bsd", y, params["wo"])
+    return out, (C1, n1, m1)
+
+
+def mlstm_init_state(spec: XLSTMSpec, batch: int):
+    H, Hd = spec.n_heads, spec.head_dim
+    return (
+        jnp.zeros((batch, H, Hd, Hd), jnp.float32),
+        jnp.zeros((batch, H, Hd), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def slstm_init(key: jax.Array, spec: XLSTMSpec, dtype) -> Params:
+    keys = jax.random.split(key, 3)
+    d = spec.d_model
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_gates": (jax.random.normal(keys[0], (d, 4 * d)) * s).astype(dtype),
+        "r_gates": (jax.random.normal(keys[1], (d, 4 * d)) * (s * 0.5)).astype(dtype),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32).at[2 * d : 3 * d].set(3.0),
+        "w_out": (jax.random.normal(keys[2], (d, d)) * s).astype(dtype),
+    }
+
+
+def slstm_apply(params: Params, spec: XLSTMSpec, x: jax.Array, state=None):
+    """sLSTM with exponential gating + (c, n, m, h) stabilized state.
+
+    Sequential lax.scan over time (scalar state), as in the paper.
+    x: (B,S,D) -> (y, new_state)."""
+    B, S, D = x.shape
+    if state is None:
+        state = slstm_init_state(spec, B)
+    c0, n0, m0, h0 = state
+
+    wx = jnp.einsum("bsd,de->bse", x, params["w_gates"]).astype(jnp.float32)  # (B,S,4D)
+    wx = constrain(wx, ("dp", None, "model"))
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bd,de->be", h.astype(x.dtype), params["r_gates"]).astype(jnp.float32)
+        g = wx_t + rec + params["b_gates"]
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        log_f = -jax.nn.softplus(-fi)
+        m_new = jnp.maximum(log_f + m, ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c1, n1, m1, h1), hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,D)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    return out, (c1, n1, m1, h1)
+
+
+def slstm_init_state(spec: XLSTMSpec, batch: int):
+    D = spec.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return (z, z, jnp.full((batch, D), -1e30, jnp.float32), z)

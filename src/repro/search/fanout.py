@@ -1,0 +1,93 @@
+"""Best-of-N / RL rollout fan-out over warm templates (paper §6.2.2).
+
+Each training step forks N independent sandboxes from the same warm
+starting state, runs them as rollouts, scores them, and tears them down.
+Fork latency directly bounds training throughput, so the primitive here is
+``fork_n``: N template forks (page-table copies + refcount bumps) with
+latency percentiles and footprint accounting — the Table 3 / Fig 7(a)
+analogue.
+
+``sync_gpu_occupation`` reproduces the Fig 7(c) model:
+    occ = (T_gen + T_train) / (T_sandbox + T_gen + T_train).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.deltacr import ForkableState
+
+__all__ = ["FanoutResult", "fork_n", "rollout_fanout", "sync_gpu_occupation", "staleness"]
+
+
+@dataclasses.dataclass
+class FanoutResult:
+    n: int
+    fork_ms: List[float]                 # per-fork wall ms
+    total_ms: float
+    resident_bytes: int                  # summed attributable footprint
+    forks_per_s: float
+
+    @property
+    def p50_ms(self) -> float:
+        return float(np.percentile(self.fork_ms, 50))
+
+    @property
+    def p99_ms(self) -> float:
+        return float(np.percentile(self.fork_ms, 99))
+
+
+def fork_n(template: ForkableState, n: int) -> Tuple[List[ForkableState], FanoutResult]:
+    """Fork ``n`` children from one frozen template, timing each fork."""
+    children: List[ForkableState] = []
+    fork_ms: List[float] = []
+    t_start = time.perf_counter()
+    for _ in range(n):
+        t0 = time.perf_counter()
+        children.append(template.fork())
+        fork_ms.append((time.perf_counter() - t0) * 1e3)
+    total_ms = (time.perf_counter() - t_start) * 1e3
+    resident = 0
+    for c in children:
+        rb = getattr(c, "resident_bytes", None)
+        if callable(rb):
+            resident += rb()
+    return children, FanoutResult(
+        n=n,
+        fork_ms=fork_ms,
+        total_ms=total_ms,
+        resident_bytes=resident,
+        forks_per_s=n / max(total_ms / 1e3, 1e-9),
+    )
+
+
+def rollout_fanout(
+    template: ForkableState,
+    n: int,
+    rollout_fn: Callable[[ForkableState, int], float],
+    *,
+    teardown: bool = True,
+) -> Tuple[List[float], FanoutResult]:
+    """Fork N children, run ``rollout_fn(child, i) -> reward``, tear down.
+
+    The full RL-step substrate path: fan-out + rollouts + release."""
+    children, result = fork_n(template, n)
+    rewards = [rollout_fn(child, i) for i, child in enumerate(children)]
+    if teardown:
+        for child in children:
+            child.release()
+    return rewards, result
+
+
+def sync_gpu_occupation(t_sandbox_s: float, t_gen_s: float, t_train_s: float) -> float:
+    """Expected synchronous-RL accelerator occupation (Fig 7c)."""
+    return (t_gen_s + t_train_s) / max(t_sandbox_s + t_gen_s + t_train_s, 1e-12)
+
+
+def staleness(t_sandbox_s: float, t_gen_s: float, t_train_s: float) -> float:
+    """Async decoupled-trainer staleness model (§6.2.2): how many rollout
+    generations the trainer outpaces the rollouter by."""
+    return (t_sandbox_s + t_gen_s) / max(t_train_s, 1e-12) - 1.0

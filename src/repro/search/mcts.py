@@ -1,0 +1,209 @@
+"""UCT Monte-Carlo Tree Search over DeltaState checkpoints.
+
+The paper's primary workload (SWE-Search-style MCTS, §2.1/§6.2.1): every
+expansion checkpoints at the parent node and rolls back to arbitrary
+ancestors, so C/R latency lands on the critical path once per iteration.
+
+The search tree *is* the snapshot index tree: selection walks SnapshotNodes,
+expansion = ``restore(parent) → act → checkpoint``, evaluation runs under
+``isolated_eval`` (value-time test isolation, §4.3), and the reachability
+GC's ``expandable``/``terminal`` flags are maintained here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core import StateManager, Sandbox, reachability_gc
+
+__all__ = ["MCTSConfig", "AgentTask", "MCTS", "MCTSStats"]
+
+
+class AgentTask(Protocol):
+    """The environment an agent explores inside the sandbox."""
+
+    def propose_actions(self, sandbox: Sandbox, rng_seed: int) -> Sequence[Any]:
+        """Candidate actions at the current state (the LLM proposal step)."""
+
+    def apply_action(self, sandbox: Sandbox, action: Any) -> None:
+        """Execute one action (mutates fs/proc; may call the engine)."""
+
+    def evaluate(self, sandbox: Sandbox) -> float:
+        """Value estimate in [0,1]; may have side effects (run under
+        isolated_eval)."""
+
+    def is_terminal(self, sandbox: Sandbox) -> bool: ...
+
+    def is_readonly(self, action: Any) -> bool:
+        """True if the action is read-only/idempotent (LW checkpoint, §6.3.3)."""
+
+
+@dataclasses.dataclass
+class MCTSConfig:
+    iterations: int = 30
+    c_uct: float = 1.2
+    expand_width: int = 3           # max children per node
+    max_depth: int = 12
+    gc_every: int = 0               # 0 = no GC during search
+    use_lightweight: bool = True    # route read-only actions to LW checkpoints
+    value_isolation: bool = True    # pre-test ckpt + unconditional restore
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class MCTSStats:
+    iterations: int = 0
+    restores: int = 0
+    checkpoints: int = 0
+    lw_checkpoints: int = 0
+    fast_restores: int = 0
+    slow_restores: int = 0
+    time_restore_s: float = 0.0
+    time_checkpoint_s: float = 0.0
+    time_action_s: float = 0.0
+    time_eval_s: float = 0.0
+    best_value: float = 0.0
+    nodes: int = 0
+
+
+class MCTS:
+    def __init__(self, sm: StateManager, task: AgentTask, cfg: MCTSConfig = MCTSConfig()):
+        self.sm = sm
+        self.task = task
+        self.cfg = cfg
+        self.stats = MCTSStats()
+        # per-ckpt search metadata beyond SnapshotNode's visits/value
+        self.depth: Dict[int, int] = {}
+        self.untried: Dict[int, List[Any]] = {}
+
+    # -------------------------------------------------------------- helpers
+    def _uct(self, parent_visits: int, node) -> float:
+        if node.visits == 0:
+            return float("inf")
+        exploit = node.value / node.visits
+        explore = self.cfg.c_uct * math.sqrt(math.log(max(parent_visits, 1)) / node.visits)
+        return exploit + explore
+
+    def _select(self, root_id: int) -> int:
+        """UCT descent to a node with untried actions (or a leaf)."""
+        cur = self.sm.node(root_id)
+        while True:
+            if self.untried.get(cur.ckpt_id) or cur.terminal:
+                return cur.ckpt_id
+            live_children = [
+                self.sm.node(c)
+                for c in cur.children
+                if c in self.depth and not self.sm.node(c).reclaimed
+            ]
+            if not live_children:
+                return cur.ckpt_id
+            cur = max(live_children, key=lambda n: self._uct(cur.visits, n))
+
+    def _backprop(self, ckpt_id: int, value: float) -> None:
+        walk: Optional[int] = ckpt_id
+        while walk is not None:
+            node = self.sm.node(walk)
+            node.visits += 1
+            node.value += value
+            walk = node.parent_id
+
+    def _register(self, ckpt_id: int, depth: int, seed: int) -> None:
+        self.depth[ckpt_id] = depth
+        node = self.sm.node(ckpt_id)
+        node.terminal = self.task.is_terminal(self.sm.sandbox) or depth >= self.cfg.max_depth
+        if node.terminal:
+            node.expandable = False
+            self.untried[ckpt_id] = []
+        else:
+            actions = list(self.task.propose_actions(self.sm.sandbox, seed))
+            self.untried[ckpt_id] = actions[: self.cfg.expand_width]
+            node.expandable = bool(self.untried[ckpt_id])
+        self.stats.nodes += 1
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> MCTSStats:
+        cfg, sm, task, st = self.cfg, self.sm, self.task, self.stats
+
+        t0 = time.perf_counter()
+        root = sm.checkpoint()
+        st.time_checkpoint_s += time.perf_counter() - t0
+        st.checkpoints += 1
+        self._register(root, 0, cfg.seed)
+
+        for it in range(cfg.iterations):
+            st.iterations += 1
+            # 1. selection
+            target = self._select(root)
+            # 2. rollback to the selected node (the paper's critical path)
+            if sm.current != target:
+                t0 = time.perf_counter()
+                mode = sm.restore(target)
+                st.time_restore_s += time.perf_counter() - t0
+                st.restores += 1
+                if mode.startswith("fast"):
+                    st.fast_restores += 1
+                else:
+                    st.slow_restores += 1
+            node = sm.node(target)
+            if node.terminal:
+                t0 = time.perf_counter()
+                value = task.evaluate(sm.sandbox)
+                st.time_eval_s += time.perf_counter() - t0
+                self._backprop(target, value)
+                continue
+            # 3. expansion: apply one untried action, checkpoint the child
+            actions = self.untried[target]
+            if not actions:
+                node.expandable = False
+                self._backprop(target, 0.0)
+                continue
+            action = actions.pop(0)
+            if not actions:
+                node.expandable = False
+            t0 = time.perf_counter()
+            task.apply_action(sm.sandbox, action)
+            st.time_action_s += time.perf_counter() - t0
+
+            lw = cfg.use_lightweight and task.is_readonly(action)
+            t0 = time.perf_counter()
+            child = sm.checkpoint(lightweight=lw, actions=(action,) if lw else ())
+            st.time_checkpoint_s += time.perf_counter() - t0
+            st.checkpoints += 1
+            if lw:
+                st.lw_checkpoints += 1
+            self._register(child, self.depth[target] + 1, cfg.seed + it + 1)
+
+            # 4. evaluation under value-time isolation
+            t0 = time.perf_counter()
+            if cfg.value_isolation:
+                value = sm.isolated_eval(lambda sb: task.evaluate(sb))
+            else:
+                value = task.evaluate(sm.sandbox)
+            st.time_eval_s += time.perf_counter() - t0
+            st.best_value = max(st.best_value, value)
+
+            # 5. backprop
+            self._backprop(child, value)
+
+            if cfg.gc_every and (it + 1) % cfg.gc_every == 0:
+                reachability_gc(sm)
+
+        return st
+
+    # -------------------------------------------------------- result access
+    def best_leaf(self) -> Optional[int]:
+        best, best_v = None, -1.0
+        for node in self.sm.live_nodes():
+            if node.visits and node.terminal:
+                v = node.value / node.visits
+                if v > best_v:
+                    best, best_v = node.ckpt_id, v
+        if best is None:
+            for node in self.sm.live_nodes():
+                if node.visits:
+                    v = node.value / node.visits
+                    if v > best_v:
+                        best, best_v = node.ckpt_id, v
+        return best

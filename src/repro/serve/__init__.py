@@ -1,0 +1,7 @@
+"""Serving runtime: paged CoW KV cache + forkable sessions + engine."""
+from .engine import Engine, SamplingParams
+from .kvcache import PagePool, PagedSession
+from .scheduler import Scheduler, SchedulerConfig
+
+__all__ = ["Engine", "SamplingParams", "PagePool", "PagedSession",
+           "Scheduler", "SchedulerConfig"]

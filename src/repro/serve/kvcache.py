@@ -1,0 +1,285 @@
+"""Paged, copy-on-write KV cache — the device-side "process memory".
+
+The pool is the TPU analogue of the kernel page table + physical pages:
+
+* **Pool**: per attention layer, ``(P, page_size, KVH, Hd)`` K and V arrays
+  (stacked per stage/period to match the model's scan structure).  Page 0 is
+  reserved as the filler entry for inactive page-table slots.
+* **Page tables**: per session, ``(max_pages,)`` int32 on host.  Fork = copy
+  the table + bump refcounts — O(pages) integers, zero HBM traffic: the
+  ``fork()``-duplicates-page-tables-only analogue.
+* **CoW**: the decode step writes in place, so before each step the manager
+  *privatizes* every session's write-target page whose refcount > 1:
+  allocate a free page, ``kernels.page_copy`` the contents (batched across
+  layers via the stacked pool), swap the table entry.  ``warm`` runs the
+  same privatization off the critical path (async-warm, §4.2.2).
+* **Refcount GC**: releasing a session/template decrefs its pages; pages at
+  refcount 0 return to the free list.
+
+Host-side bookkeeping is numpy; device pools are jnp arrays functionally
+updated (donated on TPU, so updates are in place).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+
+__all__ = ["PagePool", "PagedSession"]
+
+
+class PagePool:
+    """Global page pool + refcounts + free list for one served model."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        num_pages: int,
+        page_size: int = 16,
+        max_pages_per_session: int = 32,
+        dtype: Optional[str] = None,
+    ):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages = max_pages_per_session
+        dt = jnp.dtype(dtype or cfg.dtype)
+        # stage -> tag -> stacked (N_periods, P, psz, KVH, Hd)
+        self.pools_k: Dict[str, Dict[str, jax.Array]] = {}
+        self.pools_v: Dict[str, Dict[str, jax.Array]] = {}
+        self.attn_tags: List[Tuple[str, str]] = []
+        for i, stage in enumerate(cfg.stages):
+            sk, sv = {}, {}
+            for li, layer in enumerate(stage.period):
+                for si, kind in enumerate(layer):
+                    if kind in ("attn", "attn_local"):
+                        tag = f"l{li}_s{si}_{kind}"
+                        shape = (stage.n_periods, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+                        sk[tag] = jnp.zeros(shape, dt)
+                        sv[tag] = jnp.zeros(shape, dt)
+                        self.attn_tags.append((f"stage{i}", tag))
+            self.pools_k[f"stage{i}"] = sk
+            self.pools_v[f"stage{i}"] = sv
+        self.refs = np.zeros((num_pages,), np.int64)
+        self.refs[0] = 1                       # page 0 reserved (filler)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._lock = threading.RLock()
+        self.cow_copies = 0                    # privatizations on the step path
+        self.warm_copies = 0                   # privatizations absorbed by warm
+
+    # --------------------------------------------------------- page algebra
+    def alloc(self) -> int:
+        with self._lock:
+            if not self._free:
+                raise MemoryError("page pool exhausted")
+            p = self._free.pop()
+            assert self.refs[p] == 0
+            self.refs[p] = 1
+            return p
+
+    def incref(self, pages: np.ndarray) -> None:
+        with self._lock:
+            for p in pages:
+                if p:
+                    self.refs[p] += 1
+
+    def decref(self, pages: np.ndarray) -> None:
+        with self._lock:
+            for p in pages:
+                if p:
+                    self.refs[p] -= 1
+                    assert self.refs[p] >= 0, f"page {p} refcount underflow"
+                    if self.refs[p] == 0:
+                        self._free.append(int(p))
+
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def used_bytes(self) -> int:
+        """Physical bytes attributable to live (referenced) pages."""
+        live = int(np.sum(self.refs[1:] > 0))
+        bytes_per_page = sum(
+            int(np.prod(self.pools_k[s][t].shape[2:])) * self.pools_k[s][t].dtype.itemsize * 2
+            * self.pools_k[s][t].shape[0]
+            for s, t in self.attn_tags
+        )
+        return live * bytes_per_page
+
+    # ------------------------------------------------------------ CoW copy
+    def copy_pages(self, src: List[int], dst: List[int]) -> None:
+        """Materialize CoW copies pool-wide (all layers) for (src, dst) pairs."""
+        if not src:
+            return
+        si = jnp.asarray(src, jnp.int32)
+        di = jnp.asarray(dst, jnp.int32)
+        for skey, tag in self.attn_tags:
+            pk = self.pools_k[skey][tag]
+            pv = self.pools_v[skey][tag]
+            # stacked periods: copy within each period's pool slice
+            self.pools_k[skey][tag] = jax.vmap(lambda p: kops.page_copy(p, si, di))(pk)
+            self.pools_v[skey][tag] = jax.vmap(lambda p: kops.page_copy(p, si, di))(pv)
+
+    # --------------------------------------------------- device page access
+    def gather_page(self, page: int) -> Dict[str, np.ndarray]:
+        """Host copy of one page across all layers (dump path)."""
+        out = {}
+        for skey, tag in self.attn_tags:
+            out[f"{skey}/{tag}/k"] = np.asarray(self.pools_k[skey][tag][:, page])
+            out[f"{skey}/{tag}/v"] = np.asarray(self.pools_v[skey][tag][:, page])
+        return out
+
+    def scatter_page(self, page: int, payload: Dict[str, np.ndarray]) -> None:
+        """Write one page across all layers (slow-path restore)."""
+        for skey, tag in self.attn_tags:
+            k = jnp.asarray(payload[f"{skey}/{tag}/k"])
+            v = jnp.asarray(payload[f"{skey}/{tag}/v"])
+            self.pools_k[skey][tag] = self.pools_k[skey][tag].at[:, page].set(k)
+            self.pools_v[skey][tag] = self.pools_v[skey][tag].at[:, page].set(v)
+
+
+class PagedSession:
+    """A forkable agent session: page table + recurrent/host extras.
+
+    Implements the DeltaCR ``ForkableState`` protocol; the "process memory"
+    of one search-tree node.
+    """
+
+    def __init__(
+        self,
+        pool: PagePool,
+        *,
+        table: Optional[np.ndarray] = None,
+        seq_len: int = 0,
+        extras: Optional[Dict[str, Any]] = None,
+        tokens: Optional[List[int]] = None,
+    ):
+        self.pool = pool
+        self.table = table if table is not None else np.zeros((pool.max_pages,), np.int32)
+        self.seq_len = int(seq_len)
+        # extras: recurrent states (immutable jnp arrays -> alias on fork),
+        # sampling rng, last token, conversation metadata...
+        self.extras: Dict[str, Any] = dict(extras or {})
+        self.tokens: List[int] = list(tokens or [])
+        self._released = False
+
+    # ------------------------------------------------------------ utility
+    @property
+    def n_pages(self) -> int:
+        return -(-self.seq_len // self.pool.page_size) if self.seq_len else 0
+
+    def active_pages(self) -> np.ndarray:
+        return self.table[: self.n_pages]
+
+    # ------------------------------------------------------- ForkableState
+    def fork(self) -> "PagedSession":
+        self.pool.incref(self.active_pages())
+        return PagedSession(
+            self.pool,
+            table=self.table.copy(),
+            seq_len=self.seq_len,
+            extras=dict(self.extras),     # jnp arrays alias (immutable)
+            tokens=list(self.tokens),
+        )
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        self.pool.decref(self.active_pages())
+
+    def warm(self) -> None:
+        """Pre-privatize the tail page off the critical path (async-warm)."""
+        n = self.ensure_writable(warm=True)
+        self.pool.warm_copies += n
+
+    def dump_payload(self) -> Dict[str, np.ndarray]:
+        payload: Dict[str, np.ndarray] = {
+            "meta/seq_len": np.asarray([self.seq_len], np.int64),
+            "meta/tokens": np.asarray(self.tokens, np.int64),
+        }
+        for pos in range(self.n_pages):
+            page = int(self.table[pos])
+            for name, arr in self.pool.gather_page(page).items():
+                payload[f"page{pos}/{name}"] = arr
+        for name, val in self.extras.items():
+            payload[f"extra/{name}"] = np.asarray(val)
+        return payload
+
+    @staticmethod
+    def restore_from_payload(pool: PagePool, payload: Dict[str, np.ndarray]) -> "PagedSession":
+        seq_len = int(payload["meta/seq_len"][0])
+        tokens = [int(t) for t in payload["meta/tokens"]]
+        sess = PagedSession(pool, seq_len=seq_len, tokens=tokens)
+        n_pages = sess.n_pages
+        for pos in range(n_pages):
+            page = pool.alloc()
+            sess.table[pos] = page
+            page_payload = {
+                name[len(f"page{pos}/"):]: arr
+                for name, arr in payload.items()
+                if name.startswith(f"page{pos}/")
+            }
+            pool.scatter_page(page, page_payload)
+        for name, arr in payload.items():
+            if name.startswith("extra/"):
+                sess.extras[name[len("extra/"):]] = jnp.asarray(arr)
+        return sess
+
+    # --------------------------------------------------------------- write
+    def ensure_writable(self, *, warm: bool = False, extra_tokens: int = 1) -> int:
+        """Guarantee the next ``extra_tokens`` appends hit exclusively-owned
+        pages.  Returns the number of CoW copies performed.
+
+        This is the CoW fault (inline) or its async-warm pre-payment.
+        """
+        psz = self.pool.page_size
+        copies_src, copies_dst = [], []
+        new_len = self.seq_len + extra_tokens
+        first_page = self.seq_len // psz
+        last_page = (new_len - 1) // psz
+        for pos in range(first_page, last_page + 1):
+            if pos >= len(self.table):
+                raise MemoryError("session exceeded max_pages")
+            page = int(self.table[pos])
+            needed = pos * psz < new_len
+            if not needed:
+                continue
+            if pos * psz >= self.seq_len and (page == 0 or self.pool.refs[page] == 0):
+                # fresh page boundary: plain allocation, no copy
+                self.table[pos] = self.pool.alloc()
+            elif self.pool.refs[page] > 1:
+                # shared page: CoW privatize
+                new_page = self.pool.alloc()
+                copies_src.append(page)
+                copies_dst.append(new_page)
+                self.table[pos] = new_page
+        if copies_src:
+            self.pool.copy_pages(copies_src, copies_dst)
+            self.pool.decref(np.asarray(copies_src))
+            if warm:
+                self.pool.warm_copies += len(copies_src)
+            else:
+                self.pool.cow_copies += len(copies_src)
+        return len(copies_src)
+
+    def resident_bytes(self) -> int:
+        """Footprint attributable to this session (shared pages amortized)."""
+        psz_bytes = 0
+        for skey, tag in self.pool.attn_tags:
+            p = self.pool.pools_k[skey][tag]
+            psz_bytes += int(np.prod(p.shape[2:])) * p.dtype.itemsize * 2 * p.shape[0]
+        total = 0.0
+        for pos in range(self.n_pages):
+            page = int(self.table[pos])
+            if page:
+                total += psz_bytes / max(int(self.pool.refs[page]), 1)
+        return int(total)

@@ -1,0 +1,148 @@
+"""Continuous-batching scheduler over forkable sessions.
+
+Production serving runs many concurrent agent sessions with different
+lifecycles (prefill, decode, suspended-awaiting-tool, finished).  The
+scheduler admits sessions up to a page-budget watermark, batches all
+decode-ready sessions per step, and — the DeltaBox twist — *suspends*
+sessions by checkpointing them through DeltaCR and releasing their pages,
+resuming them later via template fork or dump restore.  Suspension turns
+idle agents (seconds-long tool calls, human turns) into near-zero HBM
+footprint, which is exactly the paper's economics applied to a fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.deltacr import DeltaCR
+
+from .engine import Engine, SamplingParams
+from .kvcache import PagedSession
+
+__all__ = ["Scheduler", "SchedulerConfig", "SessionHandle"]
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 8                   # decode batch per step
+    min_free_pages: int = 8              # admission watermark
+    auto_suspend_free_pages: int = 4     # suspend LRU sessions below this
+
+
+@dataclasses.dataclass
+class SessionHandle:
+    sid: int
+    state: str                           # "active" | "suspended" | "finished"
+    session: Optional[PagedSession]
+    ckpt_id: Optional[int] = None        # set while suspended
+    last_step: int = 0
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, deltacr: DeltaCR, cfg: SchedulerConfig = SchedulerConfig()):
+        self.engine = engine
+        self.cr = deltacr
+        self.cfg = cfg
+        self.handles: Dict[int, SessionHandle] = {}
+        self._sid = itertools.count(1)
+        self._ckpt = itertools.count(1_000_000)
+        self.step_count = 0
+        self.suspensions = 0
+        self.resumes = 0
+
+    # --------------------------------------------------------------- admit
+    def submit(self, prompt, sampling: SamplingParams = SamplingParams()) -> int:
+        """Admit a new session (prefill) if the pool allows; else raise."""
+        self._ensure_headroom()
+        if self.engine.pool.free_pages() < self.cfg.min_free_pages:
+            raise MemoryError("no page headroom for admission")
+        sess = self.engine.new_session(list(prompt), sampling)
+        sid = next(self._sid)
+        self.handles[sid] = SessionHandle(sid=sid, state="active", session=sess)
+        return sid
+
+    def fork(self, sid: int) -> int:
+        """Fork an active session into a new scheduled session (BoN/search)."""
+        h = self.handles[sid]
+        assert h.state == "active" and h.session is not None
+        child = h.session.fork()
+        nsid = next(self._sid)
+        self.handles[nsid] = SessionHandle(sid=nsid, state="active", session=child)
+        return nsid
+
+    # --------------------------------------------------------------- states
+    def suspend(self, sid: int, *, keep_template: bool = False) -> None:
+        """Checkpoint through DeltaCR and release the session's pages.
+
+        With ``keep_template=False`` (default) the template is evicted once
+        the durable dump lands, so the pages really return to the pool —
+        resume then takes the slow path: suspension trades restore latency
+        for HBM, exactly the paper's eviction economics."""
+        h = self.handles[sid]
+        if h.state != "active":
+            return
+        ckpt_id = next(self._ckpt)
+        self.cr.checkpoint(h.session, ckpt_id, None)
+        h.session.release()
+        if not keep_template:
+            fut = self.cr.dump_future(ckpt_id)
+            if fut is not None:
+                fut.result(timeout=120.0)      # durable image before eviction
+            self.cr.evict_template(ckpt_id)
+        h.session = None
+        h.ckpt_id = ckpt_id
+        h.state = "suspended"
+        self.suspensions += 1
+
+    def resume(self, sid: int) -> None:
+        h = self.handles[sid]
+        if h.state != "suspended":
+            return
+        self._ensure_headroom()
+        state, path = self.cr.restore(h.ckpt_id)
+        h.session = state
+        h.state = "active"
+        h.ckpt_id = None
+        self.resumes += 1
+
+    def finish(self, sid: int) -> List[int]:
+        h = self.handles[sid]
+        tokens = list(h.session.tokens) if h.session else []
+        if h.session is not None:
+            h.session.release()
+            h.session = None
+        if h.ckpt_id is not None:
+            self.cr.drop_checkpoint(h.ckpt_id)
+            h.ckpt_id = None
+        h.state = "finished"
+        return tokens
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> Dict[int, int]:
+        """One continuous-batching step over decode-ready sessions.
+
+        Returns {sid: sampled token}."""
+        ready = [h for h in self.handles.values() if h.state == "active"][: self.cfg.max_batch]
+        if not ready:
+            return {}
+        toks = self.engine.step([h.session for h in ready])
+        out = {}
+        for h, t in zip(ready, toks):
+            h.last_step = self.step_count
+            out[h.sid] = t
+        self.step_count += 1
+        return out
+
+    # ------------------------------------------------------------- internal
+    def _ensure_headroom(self) -> None:
+        """Below the watermark, suspend LRU active sessions (their templates
+        stay forkable; pages return to the pool)."""
+        while (
+            self.engine.pool.free_pages() < self.cfg.auto_suspend_free_pages
+        ):
+            actives = [h for h in self.handles.values() if h.state == "active"]
+            if len(actives) <= 1:
+                break
+            lru = min(actives, key=lambda h: h.last_step)
+            self.suspend(lru.sid)

@@ -1,0 +1,303 @@
+"""Fault-tolerant trainer: DeltaState-backed checkpoints, restart, elastic.
+
+The paper's change-based C/R, retargeted at the training control plane:
+
+* **Coupled checkpoints.**  Every K steps the trainer snapshots the
+  *(model+optimizer state, data-pipeline cursor)* pair — the training
+  analogue of the coupled (filesystem, process) invariant.  The device
+  snapshot is an HBM-side copy dispatched before the next step (so the step
+  loop never blocks), then a background thread delta-encodes it into
+  DeltaFS: unchanged chunks (frozen layers, stale expert shards, the int
+  step counter...) are shared with the previous generation, and rollback to
+  any retained step is an O(1) layer switch.
+* **Restart.**  ``restore_latest`` rebuilds params/opt/data-cursor from the
+  last *complete* generation (a crash mid-dump leaves the previous
+  generation intact — layers freeze atomically).
+* **Elastic.**  Checkpoints are host chunks, mesh-agnostic: restoring onto
+  a different device count / batch split reshards via device_put with the
+  new shardings (``reshard``).
+* **Straggler mitigation.**  A step-time watchdog flags outliers
+  (> factor × rolling median) and fires a mitigation callback (work
+  re-balance hook; simulated multi-worker harness in tests).
+* **Gradient compression.**  Optional int8 + error feedback on the
+  (cross-pod) gradient reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.deltafs import DeltaFS
+from repro.models.model import Model
+from .data import DataConfig, PackedStream
+from .optim import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    compress_grads,
+    decompress_grads,
+    error_feedback_init,
+)
+
+__all__ = ["TrainerConfig", "Trainer", "StragglerWatchdog"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    keep_ckpts: int = 3
+    microbatches: int = 1               # gradient accumulation
+    compress_grads: bool = False        # int8 + error feedback
+    donate: bool = False                # buffer donation (on-device training)
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 16
+
+
+class StragglerWatchdog:
+    """Flags steps slower than factor × rolling median; fires mitigation."""
+
+    def __init__(self, factor: float, window: int, on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.factor = factor
+        self.times: deque = deque(maxlen=window)
+        self.flagged: List[int] = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= 4:
+            med = float(np.median(self.times))
+            if dt > self.factor * med:
+                is_straggler = True
+                self.flagged.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt / med)
+        self.times.append(dt)
+        return is_straggler
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        opt_cfg: OptimizerConfig,
+        data_cfg: DataConfig,
+        trainer_cfg: TrainerConfig = TrainerConfig(),
+        *,
+        ckpt_fs: Optional[DeltaFS] = None,
+        mesh=None,
+        param_shardings=None,
+    ):
+        self.model = model
+        self.opt_cfg = dataclasses.replace(
+            opt_cfg,
+            moment_dtype="bfloat16" if model.cfg.opt_state_dtype == "bf16" else "float32",
+        )
+        self.data_cfg = data_cfg
+        self.cfg = trainer_cfg
+        self.fs = ckpt_fs or DeltaFS(chunk_bytes=1 << 20)
+        self.mesh = mesh
+        self.param_shardings = param_shardings
+        self.stream = PackedStream(data_cfg)
+        self.ckpt_index: Dict[int, Any] = {}      # step -> DeltaFS layer config
+        self._ckpt_threads: List[threading.Thread] = []
+        self._ckpt_lock = threading.Lock()
+        self.watchdog = StragglerWatchdog(trainer_cfg.straggler_factor, trainer_cfg.straggler_window)
+        self.metrics_log: List[Dict[str, float]] = []
+        self._build_step()
+
+    # ------------------------------------------------------------- step fn
+    def _build_step(self):
+        model, opt_cfg, tcfg = self.model, self.opt_cfg, self.cfg
+
+        def loss_of(params, batch):
+            loss, metrics = model.loss_fn(params, batch)
+            return loss, metrics
+
+        def train_step(params, opt_state, err_buf, batch):
+            if tcfg.microbatches > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((tcfg.microbatches, -1) + x.shape[1:]), batch
+                )
+
+                def acc(carry, mbatch):
+                    gsum, lsum = carry
+                    (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mbatch)
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(acc, (zeros, jnp.zeros(())), mb)
+                grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+                loss = lsum / tcfg.microbatches
+                metrics = {}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+
+            if tcfg.compress_grads:
+                comp, err_buf = compress_grads(grads, err_buf)
+                grads = decompress_grads(comp)
+
+            params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+            out_metrics = {"loss": loss, **opt_metrics}
+            return params, opt_state, err_buf, out_metrics
+
+        donate = (0, 1, 2) if tcfg.donate else ()
+        self.train_step = jax.jit(train_step, donate_argnums=donate)
+
+    # ----------------------------------------------------------------- init
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw_init(params, self.opt_cfg)
+        err_buf = (
+            error_feedback_init(params) if self.cfg.compress_grads else jnp.zeros(())
+        )
+        return params, opt_state, err_buf
+
+    # ------------------------------------------------------------------ run
+    def run(
+        self,
+        params,
+        opt_state,
+        err_buf,
+        *,
+        start_step: int = 0,
+        steps: Optional[int] = None,
+        fail_at: Optional[int] = None,       # fault-injection for tests
+    ):
+        n = steps if steps is not None else self.cfg.steps
+        step = start_step
+        while step < n:
+            t0 = time.perf_counter()
+            batch_np = self.stream.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            params, opt_state, err_buf, metrics = self.train_step(
+                params, opt_state, err_buf, batch
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.watchdog.observe(step, dt)
+            step += 1
+            if step % self.cfg.log_every == 0 or step == n:
+                self.metrics_log.append(
+                    {"step": step, "loss": float(metrics["loss"]), "dt": dt}
+                )
+            if self.cfg.ckpt_every and step % self.cfg.ckpt_every == 0:
+                self.checkpoint(step, params, opt_state)
+        self.wait_checkpoints()
+        return params, opt_state, err_buf, step
+
+    # ----------------------------------------------------------- checkpoint
+    def checkpoint(self, step: int, params, opt_state) -> None:
+        """Coupled async checkpoint of (model, optimizer, data cursor).
+
+        An HBM-side copy is dispatched inline (so the next donated step can't
+        clobber the snapshot); serialization + delta-encode runs off-thread,
+        masked by subsequent compute — the inference-masked-dump analogue.
+        """
+        snap_params = jax.tree.map(jnp.copy, params)
+        snap_opt = jax.tree.map(jnp.copy, opt_state)
+        stream_state = self.stream.state()
+
+        def serialize():
+            flat_p, _ = jax.tree_util.tree_flatten_with_path(snap_params)
+            flat_o, _ = jax.tree_util.tree_flatten_with_path(snap_opt)
+            with self._ckpt_lock:  # DeltaFS upper-layer writes must serialize
+                for path, leaf in flat_p:
+                    self.fs.write("ckpt/params/" + _pstr(path), np.asarray(leaf))
+                for path, leaf in flat_o:
+                    self.fs.write("ckpt/opt/" + _pstr(path), np.asarray(leaf))
+                for name, arr in stream_state.items():
+                    self.fs.write(f"ckpt/data/{name}", arr)
+                self.fs.write("ckpt/meta/step", np.asarray([step], np.int64))
+                config = self.fs.checkpoint()      # freeze: generation complete
+                self.ckpt_index[step] = config
+                self._prune()
+
+        th = threading.Thread(target=serialize, name=f"ckpt-{step}", daemon=True)
+        th.start()
+        self._ckpt_threads.append(th)
+
+    def _prune(self) -> None:
+        while len(self.ckpt_index) > self.cfg.keep_ckpts:
+            oldest = min(self.ckpt_index)
+            cfg = self.ckpt_index.pop(oldest)
+            self.fs.release_config(cfg)
+
+    def wait_checkpoints(self) -> None:
+        for th in self._ckpt_threads:
+            th.join(timeout=120.0)
+        self._ckpt_threads.clear()
+
+    # --------------------------------------------------------------- restore
+    def restore_latest(self, *, shardings=None):
+        """Rebuild (params, opt_state, stream) from the newest complete
+        generation; returns (params, opt_state, err_buf, step)."""
+        self.wait_checkpoints()
+        if not self.ckpt_index:
+            raise FileNotFoundError("no checkpoints")
+        step = max(self.ckpt_index)
+        self.fs.switch(self.ckpt_index[step])
+        ref_params, ref_opt, _ = jax.eval_shape(lambda s: self.init_state(s), 0)
+        params = self._read_tree("ckpt/params/", ref_params, shardings)
+        opt_state = self._read_tree("ckpt/opt/", ref_opt, None)
+        self.stream.restore(
+            {
+                "cursor": self.fs.read("ckpt/data/cursor"),
+                "buf": self.fs.read("ckpt/data/buf"),
+            }
+        )
+        err_buf = (
+            error_feedback_init(params) if self.cfg.compress_grads else jnp.zeros(())
+        )
+        return params, opt_state, err_buf, int(self.fs.read("ckpt/meta/step")[0])
+
+    def _read_tree(self, prefix: str, ref_tree, shardings):
+        flat_ref, treedef = jax.tree_util.tree_flatten_with_path(ref_tree)
+        leaves = []
+        flat_sh = treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat_ref)
+        for (path, ref), sh in zip(flat_ref, flat_sh):
+            host = self.fs.read(prefix + _pstr(path)).astype(ref.dtype)
+            host = host.reshape(ref.shape)
+            leaves.append(jax.device_put(host, sh) if sh is not None else jnp.asarray(host))
+        return treedef.unflatten(leaves)
+
+    # ------------------------------------------------------- disk persistence
+    def save_checkpoints(self, path: str) -> int:
+        """Persist all retained checkpoint generations to one file (chunks
+        deduplicated across generations).  Cross-process restart companion of
+        restore_latest."""
+        from repro.core.persist import save_store
+
+        self.wait_checkpoints()
+        return save_store(self.fs, {str(s): c for s, c in self.ckpt_index.items()}, path)
+
+    def load_checkpoints(self, path: str) -> None:
+        from repro.core.persist import load_store
+
+        fs, configs = load_store(path)
+        self.fs = fs
+        self.ckpt_index = {int(s): c for s, c in configs.items()}
+
+    # ---------------------------------------------------------------- elastic
+    def reshard(self, tree, new_shardings):
+        """Elastic restart onto a different mesh: host-roundtrip reshard."""
+        flat, treedef = jax.tree.flatten(tree)
+        flat_sh = treedef.flatten_up_to(new_shardings)
+        return treedef.unflatten(
+            [jax.device_put(np.asarray(l), s) if s is not None else l for l, s in zip(flat, flat_sh)]
+        )
+
+
+def _pstr(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (dryrun.py alone forces 512); make sure
+# no leaked XLA_FLAGS from a prior shell changes that.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,152 @@
+"""DeltaFS: layer semantics, O(1) rollback, lazy re-resolution, and a
+hypothesis state machine checking the overlay against a dict-of-snapshots
+reference model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deltafs import DeltaFS
+
+
+def _arr(seed, n=64):
+    return np.random.default_rng(seed).integers(0, 255, size=n).astype(np.uint8)
+
+
+def test_write_read_delete():
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(0))
+    np.testing.assert_array_equal(fs.read("a"), _arr(0))
+    fs.delete("a")
+    assert not fs.exists("a")
+    with pytest.raises(KeyError):
+        fs.read("a")
+
+
+def test_checkpoint_is_o1_metadata():
+    """Checkpoint must not copy data: physical bytes unchanged."""
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(1, 4096))
+    before = fs.store.stats.physical_bytes
+    cfg = fs.checkpoint()
+    assert fs.store.stats.physical_bytes == before
+    fs.release_config(cfg)
+
+
+def test_rollback_restores_exact_state():
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(1))
+    fs.write("b", _arr(2))
+    c1 = fs.checkpoint()
+    fs.write("a", _arr(3))
+    fs.delete("b")
+    fs.write("c", _arr(4))
+    c2 = fs.checkpoint()
+    fs.switch(c1)
+    np.testing.assert_array_equal(fs.read("a"), _arr(1))
+    np.testing.assert_array_equal(fs.read("b"), _arr(2))
+    assert not fs.exists("c")
+    fs.switch(c2)
+    np.testing.assert_array_equal(fs.read("a"), _arr(3))
+    assert not fs.exists("b")
+    assert fs.exists("c")
+
+
+def test_write_amplification_proportional_to_dirty_chunks():
+    """R2: unchanged chunks are shared with the parent generation."""
+    fs = DeltaFS(chunk_bytes=64)
+    base = np.zeros(64 * 100, np.uint8)          # 100 chunks
+    fs.write("f", base)
+    fs.checkpoint()
+    mod = base.copy()
+    mod[0] = 1                                    # dirty exactly one chunk
+    dirtied = fs.write("f", mod)
+    assert dirtied == 1
+    # physical growth ≈ one chunk
+    meta_old_bytes = 64
+    assert fs.store.stats.physical_bytes <= base.nbytes + 2 * meta_old_bytes
+
+
+def test_generation_counter_lazy_reresolve():
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(1))
+    fs.read("a")                                  # populate resolve cache
+    gen0 = fs.checkpoint_gen
+    cfg = fs.checkpoint()                         # bump generation
+    assert fs.checkpoint_gen == gen0 + 1
+    before = fs.lazy_reresolves
+    fs.read("a")                                  # stale cache -> slow path
+    assert fs.lazy_reresolves == before + 1
+    fs.read("a")                                  # fresh cache -> fast path
+    assert fs.lazy_reresolves == before + 1
+    fs.release_config(cfg)
+
+
+def test_release_config_frees_unshared_chunks():
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(1, 1024))
+    c1 = fs.checkpoint()
+    fs.write("a", _arr(2, 1024))                  # fully different content
+    c2 = fs.checkpoint()
+    phys_with_both = fs.store.stats.physical_bytes
+    fs.switch(c1)                                 # live stack no longer uses gen-2
+    fs.release_config(c2)                         # last ref to gen-2's layer
+    assert fs.store.stats.physical_bytes < phys_with_both
+    np.testing.assert_array_equal(fs.read("a"), _arr(1, 1024))
+    fs.release_config(c1)                         # still held by live stack: no-op free
+    np.testing.assert_array_equal(fs.read("a"), _arr(1, 1024))
+    fs.debug_validate()
+
+
+def test_abandoned_upper_released_on_switch():
+    fs = DeltaFS(chunk_bytes=16)
+    fs.write("a", _arr(1))
+    c1 = fs.checkpoint()
+    fs.write("junk", _arr(9, 4096))               # dirty, never checkpointed
+    before = fs.store.stats.physical_bytes
+    fs.switch(c1)                                 # rollback discards junk
+    assert fs.store.stats.physical_bytes < before
+    assert not fs.exists("junk")
+
+
+# ---------------------------------------------------------------------------
+# Property: random op sequences vs a snapshot-dict reference model
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("write"), st.integers(0, 4), st.integers(0, 1000)),
+        st.tuples(st.just("delete"), st.integers(0, 4), st.just(0)),
+        st.tuples(st.just("checkpoint"), st.just(0), st.just(0)),
+        st.tuples(st.just("rollback"), st.integers(0, 30), st.just(0)),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops_strategy)
+def test_deltafs_matches_reference_model(ops):
+    fs = DeltaFS(chunk_bytes=8)
+    model = {}                  # current key -> seed
+    snapshots = []              # list of (config, model-copy)
+    for op, k, seed in ops:
+        key = f"k{k}"
+        if op == "write":
+            fs.write(key, _arr(seed, 24))
+            model[key] = seed
+        elif op == "delete":
+            if key in model:
+                fs.delete(key)
+                del model[key]
+        elif op == "checkpoint":
+            snapshots.append((fs.checkpoint(), dict(model)))
+        elif op == "rollback" and snapshots:
+            cfg, snap = snapshots[seed % len(snapshots)]
+            fs.switch(cfg)
+            model = dict(snap)
+        # invariant: live view matches the model
+        assert sorted(fs.keys()) == sorted(model.keys())
+        for kk, ss in model.items():
+            np.testing.assert_array_equal(fs.read(kk), _arr(ss, 24))
+        fs.debug_validate()

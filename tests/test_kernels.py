@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------- paged attn
+PA_CASES = [
+    # B, KVH, G, D, page_size, P, max_pages, dtype
+    (1, 1, 1, 128, 16, 8, 2, jnp.float32),
+    (2, 2, 4, 128, 64, 16, 4, jnp.float32),
+    (3, 4, 2, 128, 32, 12, 3, jnp.float32),
+    (2, 1, 8, 256, 16, 8, 4, jnp.float32),        # MQA, gemma head_dim
+    (2, 2, 5, 128, 16, 8, 3, jnp.float32),        # odd group (qwen3 G=5)
+    (2, 2, 4, 64, 16, 8, 3, jnp.float32),         # musicgen head_dim
+    (2, 2, 4, 128, 64, 16, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,KVH,G,D,psz,P,maxp,dtype", PA_CASES)
+def test_paged_attention_sweep(B, KVH, G, D, psz, P, maxp, dtype):
+    q = _rand((B, KVH, G, D), dtype)
+    k = _rand((P, psz, KVH, D), dtype)
+    v = _rand((P, psz, KVH, D), dtype)
+    table = jnp.asarray(RNG.integers(0, P, size=(B, maxp)), jnp.int32)
+    seq_lens = jnp.asarray(RNG.integers(1, maxp * psz + 1, size=(B,)), jnp.int32)
+    out = ops.paged_attention(q, k, v, table, seq_lens)
+    want = ref.paged_attention_ref(q, k, v, table, seq_lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_paged_attention_seq_len_edge():
+    """seq_len exactly on a page boundary, and length-1."""
+    B, KVH, G, D, psz, P, maxp = 2, 1, 2, 128, 16, 6, 3
+    q = _rand((B, KVH, G, D), jnp.float32)
+    k = _rand((P, psz, KVH, D), jnp.float32)
+    v = _rand((P, psz, KVH, D), jnp.float32)
+    table = jnp.asarray(RNG.integers(0, P, size=(B, maxp)), jnp.int32)
+    for lens in ([psz, 1], [maxp * psz, psz - 1]):
+        seq_lens = jnp.asarray(lens, jnp.int32)
+        out = ops.paged_attention(q, k, v, table, seq_lens)
+        want = ref.paged_attention_ref(q, k, v, table, seq_lens)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- page copy
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("P,psz,KVH,D", [(8, 16, 2, 128), (12, 64, 1, 256), (6, 16, 4, 64)])
+def test_page_copy_sweep(P, psz, KVH, D, dtype):
+    pool = _rand((P, psz, KVH, D), jnp.float32).astype(dtype)
+    n = P // 2 - 1
+    perm = RNG.permutation(P)
+    src = jnp.asarray(perm[:n], jnp.int32)
+    dst = jnp.asarray(perm[n : 2 * n], jnp.int32)
+    got = ops.page_copy(pool, src, dst)
+    want = ref.page_copy_ref(pool, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- delta diff/apply
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("N,C", [(8, 128), (37, 256), (64, 512), (1, 128)])
+def test_delta_roundtrip_sweep(N, C, dtype):
+    old = _rand((N, C), jnp.float32).astype(dtype)
+    n_dirty = max(1, N // 3)
+    rows = jnp.asarray(RNG.choice(N, size=n_dirty, replace=False), jnp.int32)
+    new = old.at[rows].add(jnp.ones((n_dirty, C), dtype))
+    dirty = ops.delta_diff(old, new)
+    np.testing.assert_array_equal(np.asarray(dirty), np.asarray(ref.delta_diff_ref(old, new)))
+    cap = int(np.asarray(dirty).sum()) + 2
+    data, idx, count = ops.delta_compact(new, dirty, cap)
+    rebuilt = ops.delta_apply(old, data, idx)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(new))
+
+
+def test_delta_compact_overflow_drops():
+    """More dirty chunks than capacity: extras dropped, no corruption."""
+    old = jnp.zeros((16, 64), jnp.float32)
+    new = old + 1.0                       # all dirty
+    dirty = ops.delta_diff(old, new)
+    data, idx, count = ops.delta_compact(new, dirty, 4)
+    assert int(count) == 16               # true count reported
+    assert int((np.asarray(idx) >= 0).sum()) == 4
+    rebuilt = ops.delta_apply(old, data, idx)
+    # exactly 4 rows updated
+    assert int((np.asarray(rebuilt).sum(axis=1) > 0).sum()) == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 40),
+    st.integers(1, 8),
+    st.floats(0.0, 1.0),
+)
+def test_delta_roundtrip_property(n_chunks, c_scale, dirty_frac):
+    """encode(old→new) ∘ apply(old) == new for random dirt patterns."""
+    C = 64 * c_scale
+    rng = np.random.default_rng(n_chunks * 1000 + c_scale)
+    old = jnp.asarray(rng.standard_normal((n_chunks, C)), jnp.float32)
+    mask = rng.random(n_chunks) < dirty_frac
+    new = np.asarray(old).copy()
+    new[mask] += 1.0
+    new = jnp.asarray(new)
+    data, idx, count = ops.delta_encode(old, new, max_changed=n_chunks)
+    rebuilt = ops.delta_apply(old, data, idx)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(new))
+    assert int(count) == int(mask.sum())

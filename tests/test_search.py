@@ -1,0 +1,121 @@
+"""Search drivers: MCTS invariants, rollback determinism, fan-out scaling."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CowArrayState,
+    DeltaCR,
+    DeltaFS,
+    Sandbox,
+    StateManager,
+    reachability_gc,
+)
+from repro.search import (
+    ARCHETYPES,
+    MCTS,
+    MCTSConfig,
+    SyntheticAgentTask,
+    build_sandbox_state,
+    fork_n,
+    rollout_fanout,
+    staleness,
+    sync_gpu_occupation,
+)
+
+
+def _rig(archetype="tools", pool=16):
+    spec = ARCHETYPES[archetype]
+    fs = DeltaFS(chunk_bytes=4096)
+    proc = build_sandbox_state(spec, fs, seed=0)
+    cr = DeltaCR(
+        store=fs.store,
+        restore_fn=lambda p: CowArrayState({k: v.copy() for k, v in p.items()}),
+        template_pool_size=pool,
+    )
+    sm = StateManager(Sandbox(fs, proc), cr)
+    task = SyntheticAgentTask(spec)
+    sm.action_applier = lambda sb, act: task.replay_action(sb, act)
+    return sm, task, cr, fs
+
+
+def test_mcts_explores_and_backtracks():
+    sm, task, cr, fs = _rig()
+    mcts = MCTS(sm, task, MCTSConfig(iterations=25, seed=1))
+    st = mcts.run()
+    cr.wait_dumps()
+    assert st.iterations == 25
+    assert st.restores > 5                  # real backtracking happened
+    assert st.nodes > 10
+    assert st.fast_restores + st.slow_restores == st.restores
+    assert mcts.best_leaf() is not None
+    fs.debug_validate()
+
+
+def test_mcts_rollback_determinism():
+    """Restoring a node and replaying the same action gives identical state —
+    the paper's §2.2 determinism requirement."""
+    sm, task, cr, fs = _rig()
+    c0 = sm.checkpoint()
+    action = task.propose_actions(sm.sandbox, 7)[0]
+    task.apply_action(sm.sandbox, action)
+    heap_a = sm.sandbox.proc.get("heap_0").copy()
+    fs_a = sm.sandbox.fs.read("repo/file_0000").copy()
+    sm.restore(c0)
+    task.apply_action(sm.sandbox, action)
+    np.testing.assert_array_equal(heap_a, sm.sandbox.proc.get("heap_0"))
+    np.testing.assert_array_equal(fs_a, sm.sandbox.fs.read("repo/file_0000"))
+
+
+def test_mcts_lightweight_ratio():
+    """Read-only actions route to LW checkpoints (paper: 62% route to LW)."""
+    sm, task, cr, fs = _rig("sympy")        # readonly_prob = 0.75
+    mcts = MCTS(sm, task, MCTSConfig(iterations=30, seed=2))
+    st = mcts.run()
+    assert st.lw_checkpoints > 0
+    assert st.lw_checkpoints < st.checkpoints
+
+
+def test_mcts_with_gc_stays_correct():
+    sm, task, cr, fs = _rig(pool=4)
+    mcts = MCTS(sm, task, MCTSConfig(iterations=30, gc_every=10, seed=3))
+    st = mcts.run()
+    cr.wait_dumps()
+    # every live non-LW node is restorable after GC passes
+    for node in sm.live_nodes():
+        if not node.lightweight:
+            sm.restore(node.ckpt_id)
+    fs.debug_validate()
+
+
+def test_fork_n_scaling():
+    state = CowArrayState({"heap": np.zeros(1 << 18, np.float32)})
+    results = {}
+    for n in (1, 4, 16, 64):
+        children, res = fork_n(state, n)
+        results[n] = res
+        assert len(children) == n
+        for c in children:
+            c.release()
+    # sub-linear per-fork cost: p50 roughly flat with N
+    assert results[64].p50_ms < 50 * results[1].p50_ms + 1.0
+    assert results[64].forks_per_s > 0
+
+
+def test_rollout_fanout_rewards_and_teardown():
+    state = CowArrayState({"heap": np.zeros(1024, np.float32)})
+
+    def rollout(child, i):
+        child.mutate("heap", lambda h: h.__setitem__(0, float(i)))
+        return float(child.get("heap")[0])
+
+    rewards, res = rollout_fanout(state, 8, rollout)
+    assert rewards == [float(i) for i in range(8)]
+    # parent unaffected by any rollout (CoW isolation)
+    assert state.get("heap")[0] == 0.0
+
+
+def test_occupation_model():
+    # paper Fig 7c: DeltaBox ~0.95-0.97 vs E2B ~0.3
+    assert sync_gpu_occupation(0.05, 1.0, 1.0) > 0.95
+    assert sync_gpu_occupation(4.5, 1.0, 1.0) < 0.35
+    assert staleness(0.5, 1.0, 1.0) == pytest.approx(0.5)

@@ -1,0 +1,167 @@
+"""Serving runtime: paged vs dense equivalence, CoW fork semantics, refcount
+conservation, DeltaCR integration (PagedSession as ForkableState)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import DeltaCR
+from repro.models import Model
+from repro.serve import Engine, PagePool, PagedSession, SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def rig():
+    cfg = get_config("olmo-1b-tiny")
+    model = Model(cfg)
+    params = model.init(KEY)
+    pool = PagePool(cfg, num_pages=64, page_size=8, max_pages_per_session=16)
+    return cfg, model, params, pool
+
+
+def test_paged_matches_dense(rig):
+    cfg, model, params, pool = rig
+    eng = Engine(model, params, pool)
+    prompt = list(range(1, 11))
+    sess = eng.new_session(prompt)
+    got = eng.generate(sess, 5)
+    cache = model.init_cache(1, 64)
+    logits, cache = jax.jit(model.prefill)(params, jnp.asarray([prompt], jnp.int32), cache)
+    want, tok = [], int(np.argmax(np.asarray(logits[0])))
+    dec = jax.jit(model.decode_step)
+    for _ in range(5):
+        want.append(tok)
+        logits, cache = dec(params, jnp.asarray([tok], jnp.int32), cache)
+        tok = int(np.argmax(np.asarray(logits[0])))
+    assert got == want
+    sess.release()
+
+
+def test_fork_shares_pages_and_cow_isolates(rig):
+    cfg, model, params, pool = rig
+    eng = Engine(model, params, pool)
+    sess = eng.new_session([1, 2, 3, 4, 5])
+    free_before = pool.free_pages()
+    forks = [sess.fork() for _ in range(8)]
+    assert pool.free_pages() == free_before          # fork allocates nothing
+    # divergence: generating on a fork CoWs the shared tail page
+    a = eng.generate(sess, 4)
+    b = eng.generate(forks[0], 4)
+    assert a == b                                     # same state → same greedy tokens
+    assert pool.cow_copies >= 1
+    for f in forks:
+        f.release()
+    sess.release()
+
+
+def test_refcount_conservation(rig):
+    """Total page refs == sum over sessions of their table references."""
+    cfg, model, params, pool = rig
+    eng = Engine(model, params, pool)
+    baseline_refs = pool.refs.copy()
+    sessions = [eng.new_session([1, 2, 3, 4, 5, 6, 7, 8, 9])]
+    for _ in range(5):
+        sessions.append(sessions[-1].fork())
+    eng.step(sessions[:3])
+    expected = np.zeros_like(pool.refs)
+    for s in sessions:
+        for p in s.active_pages():
+            expected[p] += 1
+    live = pool.refs - baseline_refs
+    np.testing.assert_array_equal(live[1:], expected[1:])
+    for s in sessions:
+        s.release()
+    np.testing.assert_array_equal(pool.refs, baseline_refs)
+
+
+def test_pool_exhaustion_raises(rig):
+    cfg, model, params, pool = rig
+    tiny_pool = PagePool(cfg, num_pages=3, page_size=8, max_pages_per_session=16)
+    eng = Engine(model, params, tiny_pool)
+    with pytest.raises(MemoryError):
+        eng.new_session(list(range(40)))             # needs 5 pages, only 2 free
+
+
+def test_deltacr_integration_slow_path(rig):
+    """PagedSession round-trips through DeltaCR dump → slow restore."""
+    cfg, model, params, pool = rig
+    eng = Engine(model, params, pool)
+    sess = eng.new_session([5, 4, 3, 2, 1], SamplingParams(temperature=0.7, seed=9))
+    eng.generate(sess, 4)
+    cr = DeltaCR(
+        template_pool_size=1,
+        restore_fn=lambda payload: PagedSession.restore_from_payload(pool, payload),
+    )
+    cr.checkpoint(sess, 1, None)
+    tokens_at_ckpt = list(sess.tokens)
+    more_a = eng.generate(sess, 8)
+    # evict the template, force slow path
+    other = eng.new_session([9])
+    cr.checkpoint(other, 2, None)
+    assert not cr.has_template(1)
+    restored, path = cr.restore(1)
+    assert path == "slow"
+    assert restored.tokens == tokens_at_ckpt
+    # rollback determinism: the restored session replays the same tokens
+    more_b = eng.generate(restored, 8)
+    assert more_a == more_b
+    cr.shutdown()
+
+
+def test_session_dump_payload_roundtrip(rig):
+    cfg, model, params, pool = rig
+    eng = Engine(model, params, pool)
+    sess = eng.new_session([7, 7, 7])
+    eng.generate(sess, 3)
+    payload = sess.dump_payload()
+    clone = PagedSession.restore_from_payload(pool, payload)
+    assert clone.seq_len == sess.seq_len
+    assert clone.tokens == sess.tokens
+    # page contents equal (different physical pages)
+    for pos in range(sess.n_pages):
+        a = pool.gather_page(int(sess.table[pos]))
+        b = pool.gather_page(int(clone.table[pos]))
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+    clone.release()
+    sess.release()
+
+
+def test_scheduler_continuous_batching_and_suspension(rig):
+    """Continuous batching + DeltaCR-backed suspension under page pressure."""
+    from repro.core import DeltaCR
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+    cfg, model, params, _ = rig
+    pool = PagePool(cfg, num_pages=14, page_size=8, max_pages_per_session=8)
+    eng = Engine(model, params, pool)
+    cr = DeltaCR(
+        template_pool_size=8,
+        restore_fn=lambda p: PagedSession.restore_from_payload(pool, p),
+    )
+    sched = Scheduler(eng, cr, SchedulerConfig(max_batch=4, min_free_pages=2,
+                                               auto_suspend_free_pages=6))
+    sids = [sched.submit([1, 2, 3, 4, 5], SamplingParams(seed=i)) for i in range(4)]
+    for _ in range(6):
+        out = sched.step()
+        assert out
+    # page pressure: admitting more forces LRU suspension
+    more = [sched.submit([9, 8, 7], SamplingParams(seed=10 + i)) for i in range(3)]
+    assert sched.suspensions >= 1
+    suspended = [h.sid for h in sched.handles.values() if h.state == "suspended"]
+    assert suspended
+    # suspended sessions hold no pages but resume with identical state
+    target = suspended[0]
+    sched.resume(target)
+    h = sched.handles[target]
+    assert h.state == "active" and h.session is not None
+    # deterministic rollback: continue decoding fine
+    for _ in range(2):
+        sched.step()
+    for sid in list(sched.handles):
+        if sched.handles[sid].state != "finished":
+            sched.finish(sid)
+    cr.shutdown()
