@@ -19,6 +19,7 @@ def main() -> None:
         fig8_async_warm,
         fig9_write_amp,
         fig10_gc_lw,
+        fig11_dump_pipeline,
         roofline,
         table2_cr_latency,
         table3_fork_fanout,
@@ -34,6 +35,7 @@ def main() -> None:
         "fig8": fig8_async_warm.run,
         "fig9": fig9_write_amp.run,
         "fig10": fig10_gc_lw.run,
+        "fig11": fig11_dump_pipeline.run,
         "roofline": roofline.run,
     }
     selected = sys.argv[1:] or list(benches)

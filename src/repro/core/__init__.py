@@ -11,6 +11,15 @@ workloads: a transactional (durable, ephemeral) state pair built from
 * :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue).
 """
 from .chunk_store import ChunkStore, ChunkStoreStats
+from .delta_pipeline import (
+    ChunkedView,
+    DeltaDumpPipeline,
+    DeltaEncodable,
+    DeltaGeneration,
+    digest_encode_array,
+    mark_clean,
+    mark_unknown,
+)
 from .deltafs import DeltaFS, LayerConfig, TensorMeta
 from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
 from .gc import reachability_gc, recency_gc
@@ -21,6 +30,13 @@ from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
 __all__ = [
     "ChunkStore",
     "ChunkStoreStats",
+    "ChunkedView",
+    "DeltaDumpPipeline",
+    "DeltaEncodable",
+    "DeltaGeneration",
+    "digest_encode_array",
+    "mark_clean",
+    "mark_unknown",
     "DeltaFS",
     "LayerConfig",
     "TensorMeta",

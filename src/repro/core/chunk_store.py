@@ -16,6 +16,17 @@ Two sharing mechanisms:
   blake2b digest so *identical* payloads written independently collapse to
   one physical chunk (e.g. ``__pycache__`` regenerated after a rollback).
 
+Chunking convention: every stored tensor chunk is exactly ``chunk_bytes``
+long — partial tails are zero-padded and the real trailing pad is recorded
+per chunk, so digests are layout-stable across the host dump path and the
+device (Pallas) delta pipeline, and the two dedupe against each other.  The
+dedupe key is ``(digest, pad)``: identical padded bytes with different
+logical lengths never collapse.
+
+Producers that already hold a chunk's digest (the delta pipeline hashes each
+dirty chunk exactly once) store through :meth:`put_digested`, which skips
+re-hashing.
+
 The store is process-local and thread-safe; it is the "base storage"
 (Layer 1) of the paper's architecture.
 """
@@ -23,12 +34,47 @@ from __future__ import annotations
 
 import hashlib
 import threading
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, Optional, Tuple, Union
 
 import numpy as np
 
-__all__ = ["ChunkStore", "ChunkStoreStats"]
+__all__ = ["ChunkStore", "ChunkStoreStats", "chunk_digest", "iter_chunk_views"]
+
+DIGEST_BYTES = 16
+
+_Buffer = Union[bytes, bytearray, memoryview, np.ndarray]
+
+
+def chunk_digest(piece: _Buffer, pad: int = 0) -> bytes:
+    """blake2b-16 over ``piece`` plus ``pad`` trailing zero bytes.
+
+    Accepts any contiguous buffer (no copy); the digest matches the bytes a
+    padded chunk stores, so host memoryview chunking and device-compacted
+    rows hash identically.
+    """
+    h = hashlib.blake2b(digest_size=DIGEST_BYTES)
+    h.update(piece)
+    if pad:
+        h.update(bytes(pad))
+    return h.digest()
+
+
+def iter_chunk_views(raw: _Buffer, chunk_bytes: int) -> Iterator[Tuple[memoryview, int]]:
+    """Yield zero-copy ``(piece, pad)`` views over ``raw``.
+
+    Every chunk but the last is exactly ``chunk_bytes``; the last yields its
+    short view plus the trailing pad that completes it.  Empty input yields
+    one empty piece (a zero-length tensor still owns one chunk).
+    """
+    view = memoryview(raw).cast("B") if not isinstance(raw, memoryview) else raw.cast("B")
+    n = len(view)
+    if n == 0:
+        yield view[:0], 0
+        return
+    for off in range(0, n, chunk_bytes):
+        piece = view[off : off + chunk_bytes]
+        yield piece, chunk_bytes - len(piece) if len(piece) < chunk_bytes else 0
 
 
 @dataclass
@@ -52,7 +98,7 @@ class _Chunk:
     data: bytes
     refs: int = 1
     digest: Optional[bytes] = None
-    pad: int = 0  # trailing pad bytes (last chunk of a tensor)
+    pad: int = 0  # trailing zero-pad bytes (last chunk of a tensor)
 
 
 class ChunkStore:
@@ -70,30 +116,52 @@ class ChunkStore:
         self.dedupe = bool(dedupe)
         self._lock = threading.RLock()
         self._chunks: Dict[int, _Chunk] = {}
-        self._by_digest: Dict[bytes, int] = {}
+        self._by_digest: Dict[Tuple[bytes, int], int] = {}
         self._next_id = 1
         self.stats = ChunkStoreStats()
 
     # ------------------------------------------------------------------ put
     def put(self, data: bytes, *, pad: int = 0) -> int:
         """Store one chunk, returning its id with one reference held."""
+        digest = None
+        if self.dedupe:
+            digest = hashlib.blake2b(data, digest_size=DIGEST_BYTES).digest()
+        return self._put_locked(data, digest, pad)
+
+    def put_digested(
+        self,
+        data: Union[bytes, Callable[[], bytes]],
+        *,
+        digest: bytes,
+        pad: int = 0,
+    ) -> int:
+        """Store a chunk whose digest the caller already computed.
+
+        The delta-dump hot path hashes each dirty chunk exactly once; this
+        entry point reuses that digest for dedupe instead of re-hashing.
+        ``data`` may be a thunk so a dedupe hit never materializes bytes.
+        """
+        return self._put_locked(data, digest, pad)
+
+    def _put_locked(self, data, digest: Optional[bytes], pad: int) -> int:
         with self._lock:
             self.stats.puts += 1
-            digest = None
-            if self.dedupe:
-                digest = hashlib.blake2b(data, digest_size=16).digest()
-                hit = self._by_digest.get(digest)
+            if digest is not None and self.dedupe:
+                hit = self._by_digest.get((digest, pad))
                 if hit is not None:
                     chunk = self._chunks[hit]
                     chunk.refs += 1
                     self.stats.dedup_hits += 1
-                    self.stats.logical_bytes += len(data)
+                    self.stats.logical_bytes += len(chunk.data)
                     return hit
+            if callable(data):
+                data = data()
+            data = bytes(data)
             cid = self._next_id
             self._next_id += 1
             self._chunks[cid] = _Chunk(data=data, digest=digest, pad=pad)
-            if digest is not None:
-                self._by_digest[digest] = cid
+            if digest is not None and self.dedupe:
+                self._by_digest[(digest, pad)] = cid
             self.stats.chunks_alive += 1
             self.stats.physical_bytes += len(data)
             self.stats.logical_bytes += len(data)
@@ -112,12 +180,27 @@ class ChunkStore:
         with self._lock:
             return self._chunks[cid].pad
 
+    def digest_of(self, cid: int) -> Optional[bytes]:
+        with self._lock:
+            return self._chunks[cid].digest
+
     # ----------------------------------------------------------- refcounting
     def incref(self, cid: int, n: int = 1) -> None:
         with self._lock:
             chunk = self._chunks[cid]
             chunk.refs += n
             self.stats.logical_bytes += n * len(chunk.data)
+
+    def incref_many(self, cids) -> None:
+        """Batch incref under one lock acquisition (metadata-reuse hot path)."""
+        with self._lock:
+            chunks = self._chunks
+            logical = 0
+            for cid in cids:
+                chunk = chunks[cid]
+                chunk.refs += 1
+                logical += len(chunk.data)
+            self.stats.logical_bytes += logical
 
     def decref(self, cid: int, n: int = 1) -> None:
         with self._lock:
@@ -128,7 +211,7 @@ class ChunkStore:
             self.stats.logical_bytes -= n * len(chunk.data)
             if chunk.refs == 0:
                 if chunk.digest is not None:
-                    self._by_digest.pop(chunk.digest, None)
+                    self._by_digest.pop((chunk.digest, chunk.pad), None)
                 self.stats.chunks_alive -= 1
                 self.stats.physical_bytes -= len(chunk.data)
                 del self._chunks[cid]
@@ -148,23 +231,34 @@ class ChunkStore:
     # ------------------------------------------------------- tensor helpers
     def put_array(self, arr: np.ndarray) -> tuple[int, ...]:
         """Chunk a host array's byte view; returns the chunk-id tuple."""
-        raw = np.ascontiguousarray(arr).tobytes()
-        return self.put_bytes(raw)
+        flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        return self.put_bytes(flat)
 
-    def put_bytes(self, raw: bytes) -> tuple[int, ...]:
-        cb = self.chunk_bytes
+    def put_bytes(self, raw: _Buffer) -> tuple[int, ...]:
+        """Zero-copy chunking: pieces are memoryview slices, hashed in place;
+        bytes materialize (zero-padded) only for chunks the store must keep."""
         ids = []
-        for off in range(0, max(len(raw), 1), cb):
-            piece = raw[off : off + cb]
-            ids.append(self.put(piece))
+        for piece, pad in iter_chunk_views(raw, self.chunk_bytes):
+            digest = chunk_digest(piece, pad) if self.dedupe else None
+            data = lambda p=piece, q=pad: bytes(p) + bytes(q)
+            if digest is None:
+                ids.append(self.put(data(), pad=pad))
+            else:
+                ids.append(self.put_digested(data, digest=digest, pad=pad))
         return tuple(ids)
 
     def get_bytes(self, ids: tuple[int, ...]) -> bytes:
-        return b"".join(self.get(cid) for cid in ids)
+        out = []
+        with self._lock:
+            for cid in ids:
+                chunk = self._chunks[cid]
+                out.append(chunk.data[: len(chunk.data) - chunk.pad] if chunk.pad else chunk.data)
+        return b"".join(out)
 
     def get_array(
         self, ids: tuple[int, ...], shape: tuple[int, ...], dtype: np.dtype
     ) -> np.ndarray:
         raw = self.get_bytes(ids)
-        flat = np.frombuffer(raw, dtype=dtype)
+        nbytes = int(np.dtype(dtype).itemsize * int(np.prod(shape, dtype=np.int64)))
+        flat = np.frombuffer(raw[:nbytes], dtype=dtype)
         return flat.reshape(shape).copy()

@@ -1,0 +1,701 @@
+"""Device-to-store delta dump pipeline — the O(delta) checkpoint hot path.
+
+The paper's Key Insight is that a sandbox should "duplicate only the changes
+between consecutive checkpoints".  This module is where that happens for the
+DeltaCR dump path:
+
+* :class:`DeltaEncodable` extends the ``ForkableState`` protocol with
+  :meth:`delta_generation`: a per-checkpoint *chunked view* of the state —
+  fixed-size byte-chunk grids per tensor (zero-copy on host, bitcast on
+  device) plus a dirty-key hint (keys written since the last checkpoint).
+* :class:`DeltaDumpPipeline` diffs each generation against the previous one
+  with ``kernels.delta_encode`` (dirty-chunk bitmap + fixed-capacity
+  compaction in one jit) and moves **only the compacted dirty chunks**
+  device→host.  Unchanged chunks are re-referenced from the parent image at
+  the metadata level; keys the dirty hint clears are re-referenced without
+  materializing a single byte.
+* Slow-path restore runs in reverse: reconstruct from the nearest
+  *materialized* base generation plus a ``kernels.delta_apply`` scatter of
+  the image's dirty chunks fetched from the store — instead of concatenating
+  and copying every chunk of every tensor.
+
+Cost model per checkpoint (S = state bytes, Δ = changed bytes):
+
+=====================  =============  ==========================
+stage                  legacy          pipeline
+=====================  =============  ==========================
+serialize              O(S) host copy  0 (views are zero-copy)
+parent compare         O(S) bytes ==   O(S) on-device diff (no PCIe)
+device→host            O(S)            O(Δ) compacted chunks
+hash + store           O(S)            O(Δ), hashed exactly once
+=====================  =============  ==========================
+
+Generations are retained in a small LRU (each anchored by the dump's own
+fork, so CoW keeps the viewed pages immutable); a cache miss falls back to
+the digest path, which is still O(S) hashing but O(Δ) store writes.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, FrozenSet, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from .chunk_store import ChunkStore, chunk_digest
+from .deltafs import TensorMeta, digest_encode_array  # noqa: F401 (re-export)
+
+
+_DTYPE_STR: Dict[Any, str] = {}
+
+
+def dtype_str(dt) -> str:
+    """Cached str(dtype) — surprisingly hot when a namespace has hundreds of
+    tensors per checkpoint."""
+    s = _DTYPE_STR.get(dt)
+    if s is None:
+        s = _DTYPE_STR[dt] = str(dt)
+    return s
+
+
+def _host_dirty_rows(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """Row indices where two (N, C) uint8 grids differ.
+
+    Compares at the widest word dividing the row — an 8× smaller boolean
+    intermediate than a per-byte compare."""
+    n, c = old.shape
+    for w in (np.uint64, np.uint32, np.uint16):
+        if c % np.dtype(w).itemsize == 0:
+            old = old.view(w)
+            new = new.view(w)
+            break
+    return np.flatnonzero((old != new).any(axis=1)).astype(np.int64)
+
+
+_ON_TPU: Optional[bool] = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        import jax
+
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+__all__ = [
+    "ChunkedView",
+    "DeltaDumpPipeline",
+    "DeltaEncodable",
+    "DeltaGeneration",
+    "digest_encode_array",
+    "mark_clean",
+    "mark_unknown",
+]
+
+
+# --------------------------------------------------------------------------
+# Chunked views + generation protocol
+# --------------------------------------------------------------------------
+@dataclass
+class ChunkedView:
+    """A tensor as an ``(n_chunks, chunk_bytes)`` uint8 grid, built lazily.
+
+    ``grid_fn`` materializes the grid (numpy for host state, a jax array for
+    device state); it is only invoked when the key is actually dirty, so a
+    clean tensor costs nothing.  The final row is zero-padded by
+    ``trailing_pad`` bytes, matching the store's chunk convention — host and
+    device chunks therefore hash identically and dedupe against each other.
+    """
+
+    shape: Tuple[int, ...]
+    dtype: str                       # logical tensor dtype (e.g. "float32")
+    nbytes: int
+    chunk_bytes: int                 # bytes per grid row
+    n_chunks: int
+    trailing_pad: int
+    grid_fn: Callable[[], Any] = field(repr=False)
+    _grid: Any = field(default=None, repr=False)
+
+    @property
+    def grid(self) -> Any:
+        if self._grid is None:
+            self._grid = self.grid_fn()
+        return self._grid
+
+    def drop_cached_device_grid(self) -> None:
+        """Free a cached *device* grid (re-gathered on next use; the anchor
+        fork keeps the source pages alive).  Host grids are zero-copy views
+        and stay cached."""
+        if self._grid is not None and not isinstance(self._grid, np.ndarray):
+            self._grid = None
+
+    @staticmethod
+    def from_host_array(arr: np.ndarray, chunk_bytes: int) -> "ChunkedView":
+        """Zero-copy byte-grid over a contiguous host array (copy only for a
+        padded tail row).  Requires ``arr.nbytes > 0``."""
+        arr = np.ascontiguousarray(arr)
+        nbytes = int(arr.nbytes)
+        assert nbytes > 0, "empty tensors go through the digest path"
+        n_chunks = -(-nbytes // chunk_bytes)
+        pad = n_chunks * chunk_bytes - nbytes
+
+        def build() -> np.ndarray:
+            flat = arr.reshape(-1).view(np.uint8)
+            if pad == 0:
+                return flat.reshape(n_chunks, chunk_bytes)
+            grid = np.zeros((n_chunks, chunk_bytes), np.uint8)
+            grid.reshape(-1)[:nbytes] = flat
+            return grid
+
+        return ChunkedView(
+            shape=tuple(arr.shape),
+            dtype=dtype_str(arr.dtype),
+            nbytes=nbytes,
+            chunk_bytes=chunk_bytes,
+            n_chunks=n_chunks,
+            trailing_pad=pad,
+            grid_fn=build,
+        )
+
+
+@dataclass
+class DeltaGeneration:
+    """One checkpoint's chunked snapshot, as produced by a DeltaEncodable.
+
+    ``views`` are the kernel-diffable tensors; ``extras`` are small or
+    irregular tensors that go through the per-chunk digest path.
+    ``dirty_keys`` is the superset of keys that may differ from the parent
+    generation (None = unknown → everything is treated as dirty).
+    """
+
+    views: Dict[str, ChunkedView] = field(default_factory=dict)
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+    dirty_keys: Optional[FrozenSet[str]] = None
+
+    def is_dirty(self, key: str) -> bool:
+        return self.dirty_keys is None or key in self.dirty_keys
+
+
+@runtime_checkable
+class DeltaEncodable(Protocol):
+    """ForkableState that can expose per-generation chunked views."""
+
+    def fork(self) -> "DeltaEncodable": ...
+    def release(self) -> None: ...
+    def warm(self) -> None: ...
+    def dump_payload(self) -> Dict[str, np.ndarray]: ...
+    def delta_generation(self, chunk_bytes: int) -> DeltaGeneration: ...
+
+
+# -- dirty-tracking duck helpers (states opt in by implementing the methods)
+def mark_clean(state: Any, base_ckpt: Optional[int] = None) -> None:
+    """Reset write tracking: the state is bit-identical to checkpoint
+    ``base_ckpt``, and a dump whose parent is that same checkpoint may treat
+    the tracked write set as exact.  The hint is *keyed* to the base — a
+    dump against any other parent must ignore it (see dirty_base)."""
+    fn = getattr(state, "reset_dirty_tracking", None)
+    if fn is not None:
+        fn(base_ckpt)
+
+
+def mark_unknown(state: Any) -> None:
+    """Invalidate write tracking: the state's lineage no longer matches the
+    checkpoint the next dump will delta against (e.g. a transient checkpoint
+    was dropped), so every key must be treated as dirty."""
+    fn = getattr(state, "invalidate_dirty_tracking", None)
+    if fn is not None:
+        fn()
+
+
+def dirty_base(state: Any) -> Optional[int]:
+    """The checkpoint id the state's write tracking is relative to, or None
+    when tracking is invalid/unanchored (treat everything as dirty)."""
+    fn = getattr(state, "dirty_tracking_base", None)
+    return fn() if fn is not None else None
+
+
+# --------------------------------------------------------------------------
+# Pipeline
+# --------------------------------------------------------------------------
+@dataclass
+class _GenRecord:
+    image_id: int
+    views: Dict[str, ChunkedView]
+    anchor: Optional[Any]            # fork keeping the viewed memory immutable
+    pins: int = 0                    # in-flight encode/decode users
+    dead: bool = False               # evicted; release anchor when unpinned
+
+    def release(self) -> None:
+        if self.anchor is not None:
+            try:
+                self.anchor.release()
+            except Exception:
+                pass
+            self.anchor = None
+
+
+@dataclass
+class EncodeResult:
+    entries: Dict[str, TensorMeta]
+    dirtied: int
+    clean_keys: int = 0              # metadata-level reuse (no bytes touched)
+    kernel_keys: int = 0             # diffed on device via delta_encode
+    full_keys: int = 0               # full materialization (new/overflow)
+
+
+class DeltaDumpPipeline:
+    """Coordinates delta_encode dumps and delta_apply restores for one store."""
+
+    def __init__(
+        self,
+        store: ChunkStore,
+        *,
+        capacity_frac: float = 0.5,
+        max_generations: int = 4,
+    ):
+        self.store = store
+        self.capacity_frac = float(capacity_frac)
+        self.max_generations = int(max_generations)
+        self._gens: "OrderedDict[int, _GenRecord]" = OrderedDict()
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------ gen cache
+    #
+    # Records are *pinned* while an encode/decode is reading their (lazy)
+    # grids: eviction/replacement marks a pinned record dead and its anchor
+    # is only released when the last reader unpins — otherwise a concurrent
+    # restore could free the anchored pages mid-diff and corrupt the base.
+    def record_for(self, image_id: Optional[int]) -> Optional[_GenRecord]:
+        """Pinned lookup; pair every non-None return with release_record()."""
+        if image_id is None:
+            return None
+        with self._lock:
+            rec = self._gens.get(image_id)
+            if rec is not None:
+                rec.pins += 1
+                self._gens.move_to_end(image_id)
+            return rec
+
+    def release_record(self, rec: Optional[_GenRecord]) -> None:
+        if rec is None:
+            return
+        with self._lock:
+            rec.pins -= 1
+            releasable = rec.dead and rec.pins == 0
+        if releasable:
+            rec.release()
+
+    def _retire_locked(self, rec: _GenRecord, out: list) -> None:
+        rec.dead = True
+        if rec.pins == 0:
+            out.append(rec)
+
+    def register(
+        self, image_id: int, views: Dict[str, ChunkedView], anchor: Optional[Any]
+    ) -> None:
+        """Retain this image's generation as a future diff/restore base."""
+        releasable: list = []
+        with self._lock:
+            old = self._gens.pop(image_id, None)
+            if old is not None:
+                self._retire_locked(old, releasable)
+            self._gens[image_id] = _GenRecord(image_id=image_id, views=views, anchor=anchor)
+            while len(self._gens) > self.max_generations:
+                _, rec = self._gens.popitem(last=False)
+                self._retire_locked(rec, releasable)
+        for rec in releasable:
+            rec.release()
+
+    def evict(self, image_id: int) -> None:
+        releasable: list = []
+        with self._lock:
+            rec = self._gens.pop(image_id, None)
+            if rec is not None:
+                self._retire_locked(rec, releasable)
+        for rec in releasable:
+            rec.release()
+
+    def clear(self) -> None:
+        releasable: list = []
+        with self._lock:
+            for rec in self._gens.values():
+                self._retire_locked(rec, releasable)
+            self._gens.clear()
+        for rec in releasable:
+            rec.release()
+
+    # --------------------------------------------------------------- encode
+    def encode_generation(
+        self, gen: DeltaGeneration, parent_image: Optional[Any]
+    ) -> EncodeResult:
+        """Build the image entries for one generation (dump-worker thread)."""
+        res = EncodeResult(entries={}, dirtied=0)
+        parent_entries = parent_image.entries if parent_image is not None else {}
+        parent_rec = self.record_for(parent_image.image_id) if parent_image is not None else None
+        try:
+            return self._encode_with_parent(gen, parent_entries, parent_rec, res)
+        finally:
+            # device grids materialized for this diff are O(state) on-device
+            # copies — free them; the anchors re-gather lazily next time
+            for view in gen.views.values():
+                view.drop_cached_device_grid()
+            if parent_rec is not None:
+                for view in parent_rec.views.values():
+                    view.drop_cached_device_grid()
+            self.release_record(parent_rec)
+
+    def _encode_with_parent(
+        self,
+        gen: DeltaGeneration,
+        parent_entries: Dict[str, TensorMeta],
+        parent_rec: Optional[_GenRecord],
+        res: "EncodeResult",
+    ) -> "EncodeResult":
+        from repro.kernels import ops as kops
+        import jax.numpy as jnp
+
+        store = self.store
+        for key, view in gen.views.items():
+            pm = parent_entries.get(key)
+            # NOTE: the kernel path does not require parent digests — its
+            # dirty knowledge comes from the generation grids, and decode
+            # detects dirty chunks by id inequality.
+            pm_ok = pm is not None and pm.dtype == view.dtype
+            # --- clean key: metadata-level re-reference, zero bytes moved
+            if pm_ok and pm.shape == view.shape and not gen.is_dirty(key):
+                store.incref_many(pm.chunk_ids)
+                res.entries[key] = pm
+                res.clean_keys += 1
+                continue
+            # --- kernel path: on-device diff + compaction vs parent grid
+            base = parent_rec.views.get(key) if parent_rec is not None else None
+            if (
+                pm_ok
+                and base is not None
+                and base.chunk_bytes == view.chunk_bytes
+                and len(pm.chunk_ids) == base.n_chunks
+            ):
+                # a padded parent tail row only compares against an identical
+                # layout (same row count + pad); otherwise exclude it
+                if base.n_chunks == view.n_chunks and base.trailing_pad == view.trailing_pad:
+                    comparable = base.n_chunks
+                else:
+                    comparable = base.n_chunks - (1 if base.trailing_pad else 0)
+                K = min(view.n_chunks, comparable)
+                if K > 0:
+                    cap = self._capacity(K)
+                    old_grid, new_grid = base.grid, view.grid
+                    if (
+                        isinstance(old_grid, np.ndarray)
+                        and isinstance(new_grid, np.ndarray)
+                        and not _on_tpu()
+                    ):
+                        # Host grids off-TPU: a vectorized numpy compare IS
+                        # the delta kernel here — routing 2×K×C bytes
+                        # through the device would cost more than the diff.
+                        # The result is exact, so the fixed-capacity limit
+                        # (a kernel-compaction artifact) does not apply.
+                        hit = _host_dirty_rows(old_grid[:K], new_grid[:K])
+                        count, idx_np, data_np = len(hit), hit, new_grid[hit]
+                        usable = True
+                    else:
+                        # pow2-pad the row count so delta_encode compiles
+                        # once per size class, not per chunk count (a
+                        # growing KV cache changes K every few steps); the
+                        # identical zero pad rows can never read as dirty
+                        K2 = 1 << (K - 1).bit_length()
+                        cap = self._capacity(K2)
+                        old_j = jnp.asarray(old_grid)[:K]
+                        new_j = jnp.asarray(new_grid)[:K]
+                        if K2 != K:
+                            pad_rows = ((0, K2 - K), (0, 0))
+                            old_j = jnp.pad(old_j, pad_rows)
+                            new_j = jnp.pad(new_j, pad_rows)
+                        data, idx, count = kops.delta_encode(old_j, new_j, cap)
+                        count = int(count)
+                        idx_np, data_np = np.asarray(idx), np.asarray(data)
+                        usable = count <= cap
+                    if usable:
+                        meta, n_dirty = self._assemble_kernel_meta(
+                            view, pm, K, data_np, idx_np
+                        )
+                        res.entries[key] = meta
+                        res.dirtied += n_dirty
+                        res.kernel_keys += 1
+                        continue
+                    # capacity overflow: fall through to the full chunk set
+            # --- full path: materialize the grid, digest-delta every row
+            meta, n_dirty = self._encode_full_grid(view, pm if pm_ok else None)
+            res.entries[key] = meta
+            res.dirtied += n_dirty
+            res.full_keys += 1
+
+        for key, arr in gen.extras.items():
+            pm = parent_entries.get(key)
+            if (
+                pm is not None
+                and pm.shape == tuple(np.shape(arr))
+                and pm.dtype == str(np.asarray(arr).dtype)
+                and not gen.is_dirty(key)
+            ):
+                store.incref_many(pm.chunk_ids)
+                res.entries[key] = pm
+                res.clean_keys += 1
+                continue
+            meta, n_dirty = digest_encode_array(store, np.asarray(arr), pm)
+            res.entries[key] = meta
+            res.dirtied += n_dirty
+        return res
+
+    def _capacity(self, n_chunks: int) -> int:
+        """Fixed compaction capacity, pow2-rounded to bound jit recompiles."""
+        target = max(1, int(np.ceil(n_chunks * self.capacity_frac)))
+        return min(n_chunks, 1 << (target - 1).bit_length())
+
+    def _assemble_kernel_meta(
+        self,
+        view: ChunkedView,
+        pm: TensorMeta,
+        K: int,
+        data: np.ndarray,
+        idx: np.ndarray,
+    ) -> Tuple[TensorMeta, int]:
+        """Combine compacted dirty rows with parent references."""
+        store = self.store
+        dirty_rows: Dict[int, np.ndarray] = {}
+        for j in range(idx.shape[0]):
+            i = int(idx[j])
+            if i >= 0:
+                dirty_rows[i] = data[j]
+        tail: Optional[np.ndarray] = None
+        if view.n_chunks > K:  # grown rows: all dirty, one host fetch
+            tail = np.asarray(view.grid[K:])
+        # Hash only when the store dedupes on content (the digest is the
+        # dedupe key): the kernel already proved these rows dirty, so the
+        # hash buys nothing else, and dropping it keeps the hot path at
+        # compare+memcpy speed.  Digests are all-or-nothing per entry.
+        with_digests = store.dedupe and len(pm.digests) == len(pm.chunk_ids)
+        ids = []
+        digests = []
+        dirtied = 0
+        for i in range(view.n_chunks):
+            row = dirty_rows.get(i)
+            if row is None and i >= K:
+                row = tail[i - K]
+            if row is None:  # clean: re-reference the parent's chunk
+                store.incref(pm.chunk_ids[i])
+                ids.append(pm.chunk_ids[i])
+                if with_digests:
+                    digests.append(pm.digests[i])
+                continue
+            pad = view.trailing_pad if i == view.n_chunks - 1 else 0
+            row_bytes = np.ascontiguousarray(row).view(np.uint8).reshape(-1)
+            if with_digests:
+                digest = chunk_digest(row_bytes, 0)  # rows are already padded
+                ids.append(
+                    store.put_digested(lambda r=row_bytes: r.tobytes(), digest=digest, pad=pad)
+                )
+                digests.append(digest)
+            else:
+                ids.append(store.put(row_bytes.tobytes(), pad=pad))
+            dirtied += 1
+        return (
+            TensorMeta(
+                shape=view.shape,
+                dtype=view.dtype,
+                chunk_ids=tuple(ids),
+                digests=tuple(digests) if with_digests else (),
+                trailing_pad=view.trailing_pad,
+            ),
+            dirtied,
+        )
+
+    def _encode_full_grid(
+        self, view: ChunkedView, pm: Optional[TensorMeta]
+    ) -> Tuple[TensorMeta, int]:
+        grid = np.asarray(view.grid)
+        prev_ids = pm.chunk_ids if pm is not None and pm.shape == view.shape else ()
+        prev_digests = pm.digests if pm is not None and pm.shape == view.shape else ()
+        store = self.store
+        with_digests = store.dedupe      # digests exist to key content dedupe
+        ids = []
+        digests = []
+        dirtied = 0
+        for i in range(view.n_chunks):
+            row = grid[i]
+            digest = chunk_digest(row, 0) if with_digests else None
+            if i < len(prev_ids):
+                if digest is not None and i < len(prev_digests):
+                    same = prev_digests[i] == digest
+                else:  # digest-less entry or store: full byte compare
+                    same = store.get(prev_ids[i]) == row.tobytes()
+                if same:
+                    store.incref(prev_ids[i])
+                    ids.append(prev_ids[i])
+                    if digest is not None:
+                        digests.append(digest)
+                    continue
+            pad = view.trailing_pad if i == view.n_chunks - 1 else 0
+            if digest is not None:
+                ids.append(store.put_digested(lambda r=row: r.tobytes(), digest=digest, pad=pad))
+                digests.append(digest)
+            else:
+                ids.append(store.put(row.tobytes(), pad=pad))
+            dirtied += 1
+        return (
+            TensorMeta(
+                shape=view.shape,
+                dtype=view.dtype,
+                chunk_ids=tuple(ids),
+                digests=tuple(digests) if with_digests else (),
+                trailing_pad=view.trailing_pad,
+            ),
+            dirtied,
+        )
+
+    # --------------------------------------------------------------- decode
+    def decode(
+        self, image: Any, parent_image: Optional[Any]
+    ) -> Dict[str, np.ndarray]:
+        """Rebuild a dump image's payload.
+
+        Tensors whose parent generation is still materialized are rebuilt as
+        base grid + ``delta_apply`` scatter of only the chunks whose ids
+        differ from the parent's; everything else falls back to a full chunk
+        concatenation.  The rebuilt generation is registered so subsequent
+        restores (and dumps of its children) stay O(delta).
+        """
+        parent_rec = self.record_for(parent_image.image_id) if parent_image is not None else None
+        try:
+            payload, new_views = self._decode_with_base(image, parent_image, parent_rec)
+        finally:
+            self.release_record(parent_rec)
+        self.register(image.image_id, new_views, anchor=None)
+        return payload
+
+    def _decode_with_base(
+        self, image: Any, parent_image: Optional[Any], parent_rec: Optional[_GenRecord]
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, ChunkedView]]:
+        from repro.kernels import ops as kops
+        import jax.numpy as jnp
+
+        store = self.store
+        payload: Dict[str, np.ndarray] = {}
+        new_views: Dict[str, ChunkedView] = {}
+        for name, meta in image.entries.items():
+            grid_np: Optional[np.ndarray] = None
+            base = parent_rec.views.get(name) if parent_rec is not None else None
+            pm = parent_image.entries.get(name) if parent_image is not None else None
+            if (
+                base is not None
+                and pm is not None
+                and len(pm.chunk_ids) == base.n_chunks
+                and meta.dtype == pm.dtype
+                and self._rows_match(meta, base.chunk_bytes)
+            ):
+                N = len(meta.chunk_ids)
+                dirty = [
+                    i
+                    for i in range(N)
+                    if i >= len(pm.chunk_ids) or meta.chunk_ids[i] != pm.chunk_ids[i]
+                ]
+                if isinstance(base.grid, np.ndarray) and not _on_tpu():
+                    # host base off-TPU: a numpy scatter is the delta-apply
+                    # kernel here (same cost argument as the encode path —
+                    # the jax round-trip would copy the full base twice)
+                    grid_np = np.zeros((N, base.chunk_bytes), np.uint8)
+                    k = min(N, base.n_chunks)
+                    grid_np[:k] = base.grid[:k]
+                    for i in dirty:
+                        grid_np[i] = np.frombuffer(store.get(meta.chunk_ids[i]), np.uint8)
+                else:
+                    base_grid = jnp.asarray(base.grid)
+                    if base.n_chunks < N:
+                        base_grid = jnp.zeros((N, base.chunk_bytes), jnp.uint8).at[
+                            : base.n_chunks
+                        ].set(base_grid)
+                    elif base.n_chunks > N:
+                        base_grid = base_grid[:N]
+                    if dirty:
+                        # pow2-pad the scatter rows (idx -1 = no-op in the
+                        # kernel) so delta_apply compiles per geometry, not
+                        # per dirty count
+                        M = 1 << (len(dirty) - 1).bit_length()
+                        rows = np.zeros((M, base.chunk_bytes), np.uint8)
+                        idx = np.full((M,), -1, np.int32)
+                        for j, i in enumerate(dirty):
+                            rows[j] = np.frombuffer(store.get(meta.chunk_ids[i]), np.uint8)
+                            idx[j] = i
+                        grid_np = np.asarray(
+                            kops.delta_apply(base_grid, jnp.asarray(rows), jnp.asarray(idx))
+                        )
+                    else:
+                        grid_np = np.asarray(base_grid)
+                payload[name] = self._grid_to_array(grid_np, meta)
+            else:
+                payload[name] = store.get_array(
+                    meta.chunk_ids, meta.shape, np.dtype(meta.dtype)
+                )
+            # register the rebuilt tensor as a future base
+            row_bytes = (
+                base.chunk_bytes
+                if grid_np is not None
+                else len(store.get(meta.chunk_ids[0])) if meta.chunk_ids else 0
+            )
+            if row_bytes > 0 and payload[name].nbytes > 0:
+                if grid_np is not None:
+                    view = ChunkedView(
+                        shape=meta.shape,
+                        dtype=meta.dtype,
+                        nbytes=payload[name].nbytes,
+                        chunk_bytes=row_bytes,
+                        n_chunks=grid_np.shape[0],
+                        trailing_pad=meta.trailing_pad,
+                        grid_fn=lambda g=grid_np: g,
+                    )
+                else:
+                    view = self._view_from_array(payload[name], meta, row_bytes)
+                if view is not None:
+                    new_views[name] = view
+        return payload, new_views
+
+    @staticmethod
+    def _rows_match(meta: TensorMeta, row_bytes: int) -> bool:
+        """Image chunking must align with the base grid's row layout."""
+        n = len(meta.chunk_ids)
+        return n > 0 and n * row_bytes == meta.nbytes + meta.trailing_pad
+
+    @staticmethod
+    def _grid_to_array(grid: np.ndarray, meta: TensorMeta) -> np.ndarray:
+        buf = np.ascontiguousarray(grid).reshape(-1)[: meta.nbytes].copy()
+        return buf.view(np.dtype(meta.dtype)).reshape(meta.shape)
+
+    @staticmethod
+    def _view_from_array(
+        arr: np.ndarray, meta: TensorMeta, row_bytes: int
+    ) -> Optional[ChunkedView]:
+        n = len(meta.chunk_ids)
+        if n * row_bytes != meta.nbytes + meta.trailing_pad:
+            return None
+        # Eager copy, twice over: (a) the caller's restore_fn owns (and may
+        # mutate) the payload array after decode returns, so a lazy view
+        # would alias it; (b) a store-backed lazy rebuild would race
+        # drop_checkpoint's chunk decrefs on records still pinned by an
+        # in-flight dump.  Cost is bounded: at most max_generations decoded
+        # states stay resident, and MCTS re-injects templates so decode
+        # registrations are rare.
+        grid = np.zeros((n, row_bytes), np.uint8)
+        grid.reshape(-1)[: meta.nbytes] = (
+            np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        )
+        return ChunkedView(
+            shape=meta.shape,
+            dtype=meta.dtype,
+            nbytes=meta.nbytes,
+            chunk_bytes=row_bytes,
+            n_chunks=n,
+            trailing_pad=meta.trailing_pad,
+            grid_fn=lambda g=grid: g,
+        )

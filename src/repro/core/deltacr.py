@@ -17,16 +17,20 @@ two co-designed paths:
 * **Async dump (durable slow path).**  Concurrently, the template's payload
   is serialized to the chunk store on a single-worker background thread (the
   CRIU-dump-to-tmpfs analogue), *delta-encoded* against the parent
-  checkpoint's image: unchanged chunks are re-referenced, so dump bytes are
-  proportional to the inter-checkpoint delta.  The dump is masked by the LLM
-  inference window — the caller never blocks on it.
+  checkpoint's image.  States implementing :class:`~.delta_pipeline.DeltaEncodable`
+  go through the :class:`~.delta_pipeline.DeltaDumpPipeline`: an on-device
+  ``kernels.delta_encode`` diff + compaction so only the compacted dirty
+  chunks ever cross device→host, untouched tensors are re-referenced at the
+  metadata level, and dump cost is O(inter-checkpoint delta).  Other states
+  use the per-chunk digest path (hash once, 16-byte parent compare).  The
+  dump is masked by the LLM inference window — the caller never blocks on it.
 
 * **Async-warm.**  After a fork, ``warm()`` runs on a background thread to
   pre-privatize the pages the session will write next (the CoW-fault
   absorption thread of §4.2.2).
 
 States plug in through the :class:`ForkableState` protocol; ``CowArrayState``
-is the host-side reference implementation and ``serve.kvcache.KVCacheState``
+is the host-side reference implementation and ``serve.kvcache.PagedSession``
 the device-side one.
 """
 from __future__ import annotations
@@ -36,11 +40,20 @@ import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import Any, Callable, Dict, Optional, Protocol, Set, Tuple, runtime_checkable
 
 import numpy as np
 
 from .chunk_store import ChunkStore
+from .delta_pipeline import (
+    ChunkedView,
+    DeltaDumpPipeline,
+    DeltaGeneration,
+    digest_encode_array,
+    dirty_base,
+    mark_clean,
+    mark_unknown,
+)
 from .deltafs import TensorMeta
 
 __all__ = [
@@ -80,6 +93,12 @@ class CowArrayState:
     the declared hot set so later writes find them private — the async-warm
     analogue.  Used for RL environment state and as the benchmark archetype
     substrate.
+
+    Write tracking: the keys written since this clone's lineage was last
+    marked clean (a checkpoint or restore) feed the delta pipeline's
+    dirty-key hint, so untouched tensors are re-referenced at the metadata
+    level without ever materializing their bytes.  ``None`` means unknown
+    (everything is treated as dirty) — always safe, never required.
     """
 
     def __init__(
@@ -98,6 +117,8 @@ class CowArrayState:
         self.cow_faults = 0           # inline (critical-path) CoW copies
         self.warmed_copies = 0        # copies absorbed by async-warm
         self._released = False
+        self._dirty: Optional[Set[str]] = None   # None = unknown lineage
+        self._dirty_base: Optional[int] = None   # ckpt the set is relative to
 
     # -- reads ---------------------------------------------------------
     def get(self, key: str) -> np.ndarray:
@@ -119,7 +140,12 @@ class CowArrayState:
                 else:
                     self.cow_faults += 1
 
+    def _note_write(self, key: str) -> None:
+        if self._dirty is not None:
+            self._dirty.add(key)
+
     def set(self, key: str, value: np.ndarray) -> None:
+        self._note_write(key)
         if key in self._arrays:
             self._privatize(key)
             self._arrays[key] = np.asarray(value)
@@ -129,8 +155,21 @@ class CowArrayState:
 
     def mutate(self, key: str, fn: Callable[[np.ndarray], None]) -> None:
         """In-place mutation with a CoW fault if the array is shared."""
+        self._note_write(key)
         self._privatize(key)
         fn(self._arrays[key])
+
+    # -- dirty tracking --------------------------------------------------
+    def reset_dirty_tracking(self, base_ckpt: Optional[int] = None) -> None:
+        self._dirty = set()
+        self._dirty_base = base_ckpt
+
+    def invalidate_dirty_tracking(self) -> None:
+        self._dirty = None
+        self._dirty_base = None
+
+    def dirty_tracking_base(self) -> Optional[int]:
+        return self._dirty_base if self._dirty is not None else None
 
     # -- ForkableState ---------------------------------------------------
     def fork(self) -> "CowArrayState":
@@ -145,6 +184,8 @@ class CowArrayState:
         clone.cow_faults = 0
         clone.warmed_copies = 0
         clone._released = False
+        clone._dirty = None if self._dirty is None else set(self._dirty)
+        clone._dirty_base = self._dirty_base
         return clone
 
     def release(self) -> None:
@@ -164,6 +205,20 @@ class CowArrayState:
 
     def dump_payload(self) -> Dict[str, np.ndarray]:
         return {k: np.ascontiguousarray(v) for k, v in self._arrays.items()}
+
+    # -- DeltaEncodable --------------------------------------------------
+    def delta_generation(self, chunk_bytes: int) -> DeltaGeneration:
+        """Chunked views for multi-chunk arrays, digest path for the rest."""
+        views: Dict[str, ChunkedView] = {}
+        extras: Dict[str, np.ndarray] = {}
+        for key, arr in self._arrays.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.nbytes >= chunk_bytes:
+                views[key] = ChunkedView.from_host_array(arr, chunk_bytes)
+            else:
+                extras[key] = arr
+        dirty = None if self._dirty is None else frozenset(self._dirty)
+        return DeltaGeneration(views=views, extras=extras, dirty_keys=dirty)
 
     # -- footprint accounting (Table 3 analogue) -------------------------
     def resident_bytes(self) -> int:
@@ -197,6 +252,7 @@ class DumpImage:
     dirtied_chunks: int
     dump_bytes: int          # physical bytes this image added
     wall_ms: float
+    mode: str = "digest"     # "delta" | "digest" | "legacy"
 
 
 class DeltaCRStats:
@@ -207,6 +263,11 @@ class DeltaCRStats:
         self.fast_restores = 0
         self.slow_restores = 0
         self.evictions = 0
+        # pipeline accounting
+        self.delta_dumps = 0          # dumps through the kernel pipeline
+        self.clean_keys = 0           # tensors re-referenced metadata-only
+        self.kernel_keys = 0          # tensors diffed on device
+        self.full_keys = 0            # tensors fully materialized
         self.lock = threading.Lock()
 
 
@@ -214,7 +275,17 @@ class DeltaCRStats:
 # DeltaCR
 # --------------------------------------------------------------------------
 class DeltaCR:
-    """Coordinates the template pool and async delta dumps for one sandbox."""
+    """Coordinates the template pool and async delta dumps for one sandbox.
+
+    ``dump_mode`` selects the serialization strategy:
+
+    * ``"auto"``  — delta pipeline for :class:`DeltaEncodable` states
+      (on-device diff, O(delta) device→host), digest path otherwise.
+    * ``"digest"`` — per-chunk digest delta (hash once, 16-byte parent
+      compare); no kernels.
+    * ``"legacy"`` — the original full-serialize path (``tobytes`` + full
+      byte comparison per chunk); kept as the benchmark baseline.
+    """
 
     def __init__(
         self,
@@ -224,11 +295,28 @@ class DeltaCR:
         restore_fn: Optional[Callable[[Dict[str, np.ndarray]], ForkableState]] = None,
         async_warm: bool = True,
         chunk_bytes: int = 64 * 1024,
+        dump_mode: str = "auto",
+        pipeline: Optional[DeltaDumpPipeline] = None,
+        capacity_frac: float = 0.5,
+        max_generations: int = 4,
     ):
-        self.store = store or ChunkStore(chunk_bytes=chunk_bytes)
+        if dump_mode not in ("auto", "digest", "legacy"):
+            raise ValueError(f"unknown dump_mode {dump_mode!r}")
+        # NOTE: explicit None check — an *empty* ChunkStore is falsy (len 0),
+        # and `store or ChunkStore(...)` would silently split the caller off
+        # onto a private store.
+        self.store = store if store is not None else ChunkStore(chunk_bytes=chunk_bytes)
         self.template_pool_size = int(template_pool_size)
         self.restore_fn = restore_fn
         self.async_warm = async_warm
+        self.dump_mode = dump_mode
+        self.pipeline = pipeline
+        if self.pipeline is None and dump_mode == "auto":
+            self.pipeline = DeltaDumpPipeline(
+                self.store,
+                capacity_frac=capacity_frac,
+                max_generations=max_generations,
+            )
         # Single-worker pool, like the paper's GSD dump thread.
         self._dump_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-dump")
         self._warm_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-warm")
@@ -261,6 +349,13 @@ class DeltaCR:
                 # pool template before the background dump runs, and a dump
                 # source must survive until serialization completes.
                 dump_src = template.fork()
+                # The dirty-key hint is only valid relative to the checkpoint
+                # it was reset at.  A *branch* dump (parent differs from the
+                # session's tracking base, e.g. re-checkpointing from an
+                # older tree node) must treat every key as dirty, or clean
+                # keys would wrongly re-reference the branch parent's chunks.
+                if dirty_base(dump_src) != parent_ckpt:
+                    mark_unknown(dump_src)
                 # The parent image is resolved *inside* the worker: the dump
                 # queue is single-worker FIFO, so the parent dump has always
                 # completed by the time this task runs (never blocks).
@@ -269,6 +364,10 @@ class DeltaCR:
                 self._images[ckpt_id] = fut
             self._admit_template(ckpt_id, template)
             self._parents[ckpt_id] = parent_ckpt
+        # The session is now bit-identical to checkpoint ckpt_id: its write
+        # tracking restarts, keyed to ckpt_id, so the *next* dump's
+        # dirty-key hint is exact iff it dumps against this checkpoint.
+        mark_clean(state, ckpt_id)
 
     def _admit_template(self, ckpt_id: int, template: ForkableState) -> None:
         self._templates[ckpt_id] = template
@@ -279,6 +378,7 @@ class DeltaCR:
             with self.stats.lock:
                 self.stats.evictions += 1
 
+    # ------------------------------------------------------------ dump path
     def _do_dump(self, dump_src: ForkableState, parent_fut: Optional[Future]) -> DumpImage:
         parent: Optional[DumpImage] = None
         if parent_fut is not None:
@@ -287,13 +387,78 @@ class DeltaCR:
             except Exception:
                 parent = None  # parent dump failed: fall back to a full image
         t0 = time.perf_counter()
-        try:
-            payload = dump_src.dump_payload()
-        finally:
-            dump_src.release()
+        bytes_before = self.store.stats.bytes_written
         entries: Dict[str, TensorMeta] = {}
         dirtied = 0
-        bytes_before = self.store.stats.bytes_written
+        mode = self.dump_mode
+        anchor_views: Optional[Dict[str, ChunkedView]] = None
+        clean = kernel = full = 0
+        try:
+            use_pipeline = (
+                self.dump_mode == "auto"
+                and self.pipeline is not None
+                and hasattr(dump_src, "delta_generation")
+            )
+            if use_pipeline:
+                mode = "delta"
+                gen = dump_src.delta_generation(self.store.chunk_bytes)
+                res = self.pipeline.encode_generation(gen, parent)
+                entries, dirtied = res.entries, res.dirtied
+                clean, kernel, full = res.clean_keys, res.kernel_keys, res.full_keys
+                anchor_views = gen.views
+            elif self.dump_mode == "legacy":
+                entries, dirtied = self._legacy_encode(dump_src.dump_payload(), parent)
+            else:
+                mode = "digest"
+                for name, arr in dump_src.dump_payload().items():
+                    pm = parent.entries.get(name) if parent is not None else None
+                    meta, n_dirty = digest_encode_array(self.store, arr, pm)
+                    entries[name] = meta
+                    dirtied += n_dirty
+        except Exception:
+            dump_src.release()
+            raise
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            image_id = self._next_image_id
+            self._next_image_id += 1
+        image = DumpImage(
+            image_id=image_id,
+            parent_id=parent.image_id if parent else None,
+            entries=entries,
+            dirtied_chunks=dirtied,
+            dump_bytes=self.store.stats.bytes_written - bytes_before,
+            wall_ms=wall_ms,
+            mode=mode,
+        )
+        if anchor_views is not None:
+            # The dump fork anchors this generation's (lazy) device/host
+            # views so the next checkpoint diffs against them in place; the
+            # pipeline's LRU releases it.
+            assert self.pipeline is not None
+            self.pipeline.register(image_id, anchor_views, anchor=dump_src)
+        else:
+            dump_src.release()
+        with self._lock:
+            self._image_by_id[image_id] = image
+        with self.stats.lock:
+            self.stats.dumps += 1
+            self.stats.dump_dirty_chunks += dirtied
+            self.stats.dump_bytes += image.dump_bytes
+            if mode == "delta":
+                self.stats.delta_dumps += 1
+            self.stats.clean_keys += clean
+            self.stats.kernel_keys += kernel
+            self.stats.full_keys += full
+        return image
+
+    def _legacy_encode(
+        self, payload: Dict[str, np.ndarray], parent: Optional[DumpImage]
+    ) -> Tuple[Dict[str, TensorMeta], int]:
+        """The seed's O(full state) path: serialize everything, byte-compare
+        every chunk against the parent.  Benchmark baseline only."""
+        entries: Dict[str, TensorMeta] = {}
+        dirtied = 0
         cb = self.store.chunk_bytes
         for name, arr in payload.items():
             arr = np.ascontiguousarray(arr)
@@ -313,25 +478,7 @@ class DeltaCR:
                     ids.append(self.store.put(piece))
                     dirtied += 1
             entries[name] = TensorMeta(tuple(arr.shape), str(arr.dtype), tuple(ids))
-        wall_ms = (time.perf_counter() - t0) * 1e3
-        with self._lock:
-            image_id = self._next_image_id
-            self._next_image_id += 1
-        image = DumpImage(
-            image_id=image_id,
-            parent_id=parent.image_id if parent else None,
-            entries=entries,
-            dirtied_chunks=dirtied,
-            dump_bytes=self.store.stats.bytes_written - bytes_before,
-            wall_ms=wall_ms,
-        )
-        with self._lock:
-            self._image_by_id[image_id] = image
-        with self.stats.lock:
-            self.stats.dumps += 1
-            self.stats.dump_dirty_chunks += dirtied
-            self.stats.dump_bytes += image.dump_bytes
-        return image
+        return entries, dirtied
 
     # -------------------------------------------------------------- restore
     def has_template(self, ckpt_id: int) -> bool:
@@ -342,8 +489,9 @@ class DeltaCR:
         """Return a fresh session state for ``ckpt_id``.
 
         Fast path: fork the live template (O(metadata)).  Slow path: rebuild
-        from the dump image, then re-inject the rebuilt state as a template
-        so future restores of this node take the fast path.
+        from the dump image — via ``kernels.delta_apply`` over the nearest
+        materialized base generation when available — then re-inject the
+        rebuilt state as a template so future restores take the fast path.
         """
         with self._lock:
             template = self._templates.get(ckpt_id)
@@ -352,6 +500,9 @@ class DeltaCR:
                 new_state = template.fork()
                 with self.stats.lock:
                     self.stats.fast_restores += 1
+                # Lineage no longer matches whatever the caller dumps against
+                # next; StateManager re-marks clean when it knows the parent.
+                mark_unknown(new_state)
                 if self.async_warm:
                     self._warm_executor.submit(self._safe_warm, new_state)
                 return new_state, "fast"
@@ -361,11 +512,17 @@ class DeltaCR:
         image = fut.result()  # may wait for the background dump to land
         if self.restore_fn is None:
             raise RuntimeError("slow-path restore requires restore_fn")
-        payload = {
-            name: self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
-            for name, meta in image.entries.items()
-        }
+        if self.pipeline is not None:
+            with self._lock:
+                parent_image = self._image_by_id.get(image.parent_id)
+            payload = self.pipeline.decode(image, parent_image)
+        else:
+            payload = {
+                name: self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
+                for name, meta in image.entries.items()
+            }
         rebuilt = self.restore_fn(payload)
+        mark_unknown(rebuilt)
         with self._lock:
             # Re-inject as template (paper: restored process is frozen and
             # returned to the pool).
@@ -416,6 +573,8 @@ class DeltaCR:
                 image = fut.result(timeout=60.0)
             except Exception:
                 return
+            if self.pipeline is not None:
+                self.pipeline.evict(image.image_id)
             for meta in image.entries.values():
                 for cid in meta.chunk_ids:
                     self.store.decref(cid)
@@ -429,3 +588,5 @@ class DeltaCR:
     def shutdown(self) -> None:
         self._dump_executor.shutdown(wait=True)
         self._warm_executor.shutdown(wait=True)
+        if self.pipeline is not None:
+            self.pipeline.clear()

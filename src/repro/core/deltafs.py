@@ -28,9 +28,9 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
-from .chunk_store import ChunkStore
+from .chunk_store import ChunkStore, chunk_digest, iter_chunk_views
 
-__all__ = ["DeltaFS", "LayerConfig", "TensorMeta"]
+__all__ = ["DeltaFS", "LayerConfig", "TensorMeta", "digest_encode_array"]
 
 LayerConfig = Tuple[int, ...]  # bottom-to-top tuple of frozen layer ids
 
@@ -40,10 +40,76 @@ class TensorMeta:
     shape: Tuple[int, ...]
     dtype: str
     chunk_ids: Tuple[int, ...]
+    # Per-chunk blake2b-16 digests (over the zero-padded chunk bytes) and
+    # the final chunk's trailing pad.  Digests make parent matching on the
+    # dump/write paths a 16-byte compare instead of a full bytes equality;
+    # ``digests == ()`` marks metadata from older images (byte-compare
+    # fallback).
+    digests: Tuple[bytes, ...] = ()
+    trailing_pad: int = 0
 
     @property
     def nbytes(self) -> int:
         return int(np.dtype(self.dtype).itemsize * int(np.prod(self.shape, dtype=np.int64)))
+
+
+def digest_encode_array(
+    store: ChunkStore, arr: np.ndarray, prev: Optional[TensorMeta]
+) -> Tuple[TensorMeta, int]:
+    """Delta-encode a host tensor against its parent entry by chunk digest.
+
+    The one digest-delta loop shared by DeltaFS copy-ups and the DeltaCR
+    digest dump path: zero-copy memoryview chunking, each chunk hashed
+    exactly once, parent matching as a 16-byte digest compare (falling back
+    to a full byte compare against pre-digest metadata), bytes materialized
+    only for chunks the store must keep.  Returns (meta, dirtied_chunks).
+    """
+    arr = np.ascontiguousarray(arr)
+    raw = arr.reshape(-1).view(np.uint8)
+    prev_ids: Tuple[int, ...] = ()
+    prev_digests: Tuple[bytes, ...] = ()
+    if (
+        prev is not None
+        and prev.shape == tuple(arr.shape)
+        and prev.dtype == str(arr.dtype)
+    ):
+        prev_ids = prev.chunk_ids
+        if len(prev.digests) == len(prev_ids):
+            prev_digests = prev.digests
+    ids = []
+    digests = []
+    dirtied = 0
+    trailing_pad = 0
+    for idx, (piece, pad) in enumerate(iter_chunk_views(raw, store.chunk_bytes)):
+        trailing_pad = pad
+        digest = chunk_digest(piece, pad)
+        if idx < len(prev_ids):
+            if prev_digests:
+                same = prev_digests[idx] == digest
+            else:  # pre-digest metadata: full byte compare
+                same = store.get(prev_ids[idx]) == bytes(piece) + bytes(pad)
+            if same:
+                store.incref(prev_ids[idx])
+                ids.append(prev_ids[idx])
+                digests.append(digest)
+                continue
+        ids.append(
+            store.put_digested(
+                lambda p=piece, q=pad: bytes(p) + bytes(q), digest=digest, pad=pad
+            )
+        )
+        digests.append(digest)
+        dirtied += 1
+    return (
+        TensorMeta(
+            shape=tuple(arr.shape),
+            dtype=str(arr.dtype),
+            chunk_ids=tuple(ids),
+            digests=tuple(digests),
+            trailing_pad=trailing_pad,
+        ),
+        dirtied,
+    )
 
 
 @dataclass
@@ -59,7 +125,8 @@ class DeltaFS:
     """Layered copy-on-write tensor filesystem with O(1) checkpoint/rollback."""
 
     def __init__(self, store: Optional[ChunkStore] = None, *, chunk_bytes: int = 64 * 1024):
-        self.store = store or ChunkStore(chunk_bytes=chunk_bytes)
+        # explicit None check: an empty ChunkStore is falsy (len 0)
+        self.store = store if store is not None else ChunkStore(chunk_bytes=chunk_bytes)
         self._lock = threading.RLock()
         self._layers: Dict[int, _Layer] = {}
         self._next_layer_id = 1
@@ -167,36 +234,13 @@ class DeltaFS:
         value = np.ascontiguousarray(value)
         with self._lock:
             prev = self._resolve(key)
-            raw = value.tobytes()
-            cb = self.store.chunk_bytes
-            prev_ids: Tuple[int, ...] = ()
-            prev_raw: Optional[bytes] = None
-            if (
-                prev is not None
-                and prev.shape == value.shape
-                and prev.dtype == str(value.dtype)
-            ):
-                prev_ids = prev.chunk_ids
-            new_ids = []
-            dirtied = 0
-            for idx, off in enumerate(range(0, max(len(raw), 1), cb)):
-                piece = raw[off : off + cb]
-                if idx < len(prev_ids):
-                    old = self.store.get(prev_ids[idx])
-                    if old == piece:
-                        self.store.incref(prev_ids[idx])
-                        new_ids.append(prev_ids[idx])
-                        continue
-                new_ids.append(self.store.put(piece))
-                dirtied += 1
+            meta, dirtied = digest_encode_array(self.store, value, prev)
             upper = self._layers[self.upper_id]
             old_entry = upper.entries.get(key)
             if old_entry is not None:  # second write to same key in this generation
                 for cid in old_entry.chunk_ids:
                     self.store.decref(cid)
-            upper.entries[key] = TensorMeta(
-                shape=tuple(value.shape), dtype=str(value.dtype), chunk_ids=tuple(new_ids)
-            )
+            upper.entries[key] = meta
             upper.tombstones.discard(key)
             self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, False)
             return dirtied

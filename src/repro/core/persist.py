@@ -23,7 +23,11 @@ from .deltafs import DeltaFS, LayerConfig, TensorMeta
 
 __all__ = ["save_store", "load_store"]
 
-_FORMAT_VERSION = 1
+# v2: chunks stored zero-padded with a chunk_pads table; entries carry
+# per-chunk digests + trailing_pad.  v1 archives (unpadded, digest-less)
+# still load; pre-v2 readers reject v2 archives at the version gate.
+_FORMAT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
@@ -44,6 +48,8 @@ def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
                 "shape": list(meta.shape),
                 "dtype": meta.dtype,
                 "chunk_ids": list(meta.chunk_ids),
+                "digests": [d.hex() for d in meta.digests],
+                "trailing_pad": meta.trailing_pad,
             }
             for cid in meta.chunk_ids:
                 if cid not in seen:
@@ -64,6 +70,7 @@ def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
         "version": _FORMAT_VERSION,
         "chunk_bytes": fs.store.chunk_bytes,
         "chunk_ids": chunk_ids,
+        "chunk_pads": [fs.store.pad_of(cid) for cid in chunk_ids],
         "layers": layers_meta,
         "configs": {name: list(cfg) for name, cfg in configs.items()},
     }
@@ -86,14 +93,15 @@ def load_store(path: str) -> Tuple[DeltaFS, Dict[str, LayerConfig]]:
         manifest = json.loads(bytes(z["manifest"]).decode())
         data = z["data"]
         offsets = z["offsets"]
-    assert manifest["version"] == _FORMAT_VERSION
+    assert manifest["version"] in _READABLE_VERSIONS, manifest["version"]
     fs = DeltaFS(chunk_bytes=int(manifest["chunk_bytes"]))
-    # restore chunks (new ids)
+    # restore chunks (new ids); pads default 0 for pre-pad archives
+    pads = manifest.get("chunk_pads") or [0] * len(manifest["chunk_ids"])
     cid_map: Dict[int, int] = {}
     raw = data.tobytes()
     for i, old_cid in enumerate(manifest["chunk_ids"]):
         blob = raw[int(offsets[i]) : int(offsets[i + 1])]
-        cid_map[int(old_cid)] = fs.store.put(blob)
+        cid_map[int(old_cid)] = fs.store.put(blob, pad=int(pads[i]))
     # rebuild layers bottom-up in id order, as frozen lowers
     lid_map: Dict[int, int] = {}
     for old_lid_s, meta in sorted(manifest["layers"].items(), key=lambda kv: int(kv[0])):
@@ -106,7 +114,11 @@ def load_store(path: str) -> Tuple[DeltaFS, Dict[str, LayerConfig]]:
                 fs.store.incref(new_cid)
                 ids.append(new_cid)
             layer.entries[key] = TensorMeta(
-                shape=tuple(ent["shape"]), dtype=ent["dtype"], chunk_ids=tuple(ids)
+                shape=tuple(ent["shape"]),
+                dtype=ent["dtype"],
+                chunk_ids=tuple(ids),
+                digests=tuple(bytes.fromhex(d) for d in ent.get("digests", [])),
+                trailing_pad=int(ent.get("trailing_pad", 0)),
             )
         layer.tombstones.update(meta["tombstones"])
         lid_map[int(old_lid_s)] = layer.layer_id

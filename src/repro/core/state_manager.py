@@ -27,6 +27,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .delta_pipeline import mark_clean, mark_unknown
 from .deltacr import DeltaCR, ForkableState
 from .deltafs import DeltaFS, LayerConfig
 from .npd import InferenceProxy
@@ -222,6 +223,11 @@ class StateManager:
             # 3. DeltaCR fast/slow path.
             new_state, path = self.deltacr.restore(full)
             self.sandbox.proc = new_state
+            # The new session is bit-identical to checkpoint ``full``, which
+            # is exactly what its next dump will delta against — write
+            # tracking restarts here, keyed to ``full``, so the dirty-key
+            # hint is exact (LW replay below goes through tracked writes).
+            mark_clean(new_state, full)
 
             # 4. LW replay: re-apply recorded read-only actions on top.
             mode = path
@@ -261,6 +267,10 @@ class StateManager:
 
     def _drop_transient(self, ckpt_id: int) -> None:
         with self._lock:
+            # The session now descends from the *dropped* node, so its write
+            # tracking no longer describes the delta against the parent the
+            # next checkpoint will dump against — treat everything as dirty.
+            mark_unknown(self.sandbox.proc)
             node = self.nodes[ckpt_id]
             assert not node.children, "transient checkpoint grew children"
             self.reclaim(ckpt_id)

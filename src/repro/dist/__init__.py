@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules for the production meshes."""
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,9 +1,20 @@
 """Jit'd public entry points for the Pallas kernels.
 
-On TPU the Pallas kernels compile natively; everywhere else (this CPU
-container) they execute in ``interpret=True`` mode, which runs the kernel
-body in Python for bit-correct validation against ``ref.py``.  Set
-``REPRO_FORCE_REF=1`` to bypass Pallas entirely (pure-jnp fallback).
+Backend routing, decided at trace time:
+
+* **TPU** — the Pallas kernels compile natively.
+* **CPU/GPU with ``REPRO_INTERPRET=1``** — the kernels execute in
+  ``interpret=True`` mode, which runs the kernel body in Python for
+  bit-correct validation against ``ref.py`` (this is what the test suite
+  pins; see ``tests/conftest.py``).
+* **CPU/GPU otherwise** — the pure-jnp oracles from ``ref.py``: identical
+  semantics, XLA-vectorized, and orders of magnitude faster than the Python
+  interpreter.  This is what production hot paths (the DeltaCR dump
+  pipeline, benchmarks) get on non-TPU hosts.
+* ``REPRO_FORCE_REF=1`` — bypass Pallas entirely everywhere (escape hatch).
+
+The env vars are read when a call first traces for a given shape; set them
+before the first call (the benchmarks and conftest both do).
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ __all__ = [
     "delta_diff",
     "delta_apply",
     "delta_compact",
+    "delta_encode",
     "use_interpret",
 ]
 
@@ -39,9 +51,16 @@ def _force_ref() -> bool:
     return os.environ.get("REPRO_FORCE_REF", "0") == "1"
 
 
+def _use_kernel() -> bool:
+    """Native Pallas on TPU; interpret-mode Pallas only when pinned."""
+    if _force_ref():
+        return False
+    return jax.default_backend() == "tpu" or os.environ.get("REPRO_INTERPRET", "0") == "1"
+
+
 @functools.partial(jax.jit, static_argnames=("scale",))
 def _paged_attention_jit(q, k_pages, v_pages, page_table, seq_lens, scale):
-    if _force_ref():
+    if not _use_kernel():
         return _ref.paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, scale=scale)
     return _paged_attention_kernel(
         q, k_pages, v_pages, page_table, seq_lens, scale=scale, interpret=use_interpret()
@@ -56,7 +75,7 @@ def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *, scale=None):
 
 @jax.jit
 def _page_copy_jit(pool, src_idx, dst_idx):
-    if _force_ref():
+    if not _use_kernel():
         return _ref.page_copy_ref(pool, src_idx, dst_idx)
     return _page_copy_kernel(pool, src_idx, dst_idx, interpret=use_interpret())
 
@@ -67,7 +86,7 @@ def page_copy(pool, src_idx, dst_idx):
 
 @jax.jit
 def _delta_diff_jit(old, new):
-    if _force_ref():
+    if not _use_kernel():
         return _ref.delta_diff_ref(old, new)
     return _delta_diff_kernel(old, new, interpret=use_interpret())
 
@@ -78,7 +97,7 @@ def delta_diff(old, new):
 
 @jax.jit
 def _delta_apply_jit(base, data, idx):
-    if _force_ref():
+    if not _use_kernel():
         return _ref.delta_apply_ref(base, data, idx)
     return _delta_apply_kernel(base, data, idx, interpret=use_interpret())
 
@@ -95,10 +114,14 @@ def delta_compact(new, dirty, max_changed: int):
 
 @functools.partial(jax.jit, static_argnames=("max_changed",))
 def delta_encode(old, new, max_changed: int):
-    """diff + compact in one jit: (data, idx, count)."""
+    """diff + compact in one jit: (data, idx, count).
+
+    The dump-pipeline hot path: one fused dispatch per tensor, returning the
+    fixed-capacity compacted dirty chunks so the host moves O(delta) bytes.
+    """
     dirty = (
-        _ref.delta_diff_ref(old, new)
-        if _force_ref()
-        else _delta_diff_kernel(old, new, interpret=use_interpret())
+        _delta_diff_kernel(old, new, interpret=use_interpret())
+        if _use_kernel()
+        else _ref.delta_diff_ref(old, new)
     )
     return _ref.delta_compact_ref(new, dirty, max_changed)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.delta_pipeline import ChunkedView, DeltaGeneration
 from repro.kernels import ops as kops
 
 __all__ = ["PagePool", "PagedSession"]
@@ -130,7 +131,7 @@ class PagePool:
 
     # --------------------------------------------------- device page access
     def gather_page(self, page: int) -> Dict[str, np.ndarray]:
-        """Host copy of one page across all layers (dump path)."""
+        """Host copy of one page across all layers (debug/test path)."""
         out = {}
         for skey, tag in self.attn_tags:
             out[f"{skey}/{tag}/k"] = np.asarray(self.pools_k[skey][tag][:, page])
@@ -138,12 +139,38 @@ class PagePool:
         return out
 
     def scatter_page(self, page: int, payload: Dict[str, np.ndarray]) -> None:
-        """Write one page across all layers (slow-path restore)."""
+        """Write one page across all layers (debug/test path)."""
         for skey, tag in self.attn_tags:
             k = jnp.asarray(payload[f"{skey}/{tag}/k"])
             v = jnp.asarray(payload[f"{skey}/{tag}/v"])
             self.pools_k[skey][tag] = self.pools_k[skey][tag].at[:, page].set(k)
             self.pools_v[skey][tag] = self.pools_v[skey][tag].at[:, page].set(v)
+
+    def gather_pages_device(self, pages: np.ndarray) -> Dict[str, jax.Array]:
+        """One device gather per layer: ``kv/<stage>/<tag>/{k,v}`` →
+        ``(n_pages, n_periods, page_size, KVH, Hd)`` device arrays.
+
+        Stays on device — the dump pipeline diffs these in place and only
+        dirty pages ever cross to the host."""
+        idx = jnp.asarray(pages, jnp.int32)
+        out: Dict[str, jax.Array] = {}
+        for skey, tag in self.attn_tags:
+            out[f"kv/{skey}/{tag}/k"] = jnp.moveaxis(self.pools_k[skey][tag][:, idx], 1, 0)
+            out[f"kv/{skey}/{tag}/v"] = jnp.moveaxis(self.pools_v[skey][tag][:, idx], 1, 0)
+        return out
+
+    def scatter_pages(self, pages: np.ndarray, payload: Dict[str, np.ndarray]) -> None:
+        """Vectorized inverse of ``gather_pages_device`` (slow-path restore)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        for skey, tag in self.attn_tags:
+            k = jnp.moveaxis(jnp.asarray(payload[f"kv/{skey}/{tag}/k"]), 0, 1)
+            v = jnp.moveaxis(jnp.asarray(payload[f"kv/{skey}/{tag}/v"]), 0, 1)
+            self.pools_k[skey][tag] = self.pools_k[skey][tag].at[:, idx].set(
+                k.astype(self.pools_k[skey][tag].dtype)
+            )
+            self.pools_v[skey][tag] = self.pools_v[skey][tag].at[:, idx].set(
+                v.astype(self.pools_v[skey][tag].dtype)
+            )
 
 
 class PagedSession:
@@ -170,6 +197,10 @@ class PagedSession:
         self.extras: Dict[str, Any] = dict(extras or {})
         self.tokens: List[int] = list(tokens or [])
         self._released = False
+        # page positions written since the lineage was last marked clean;
+        # None = unknown (delta dumps treat every page as dirty)
+        self._dirty_pages: Optional[set] = None
+        self._dirty_base: Optional[int] = None   # ckpt the set is relative to
 
     # ------------------------------------------------------------ utility
     @property
@@ -179,16 +210,31 @@ class PagedSession:
     def active_pages(self) -> np.ndarray:
         return self.table[: self.n_pages]
 
+    # ---------------------------------------------------- dirty tracking
+    def reset_dirty_tracking(self, base_ckpt=None) -> None:
+        self._dirty_pages = set()
+        self._dirty_base = base_ckpt
+
+    def invalidate_dirty_tracking(self) -> None:
+        self._dirty_pages = None
+        self._dirty_base = None
+
+    def dirty_tracking_base(self):
+        return self._dirty_base if self._dirty_pages is not None else None
+
     # ------------------------------------------------------- ForkableState
     def fork(self) -> "PagedSession":
         self.pool.incref(self.active_pages())
-        return PagedSession(
+        clone = PagedSession(
             self.pool,
             table=self.table.copy(),
             seq_len=self.seq_len,
             extras=dict(self.extras),     # jnp arrays alias (immutable)
             tokens=list(self.tokens),
         )
+        clone._dirty_pages = None if self._dirty_pages is None else set(self._dirty_pages)
+        clone._dirty_base = self._dirty_base
+        return clone
 
     def release(self) -> None:
         if self._released:
@@ -197,19 +243,19 @@ class PagedSession:
         self.pool.decref(self.active_pages())
 
     def warm(self) -> None:
-        """Pre-privatize the tail page off the critical path (async-warm)."""
-        n = self.ensure_writable(warm=True)
-        self.pool.warm_copies += n
+        """Pre-privatize the tail page off the critical path (async-warm).
+
+        ensure_writable(warm=True) already accounts pool.warm_copies."""
+        self.ensure_writable(warm=True)
 
     def dump_payload(self) -> Dict[str, np.ndarray]:
         payload: Dict[str, np.ndarray] = {
             "meta/seq_len": np.asarray([self.seq_len], np.int64),
             "meta/tokens": np.asarray(self.tokens, np.int64),
         }
-        for pos in range(self.n_pages):
-            page = int(self.table[pos])
-            for name, arr in self.pool.gather_page(page).items():
-                payload[f"page{pos}/{name}"] = arr
+        if self.n_pages:
+            for name, dev in self.pool.gather_pages_device(self.active_pages()).items():
+                payload[name] = np.asarray(dev)
         for name, val in self.extras.items():
             payload[f"extra/{name}"] = np.asarray(val)
         return payload
@@ -220,19 +266,71 @@ class PagedSession:
         tokens = [int(t) for t in payload["meta/tokens"]]
         sess = PagedSession(pool, seq_len=seq_len, tokens=tokens)
         n_pages = sess.n_pages
-        for pos in range(n_pages):
-            page = pool.alloc()
-            sess.table[pos] = page
-            page_payload = {
-                name[len(f"page{pos}/"):]: arr
-                for name, arr in payload.items()
-                if name.startswith(f"page{pos}/")
-            }
-            pool.scatter_page(page, page_payload)
+        if n_pages:
+            for pos in range(n_pages):
+                sess.table[pos] = pool.alloc()
+            pool.scatter_pages(
+                sess.active_pages(),
+                {k: v for k, v in payload.items() if k.startswith("kv/")},
+            )
         for name, arr in payload.items():
             if name.startswith("extra/"):
                 sess.extras[name[len("extra/"):]] = jnp.asarray(arr)
         return sess
+
+    # ------------------------------------------------------ DeltaEncodable
+    def delta_generation(self, chunk_bytes: int) -> DeltaGeneration:
+        """Chunked views with one chunk per KV page, entirely on device.
+
+        The dump pipeline diffs these grids against the parent generation
+        with ``kernels.delta_encode``; pages the dirty hint clears never get
+        gathered at all, and only compacted dirty pages cross device→host.
+        """
+        del chunk_bytes  # KV chunk granularity is the page, not the store's
+        extras: Dict[str, np.ndarray] = {
+            "meta/seq_len": np.asarray([self.seq_len], np.int64),
+            "meta/tokens": np.asarray(self.tokens, np.int64),
+        }
+        for name, val in self.extras.items():
+            extras[f"extra/{name}"] = np.asarray(val)
+        views: Dict[str, ChunkedView] = {}
+        n_pages = self.n_pages
+        if n_pages:
+            pages = self.active_pages().copy()
+            pool = self.pool
+            for skey, tag in pool.attn_tags:
+                proto = pool.pools_k[skey][tag]
+                periods, _, psz, kvh, hd = proto.shape
+                shape = (n_pages, periods, psz, kvh, hd)
+                row_elems = periods * psz * kvh * hd
+                row_bytes = row_elems * proto.dtype.itemsize
+                for kv in ("k", "v"):
+                    key = f"kv/{skey}/{tag}/{kv}"
+
+                    def build(p=pool, s=skey, t=tag, which=kv, idx=pages, n=n_pages):
+                        pools = p.pools_k if which == "k" else p.pools_v
+                        dev = jnp.moveaxis(pools[s][t][:, jnp.asarray(idx, jnp.int32)], 1, 0)
+                        flat = dev.reshape(n, -1)
+                        return jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(n, -1)
+
+                    views[key] = ChunkedView(
+                        shape=shape,
+                        dtype=str(proto.dtype),
+                        nbytes=n_pages * row_bytes,
+                        chunk_bytes=row_bytes,
+                        n_chunks=n_pages,
+                        trailing_pad=0,
+                        grid_fn=build,
+                    )
+        if self._dirty_pages is None:
+            dirty_keys = None
+        else:
+            # meta/extras churn every step and are tiny: always dirty.  KV
+            # grids are dirty only if some page position was written.
+            dirty_keys = frozenset(extras)
+            if self._dirty_pages:
+                dirty_keys = dirty_keys | frozenset(views)
+        return DeltaGeneration(views=views, extras=extras, dirty_keys=dirty_keys)
 
     # --------------------------------------------------------------- write
     def ensure_writable(self, *, warm: bool = False, extra_tokens: int = 1) -> int:
@@ -246,6 +344,9 @@ class PagedSession:
         new_len = self.seq_len + extra_tokens
         first_page = self.seq_len // psz
         last_page = (new_len - 1) // psz
+        if self._dirty_pages is not None:
+            # every position in the write window is about to change content
+            self._dirty_pages.update(range(first_page, last_page + 1))
         for pos in range(first_page, last_page + 1):
             if pos >= len(self.table):
                 raise MemoryError("session exceeded max_pages")

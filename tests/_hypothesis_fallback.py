@@ -1,0 +1,130 @@
+"""Deterministic stand-in for the subset of `hypothesis` these tests use.
+
+Hermetic CI containers may not ship `hypothesis`; rather than skip every
+property test, ``conftest.py`` registers this module as ``hypothesis`` (and
+``hypothesis.strategies``) when the real package is missing.  Each
+``@given`` test then runs ``max_examples`` pseudo-random samples drawn from
+a PRNG seeded by the test name, so runs are reproducible and failures
+re-trigger on the same example.
+
+Only the strategies the suite needs are implemented: integers, floats,
+binary, booleans, just, sampled_from, one_of, tuples, lists.  No shrinking —
+the failing example values are attached to the exception message instead.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value=0, max_value=1 << 16):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def binary(min_size=0, max_size=32):
+    return _Strategy(
+        lambda r: bytes(r.randrange(256) for _ in range(r.randint(min_size, max_size)))
+    )
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def one_of(*strategies):
+    return _Strategy(lambda r: strategies[r.randrange(len(strategies))].example(r))
+
+
+def tuples(*strategies):
+    return _Strategy(lambda r: tuple(s.example(r) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=16):
+    return _Strategy(
+        lambda r: [elements.example(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def settings(max_examples=100, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying __wrapped__ would make pytest
+        # introspect the original signature and demand fixtures for the
+        # strategy-provided arguments.
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) or getattr(
+                fn, "_fallback_settings", {}
+            )
+            n = cfg.get("max_examples", 100)
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                ex_args = tuple(s.example(rnd) for s in strategies)
+                ex_kw = {k: s.example(rnd) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *ex_args, **{**kwargs, **ex_kw})
+                except Exception as exc:  # no shrinking: report the example
+                    raise AssertionError(
+                        f"property failed on example {i}/{n}: "
+                        f"args={ex_args!r} kwargs={ex_kw!r}: {exc}"
+                    ) from exc
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers",
+        "floats",
+        "booleans",
+        "binary",
+        "just",
+        "sampled_from",
+        "one_of",
+        "tuples",
+        "lists",
+    ):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -5,4 +5,18 @@ import sys
 # no leaked XLA_FLAGS from a prior shell changes that.
 os.environ.pop("XLA_FLAGS", None)
 
+# Kernel sweeps validate the Pallas kernels in interpret mode against the
+# jnp oracles.  Production CPU runs route delta_* through the oracles for
+# speed (see kernels/ops.py), so tests pin interpret-kernel execution here,
+# before anything traces.
+os.environ.setdefault("REPRO_INTERPRET", "1")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # real hypothesis when available (see requirements-dev.txt)
+    import hypothesis  # noqa: F401
+except ImportError:  # hermetic image: deterministic in-repo fallback
+    from _hypothesis_fallback import install
+
+    install()
