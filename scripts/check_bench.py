@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Gate benchmark JSONs against committed thresholds.
+
+Replaces the inline heredoc assertion that used to live in ``ci.yml`` with a
+reviewable, versioned contract: every ``BENCH_*.json`` a benchmark writes is
+validated against the matching thresholds file in ``benchmarks/baselines/``
+(``BENCH_dump_pipeline.json`` → ``baselines/dump_pipeline.json``), and the
+whole run fails if any bound is violated.
+
+A baselines file is a list of checks over dotted paths into the bench JSON:
+
+    {
+      "checks": [
+        {"path": "results.10pct.speedup.delta_bytes_over_state_bytes",
+         "op": "le", "value": 0.14,
+         "label": "dump bytes scale with the 10% dirty set"},
+        {"path": "results.10pct.summary.bytes_match", "op": "eq", "value": true}
+      ]
+    }
+
+Supported ops: ``le`` ``lt`` ``ge`` ``gt`` ``eq`` ``ne``.  A missing path is
+always a failure (a benchmark silently dropping a gated metric must not pass
+CI).  A bench JSON with no baselines file warns by default and fails under
+``--strict`` (CI runs strict so new benchmarks must commit thresholds).
+
+    python scripts/check_bench.py                   # validate all BENCH_*.json
+    python scripts/check_bench.py BENCH_foo.json    # validate specific files
+    python scripts/check_bench.py --strict          # missing baseline = error
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import operator
+import os
+import sys
+from typing import Any, List, Tuple
+
+OPS = {
+    "le": operator.le,
+    "lt": operator.lt,
+    "ge": operator.ge,
+    "gt": operator.gt,
+    "eq": operator.eq,
+    "ne": operator.ne,
+}
+
+_MISSING = object()
+
+
+def resolve(doc: Any, path: str) -> Any:
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        else:
+            return _MISSING
+    return cur
+
+
+def baseline_path(bench_file: str, baselines_dir: str) -> str:
+    name = os.path.basename(bench_file)
+    stem = name[len("BENCH_"):] if name.startswith("BENCH_") else name
+    stem = stem[:-len(".json")] if stem.endswith(".json") else stem
+    return os.path.join(baselines_dir, f"{stem}.json")
+
+
+def fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def check_file(bench_file: str, baselines_dir: str, strict: bool) -> Tuple[int, int, int]:
+    """Returns (passed, failed, skipped-as-warning)."""
+    base_file = baseline_path(bench_file, baselines_dir)
+    if not os.path.exists(base_file):
+        msg = f"no baselines for {bench_file} (expected {base_file})"
+        if strict:
+            print(f"  FAIL  {msg}")
+            return 0, 1, 0
+        print(f"  WARN  {msg}")
+        return 0, 0, 1
+    with open(bench_file) as f:
+        doc = json.load(f)
+    with open(base_file) as f:
+        checks = json.load(f)["checks"]
+    passed = failed = 0
+    for chk in checks:
+        path, op_name, bound = chk["path"], chk["op"], chk["value"]
+        label = chk.get("label", "")
+        got = resolve(doc, path)
+        if got is _MISSING:
+            print(f"  FAIL  {path}: missing from {bench_file}  [{label}]")
+            failed += 1
+            continue
+        ok = bool(OPS[op_name](got, bound))
+        status = "ok" if ok else "FAIL"
+        print(f"  {status:4s}  {path} = {fmt(got)}  ({op_name} {fmt(bound)})  [{label}]")
+        passed += int(ok)
+        failed += int(not ok)
+    return passed, failed, 0
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench_files", nargs="*", help="BENCH_*.json files (default: glob cwd)")
+    ap.add_argument("--baselines", default=os.path.join("benchmarks", "baselines"))
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a bench file has no committed baselines")
+    args = ap.parse_args(argv)
+    files = args.bench_files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("check_bench: no BENCH_*.json files found", file=sys.stderr)
+        return 2
+    total_pass = total_fail = total_warn = 0
+    for bench_file in files:
+        print(f"{bench_file}:")
+        p, f, w = check_file(bench_file, args.baselines, args.strict)
+        total_pass += p
+        total_fail += f
+        total_warn += w
+    verdict = "PASS" if total_fail == 0 else "FAIL"
+    print(f"check_bench: {verdict} — {total_pass} ok, {total_fail} failed, {total_warn} warned")
+    return 0 if total_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

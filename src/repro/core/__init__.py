@@ -20,6 +20,13 @@ from .delta_pipeline import (
     mark_clean,
     mark_unknown,
 )
+from .stream import (
+    ChunkStreamEngine,
+    DumpGate,
+    StreamCancelled,
+    StreamConfig,
+    StreamStats,
+)
 from .deltafs import DeltaFS, LayerConfig, TensorMeta
 from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
 from .gc import reachability_gc, recency_gc
@@ -30,8 +37,13 @@ from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
 __all__ = [
     "ChunkStore",
     "ChunkStoreStats",
+    "ChunkStreamEngine",
     "ChunkedView",
     "DeltaDumpPipeline",
+    "DumpGate",
+    "StreamCancelled",
+    "StreamConfig",
+    "StreamStats",
     "DeltaEncodable",
     "DeltaGeneration",
     "digest_encode_array",

@@ -143,20 +143,35 @@ class ChunkStore:
         """
         return self._put_locked(data, digest, pad)
 
+    def _dedup_hit_locked(self, digest: Optional[bytes], pad: int) -> Optional[int]:
+        """Resolve a put against an existing chunk; caller holds the lock."""
+        if digest is None or not self.dedupe:
+            return None
+        hit = self._by_digest.get((digest, pad))
+        if hit is None:
+            return None
+        chunk = self._chunks[hit]
+        chunk.refs += 1
+        self.stats.dedup_hits += 1
+        self.stats.logical_bytes += len(chunk.data)
+        return hit
+
     def _put_locked(self, data, digest: Optional[bytes], pad: int) -> int:
         with self._lock:
             self.stats.puts += 1
-            if digest is not None and self.dedupe:
-                hit = self._by_digest.get((digest, pad))
-                if hit is not None:
-                    chunk = self._chunks[hit]
-                    chunk.refs += 1
-                    self.stats.dedup_hits += 1
-                    self.stats.logical_bytes += len(chunk.data)
-                    return hit
-            if callable(data):
-                data = data()
-            data = bytes(data)
+            hit = self._dedup_hit_locked(digest, pad)
+            if hit is not None:
+                return hit
+        # Materialize OUTSIDE the lock: the thunk/copy is a memcpy-scale
+        # operation and holding the lock across it convoys the parallel
+        # drain workers of the streaming dump engine.
+        if callable(data):
+            data = data()
+        data = bytes(data)
+        with self._lock:
+            hit = self._dedup_hit_locked(digest, pad)   # lost a race: reuse
+            if hit is not None:
+                return hit
             cid = self._next_id
             self._next_id += 1
             self._chunks[cid] = _Chunk(data=data, digest=digest, pad=pad)
@@ -204,17 +219,29 @@ class ChunkStore:
 
     def decref(self, cid: int, n: int = 1) -> None:
         with self._lock:
-            chunk = self._chunks[cid]
-            if chunk.refs < n:
-                raise RuntimeError(f"chunk {cid}: decref below zero")
-            chunk.refs -= n
-            self.stats.logical_bytes -= n * len(chunk.data)
-            if chunk.refs == 0:
-                if chunk.digest is not None:
-                    self._by_digest.pop((chunk.digest, chunk.pad), None)
-                self.stats.chunks_alive -= 1
-                self.stats.physical_bytes -= len(chunk.data)
-                del self._chunks[cid]
+            self._decref_locked(cid, n)
+
+    def decref_many(self, cids) -> None:
+        """Batch decref under one lock acquisition (dump rollback / image GC).
+
+        Accepts repeated ids — each occurrence drops one reference, matching
+        ``TensorMeta.chunk_ids`` holding one reference per listed chunk."""
+        with self._lock:
+            for cid in cids:
+                self._decref_locked(cid, 1)
+
+    def _decref_locked(self, cid: int, n: int) -> None:
+        chunk = self._chunks[cid]
+        if chunk.refs < n:
+            raise RuntimeError(f"chunk {cid}: decref below zero")
+        chunk.refs -= n
+        self.stats.logical_bytes -= n * len(chunk.data)
+        if chunk.refs == 0:
+            if chunk.digest is not None:
+                self._by_digest.pop((chunk.digest, chunk.pad), None)
+            self.stats.chunks_alive -= 1
+            self.stats.physical_bytes -= len(chunk.data)
+            del self._chunks[cid]
 
     def refs(self, cid: int) -> int:
         with self._lock:

@@ -39,12 +39,23 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, FrozenSet, Optional, Protocol, Tuple, runtime_checkable
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    FrozenSet,
+    List,
+    Optional,
+    Protocol,
+    Tuple,
+    runtime_checkable,
+)
 
 import numpy as np
 
 from .chunk_store import ChunkStore, chunk_digest
 from .deltafs import TensorMeta, digest_encode_array  # noqa: F401 (re-export)
+from .stream import ChunkStreamEngine, StreamCancelled, WindowItem
 
 
 _DTYPE_STR: Dict[Any, str] = {}
@@ -89,6 +100,7 @@ __all__ = [
     "DeltaDumpPipeline",
     "DeltaEncodable",
     "DeltaGeneration",
+    "StreamCancelled",
     "digest_encode_array",
     "mark_clean",
     "mark_unknown",
@@ -243,6 +255,45 @@ class EncodeResult:
     clean_keys: int = 0              # metadata-level reuse (no bytes touched)
     kernel_keys: int = 0             # diffed on device via delta_encode
     full_keys: int = 0               # full materialization (new/overflow)
+    # streaming accounting (zeros on the synchronous path)
+    streamed: bool = False
+    windows: int = 0
+    encode_ms: float = 0.0
+    drain_ms: float = 0.0
+    commit_ms: float = 0.0
+    stream_wall_ms: float = 0.0
+
+
+@dataclass
+class _KeyTask:
+    """One non-clean tensor's dump work as a three-stage window item.
+
+    ``encode`` (caller thread) runs the diff — a ``kernels.delta_encode``
+    dispatch for device grids, the exact numpy compare for host grids, or
+    nothing for full-materialization keys.  ``drain`` (overlap pool, pure)
+    fetches the dirty rows device→host and produces ``(payload, digest)``
+    per row — all GIL-releasing copy/hash work, no store access.  ``commit``
+    (caller thread again) folds the rows into the store and returns
+    ``(meta, dirtied, kind)`` with ``kind`` in {"kernel", "full"} (a
+    capacity overflow detected in drain downgrades kernel → full)."""
+
+    key: str
+    weight: int
+    encode: Callable[[], Any]
+    drain: Callable[[Any], Any]
+    commit: Callable[[Any], Tuple[TensorMeta, int, str]]
+
+    def run_sync(self) -> Tuple[TensorMeta, int, str]:
+        return self.commit(self.drain(self.encode()))
+
+    def as_window_item(self) -> WindowItem:
+        return WindowItem(
+            key=self.key,
+            weight=self.weight,
+            encode=self.encode,
+            drain=self.drain,
+            commit=self.commit,
+        )
 
 
 class DeltaDumpPipeline:
@@ -254,10 +305,12 @@ class DeltaDumpPipeline:
         *,
         capacity_frac: float = 0.5,
         max_generations: int = 4,
+        stream: Optional[ChunkStreamEngine] = None,
     ):
         self.store = store
         self.capacity_frac = float(capacity_frac)
         self.max_generations = int(max_generations)
+        self.stream = stream
         self._gens: "OrderedDict[int, _GenRecord]" = OrderedDict()
         self._lock = threading.RLock()
 
@@ -326,16 +379,37 @@ class DeltaDumpPipeline:
         for rec in releasable:
             rec.release()
 
+    def shutdown(self) -> None:
+        self.clear()
+        if self.stream is not None:
+            self.stream.shutdown()
+
     # --------------------------------------------------------------- encode
     def encode_generation(
-        self, gen: DeltaGeneration, parent_image: Optional[Any]
+        self,
+        gen: DeltaGeneration,
+        parent_image: Optional[Any],
+        *,
+        cancel: Optional[threading.Event] = None,
+        priority: str = "bg",
     ) -> EncodeResult:
-        """Build the image entries for one generation (dump-worker thread)."""
+        """Build the image entries for one generation (dump-worker thread).
+
+        When the pipeline owns a :class:`ChunkStreamEngine` and the plan is
+        large enough to split into windows, the per-tensor work streams
+        through it: diff dispatch of window k+1 overlaps the device→host
+        copy + store put of window k.  ``cancel`` aborts at the next window
+        boundary and rolls back every chunk reference this dump acquired
+        (raising :class:`StreamCancelled`); ``priority`` is forwarded to the
+        QoS gate ("bg" dumps yield to runnable sessions, "fg" do not).
+        """
         res = EncodeResult(entries={}, dirtied=0)
         parent_entries = parent_image.entries if parent_image is not None else {}
         parent_rec = self.record_for(parent_image.image_id) if parent_image is not None else None
         try:
-            return self._encode_with_parent(gen, parent_entries, parent_rec, res)
+            return self._encode_with_parent(
+                gen, parent_entries, parent_rec, res, cancel=cancel, priority=priority
+            )
         finally:
             # device grids materialized for this diff are O(state) on-device
             # copies — free them; the anchors re-gather lazily next time
@@ -352,11 +426,12 @@ class DeltaDumpPipeline:
         parent_entries: Dict[str, TensorMeta],
         parent_rec: Optional[_GenRecord],
         res: "EncodeResult",
+        *,
+        cancel: Optional[threading.Event] = None,
+        priority: str = "bg",
     ) -> "EncodeResult":
-        from repro.kernels import ops as kops
-        import jax.numpy as jnp
-
         store = self.store
+        tasks: List[_KeyTask] = []
         for key, view in gen.views.items():
             pm = parent_entries.get(key)
             # NOTE: the kernel path does not require parent digests — its
@@ -369,137 +444,269 @@ class DeltaDumpPipeline:
                 res.entries[key] = pm
                 res.clean_keys += 1
                 continue
-            # --- kernel path: on-device diff + compaction vs parent grid
             base = parent_rec.views.get(key) if parent_rec is not None else None
-            if (
-                pm_ok
-                and base is not None
-                and base.chunk_bytes == view.chunk_bytes
-                and len(pm.chunk_ids) == base.n_chunks
-            ):
-                # a padded parent tail row only compares against an identical
-                # layout (same row count + pad); otherwise exclude it
-                if base.n_chunks == view.n_chunks and base.trailing_pad == view.trailing_pad:
-                    comparable = base.n_chunks
-                else:
-                    comparable = base.n_chunks - (1 if base.trailing_pad else 0)
-                K = min(view.n_chunks, comparable)
-                if K > 0:
-                    cap = self._capacity(K)
-                    old_grid, new_grid = base.grid, view.grid
-                    if (
-                        isinstance(old_grid, np.ndarray)
-                        and isinstance(new_grid, np.ndarray)
-                        and not _on_tpu()
-                    ):
-                        # Host grids off-TPU: a vectorized numpy compare IS
-                        # the delta kernel here — routing 2×K×C bytes
-                        # through the device would cost more than the diff.
-                        # The result is exact, so the fixed-capacity limit
-                        # (a kernel-compaction artifact) does not apply.
-                        hit = _host_dirty_rows(old_grid[:K], new_grid[:K])
-                        count, idx_np, data_np = len(hit), hit, new_grid[hit]
-                        usable = True
-                    else:
-                        # pow2-pad the row count so delta_encode compiles
-                        # once per size class, not per chunk count (a
-                        # growing KV cache changes K every few steps); the
-                        # identical zero pad rows can never read as dirty
-                        K2 = 1 << (K - 1).bit_length()
-                        cap = self._capacity(K2)
-                        old_j = jnp.asarray(old_grid)[:K]
-                        new_j = jnp.asarray(new_grid)[:K]
-                        if K2 != K:
-                            pad_rows = ((0, K2 - K), (0, 0))
-                            old_j = jnp.pad(old_j, pad_rows)
-                            new_j = jnp.pad(new_j, pad_rows)
-                        data, idx, count = kops.delta_encode(old_j, new_j, cap)
-                        count = int(count)
-                        idx_np, data_np = np.asarray(idx), np.asarray(data)
-                        usable = count <= cap
-                    if usable:
-                        meta, n_dirty = self._assemble_kernel_meta(
-                            view, pm, K, data_np, idx_np
-                        )
-                        res.entries[key] = meta
-                        res.dirtied += n_dirty
-                        res.kernel_keys += 1
-                        continue
-                    # capacity overflow: fall through to the full chunk set
-            # --- full path: materialize the grid, digest-delta every row
-            meta, n_dirty = self._encode_full_grid(view, pm if pm_ok else None)
-            res.entries[key] = meta
-            res.dirtied += n_dirty
+            tasks.append(self._plan_key(key, view, pm if pm_ok else None, base))
+
+        items = [t.as_window_item() for t in tasks]
+        streamed = self.stream is not None and self.stream.should_stream(items)
+        try:
+            if streamed:
+                self._run_streamed(tasks, items, res, cancel, priority)
+            else:
+                self._run_sync(tasks, res, cancel)
+            # extras stay inside the transaction: a failure here must also
+            # roll back every reference the tasks/clean keys acquired
+            for key, arr in gen.extras.items():
+                pm = parent_entries.get(key)
+                if (
+                    pm is not None
+                    and pm.shape == tuple(np.shape(arr))
+                    and pm.dtype == str(np.asarray(arr).dtype)
+                    and not gen.is_dirty(key)
+                ):
+                    store.incref_many(pm.chunk_ids)
+                    res.entries[key] = pm
+                    res.clean_keys += 1
+                    continue
+                meta, n_dirty = digest_encode_array(store, np.asarray(arr), pm)
+                res.entries[key] = meta
+                res.dirtied += n_dirty
+        except BaseException:
+            self._rollback(res.entries)
+            res.entries = {}
+            raise
+        return res
+
+    # ----------------------------------------------------- encode: planning
+    def _plan_key(
+        self,
+        key: str,
+        view: ChunkedView,
+        pm: Optional[TensorMeta],
+        base: Optional[ChunkedView],
+    ) -> _KeyTask:
+        """Classify one dirty tensor into a two-stage task."""
+        weight = view.n_chunks * view.chunk_bytes
+        if (
+            pm is not None
+            and base is not None
+            and base.chunk_bytes == view.chunk_bytes
+            and len(pm.chunk_ids) == base.n_chunks
+        ):
+            # a padded parent tail row only compares against an identical
+            # layout (same row count + pad); otherwise exclude it
+            if base.n_chunks == view.n_chunks and base.trailing_pad == view.trailing_pad:
+                comparable = base.n_chunks
+            else:
+                comparable = base.n_chunks - (1 if base.trailing_pad else 0)
+            K = min(view.n_chunks, comparable)
+            if K > 0:
+                old_grid, new_grid = base.grid, view.grid
+                if (
+                    isinstance(old_grid, np.ndarray)
+                    and isinstance(new_grid, np.ndarray)
+                    and not _on_tpu()
+                ):
+                    return self._plan_host_kernel(key, view, pm, old_grid, new_grid, K, weight)
+                return self._plan_device_kernel(key, view, pm, old_grid, new_grid, K, weight)
+        # --- full path: materialize the grid, digest-delta every row
+        return _KeyTask(
+            key=key,
+            weight=weight,
+            encode=lambda: None,
+            drain=lambda _enc, v=view: self._drain_rows(np.asarray(v.grid), range(v.n_chunks)),
+            commit=lambda rows, v=view, p=pm: (*self._commit_full_grid(v, p, rows), "full"),
+        )
+
+    def _drain_rows(
+        self, grid, indices, keys=None
+    ) -> Dict[int, Tuple[bytes, Optional[bytes]]]:
+        """Pure drain body: copy + hash the given grid rows.
+
+        One ``tobytes`` copy and (when the store dedupes) one GIL-releasing
+        blake2b per row — exactly the work profile that scales across drain
+        workers; no locks, no store access.  ``keys`` remaps grid rows to
+        result keys (compacted kernel output, grown-tail offsets); identity
+        when omitted."""
+        want_digest = self.store.dedupe
+        rows: Dict[int, Tuple[bytes, Optional[bytes]]] = {}
+        indices = list(indices)
+        keys = indices if keys is None else list(keys)
+        for k, i in zip(keys, indices):
+            payload = np.ascontiguousarray(grid[int(i)]).tobytes()
+            rows[int(k)] = (payload, chunk_digest(payload, 0) if want_digest else None)
+        return rows
+
+    def _plan_host_kernel(
+        self, key, view, pm, old_grid, new_grid, K: int, weight: int
+    ) -> _KeyTask:
+        # Host grids off-TPU: a vectorized numpy compare IS the delta kernel
+        # here — routing 2×K×C bytes through the device would cost more than
+        # the diff.  The result is exact, so the fixed-capacity limit (a
+        # kernel-compaction artifact) does not apply.  Encode = the compare;
+        # drain = per-row copy + hash; commit = store folds.
+        def encode() -> np.ndarray:
+            return _host_dirty_rows(old_grid[:K], new_grid[:K])
+
+        def drain(hit: np.ndarray) -> Dict[int, Tuple[bytes, Optional[bytes]]]:
+            # rows past K (a grown tensor's tail) are new, hence all dirty
+            indices = list(hit) + list(range(K, view.n_chunks))
+            return self._drain_rows(new_grid, indices)
+
+        def commit(rows) -> Tuple[TensorMeta, int, str]:
+            meta, n_dirty = self._commit_kernel_meta(view, pm, K, rows)
+            return meta, n_dirty, "kernel"
+
+        return _KeyTask(key=key, weight=weight, encode=encode, drain=drain, commit=commit)
+
+    def _plan_device_kernel(
+        self, key, view, pm, old_grid, new_grid, K: int, weight: int
+    ) -> _KeyTask:
+        from repro.kernels import ops as kops
+        import jax.numpy as jnp
+
+        # pow2-pad the row count so delta_encode compiles once per size
+        # class, not per chunk count (a growing KV cache changes K every few
+        # steps); the identical zero pad rows can never read as dirty
+        K2 = 1 << (K - 1).bit_length()
+        cap = self._capacity(K2)
+
+        def encode():
+            old_j = jnp.asarray(old_grid)[:K]
+            new_j = jnp.asarray(new_grid)[:K]
+            if K2 != K:
+                pad_rows = ((0, K2 - K), (0, 0))
+                old_j = jnp.pad(old_j, pad_rows)
+                new_j = jnp.pad(new_j, pad_rows)
+            data, idx, count = kops.delta_encode(old_j, new_j, cap)
+            # async dispatch: start the DMA now, materialize in drain
+            kops.start_host_fetch(data, idx, count)
+            return data, idx, count
+
+        def drain(enc):
+            data, idx, count = enc
+            if int(count) > cap:
+                # capacity overflow: fall back to the full chunk set
+                return "full", self._drain_rows(np.asarray(view.grid), range(view.n_chunks))
+            data_np, idx_np = np.asarray(data), np.asarray(idx)
+            valid = [j for j in range(idx_np.shape[0]) if int(idx_np[j]) >= 0]
+            rows = self._drain_rows(data_np, valid, keys=(int(idx_np[j]) for j in valid))
+            if view.n_chunks > K:        # grown rows: all dirty, one fetch
+                tail = np.asarray(view.grid[K:])
+                rows.update(
+                    self._drain_rows(
+                        tail, range(tail.shape[0]), keys=range(K, K + tail.shape[0])
+                    )
+                )
+            return "kernel", rows
+
+        def commit(tagged) -> Tuple[TensorMeta, int, str]:
+            tag, rows = tagged
+            if tag == "full":
+                return (*self._commit_full_grid(view, pm, rows), "full")
+            meta, n_dirty = self._commit_kernel_meta(view, pm, K, rows)
+            return meta, n_dirty, "kernel"
+
+        return _KeyTask(key=key, weight=weight, encode=encode, drain=drain, commit=commit)
+
+    # ---------------------------------------------------- encode: execution
+    def _merge_task_result(
+        self, res: EncodeResult, key: str, out: Tuple[TensorMeta, int, str]
+    ) -> None:
+        meta, n_dirty, kind = out
+        res.entries[key] = meta
+        res.dirtied += n_dirty
+        if kind == "kernel":
+            res.kernel_keys += 1
+        else:
             res.full_keys += 1
 
-        for key, arr in gen.extras.items():
-            pm = parent_entries.get(key)
-            if (
-                pm is not None
-                and pm.shape == tuple(np.shape(arr))
-                and pm.dtype == str(np.asarray(arr).dtype)
-                and not gen.is_dirty(key)
-            ):
-                store.incref_many(pm.chunk_ids)
-                res.entries[key] = pm
-                res.clean_keys += 1
-                continue
-            meta, n_dirty = digest_encode_array(store, np.asarray(arr), pm)
-            res.entries[key] = meta
-            res.dirtied += n_dirty
-        return res
+    def _run_sync(
+        self, tasks: List[_KeyTask], res: EncodeResult, cancel: Optional[threading.Event]
+    ) -> None:
+        for task in tasks:
+            if cancel is not None and cancel.is_set():
+                raise StreamCancelled(
+                    f"dump cancelled after {len(res.entries)} tensors (sync path)"
+                )
+            self._merge_task_result(res, task.key, task.run_sync())
+
+    def _run_streamed(
+        self,
+        tasks: List[_KeyTask],
+        items: List[WindowItem],
+        res: EncodeResult,
+        cancel: Optional[threading.Event],
+        priority: str,
+    ) -> None:
+        assert self.stream is not None
+        out: Dict[str, Tuple[TensorMeta, int, str]] = {}
+        try:
+            stats = self.stream.stream(items, out, cancel=cancel, priority=priority)
+        except BaseException:
+            # roll back everything the drain thread completed; the caller's
+            # handler then rolls back clean-key increfs via res.entries
+            self._rollback(out)
+            raise
+        for task in tasks:                      # deterministic merge order
+            self._merge_task_result(res, task.key, out[task.key])
+        res.streamed = True
+        res.windows = stats.windows
+        res.encode_ms = stats.encode_ms
+        res.drain_ms = stats.drain_ms
+        res.commit_ms = stats.commit_ms
+        res.stream_wall_ms = stats.wall_ms
+
+    def _rollback(self, produced: Dict[str, Any]) -> None:
+        """Drop every chunk reference held by already-produced entries,
+        restoring the store to its pre-dump state (transactional dumps)."""
+        ids: List[int] = []
+        for val in produced.values():
+            meta = val[0] if isinstance(val, tuple) else val
+            ids.extend(meta.chunk_ids)
+        if ids:
+            self.store.decref_many(ids)
 
     def _capacity(self, n_chunks: int) -> int:
         """Fixed compaction capacity, pow2-rounded to bound jit recompiles."""
         target = max(1, int(np.ceil(n_chunks * self.capacity_frac)))
         return min(n_chunks, 1 << (target - 1).bit_length())
 
-    def _assemble_kernel_meta(
+    def _commit_kernel_meta(
         self,
         view: ChunkedView,
         pm: TensorMeta,
         K: int,
-        data: np.ndarray,
-        idx: np.ndarray,
+        rows: Dict[int, Tuple[bytes, Optional[bytes]]],
     ) -> Tuple[TensorMeta, int]:
-        """Combine compacted dirty rows with parent references."""
+        """Fold drained dirty rows (index → (payload, digest)) into the
+        store, re-referencing the parent's chunks for everything clean.
+
+        Runs on the caller thread — all store mutation is single-threaded,
+        so chunk ids come out identical to a synchronous dump.  Meta digests
+        are recorded only when the parent entry also carries them (digests
+        are all-or-nothing per entry)."""
         store = self.store
-        dirty_rows: Dict[int, np.ndarray] = {}
-        for j in range(idx.shape[0]):
-            i = int(idx[j])
-            if i >= 0:
-                dirty_rows[i] = data[j]
-        tail: Optional[np.ndarray] = None
-        if view.n_chunks > K:  # grown rows: all dirty, one host fetch
-            tail = np.asarray(view.grid[K:])
-        # Hash only when the store dedupes on content (the digest is the
-        # dedupe key): the kernel already proved these rows dirty, so the
-        # hash buys nothing else, and dropping it keeps the hot path at
-        # compare+memcpy speed.  Digests are all-or-nothing per entry.
         with_digests = store.dedupe and len(pm.digests) == len(pm.chunk_ids)
         ids = []
         digests = []
         dirtied = 0
         for i in range(view.n_chunks):
-            row = dirty_rows.get(i)
-            if row is None and i >= K:
-                row = tail[i - K]
-            if row is None:  # clean: re-reference the parent's chunk
+            pr = rows.get(i)
+            if pr is None:  # clean: re-reference the parent's chunk
                 store.incref(pm.chunk_ids[i])
                 ids.append(pm.chunk_ids[i])
                 if with_digests:
                     digests.append(pm.digests[i])
                 continue
+            payload, digest = pr
             pad = view.trailing_pad if i == view.n_chunks - 1 else 0
-            row_bytes = np.ascontiguousarray(row).view(np.uint8).reshape(-1)
-            if with_digests:
-                digest = chunk_digest(row_bytes, 0)  # rows are already padded
-                ids.append(
-                    store.put_digested(lambda r=row_bytes: r.tobytes(), digest=digest, pad=pad)
-                )
-                digests.append(digest)
+            if digest is not None:       # rows are already padded: pad-0 hash
+                ids.append(store.put_digested(payload, digest=digest, pad=pad))
             else:
-                ids.append(store.put(row_bytes.tobytes(), pad=pad))
+                ids.append(store.put(payload, pad=pad))
+            if with_digests:
+                digests.append(digest)
             dirtied += 1
         return (
             TensorMeta(
@@ -512,10 +719,15 @@ class DeltaDumpPipeline:
             dirtied,
         )
 
-    def _encode_full_grid(
-        self, view: ChunkedView, pm: Optional[TensorMeta]
+    def _commit_full_grid(
+        self,
+        view: ChunkedView,
+        pm: Optional[TensorMeta],
+        rows: Dict[int, Tuple[bytes, Optional[bytes]]],
     ) -> Tuple[TensorMeta, int]:
-        grid = np.asarray(view.grid)
+        """Fold a fully-drained grid into the store, digest-deltaing every
+        row against the parent entry (new tensors, shape changes, kernel
+        capacity overflows)."""
         prev_ids = pm.chunk_ids if pm is not None and pm.shape == view.shape else ()
         prev_digests = pm.digests if pm is not None and pm.shape == view.shape else ()
         store = self.store
@@ -524,13 +736,12 @@ class DeltaDumpPipeline:
         digests = []
         dirtied = 0
         for i in range(view.n_chunks):
-            row = grid[i]
-            digest = chunk_digest(row, 0) if with_digests else None
+            payload, digest = rows[i]
             if i < len(prev_ids):
                 if digest is not None and i < len(prev_digests):
                     same = prev_digests[i] == digest
                 else:  # digest-less entry or store: full byte compare
-                    same = store.get(prev_ids[i]) == row.tobytes()
+                    same = store.get(prev_ids[i]) == payload
                 if same:
                     store.incref(prev_ids[i])
                     ids.append(prev_ids[i])
@@ -539,10 +750,10 @@ class DeltaDumpPipeline:
                     continue
             pad = view.trailing_pad if i == view.n_chunks - 1 else 0
             if digest is not None:
-                ids.append(store.put_digested(lambda r=row: r.tobytes(), digest=digest, pad=pad))
+                ids.append(store.put_digested(payload, digest=digest, pad=pad))
                 digests.append(digest)
             else:
-                ids.append(store.put(row.tobytes(), pad=pad))
+                ids.append(store.put(payload, pad=pad))
             dirtied += 1
         return (
             TensorMeta(

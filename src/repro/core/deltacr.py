@@ -55,6 +55,7 @@ from .delta_pipeline import (
     mark_unknown,
 )
 from .deltafs import TensorMeta
+from .stream import ChunkStreamEngine, DumpGate, StreamCancelled, StreamConfig
 
 __all__ = [
     "ForkableState",
@@ -253,6 +254,12 @@ class DumpImage:
     dump_bytes: int          # physical bytes this image added
     wall_ms: float
     mode: str = "digest"     # "delta" | "digest" | "legacy"
+    # streaming accounting (zeros when the dump ran synchronously)
+    streamed: bool = False
+    stream_windows: int = 0
+    encode_ms: float = 0.0   # diff dispatch / host compare stage
+    drain_ms: float = 0.0    # device→host fetch + copy + hash stage (pool)
+    commit_ms: float = 0.0   # store folds + metadata stage (caller)
 
 
 class DeltaCRStats:
@@ -268,6 +275,10 @@ class DeltaCRStats:
         self.clean_keys = 0           # tensors re-referenced metadata-only
         self.kernel_keys = 0          # tensors diffed on device
         self.full_keys = 0            # tensors fully materialized
+        # streaming accounting
+        self.streamed_dumps = 0       # dumps that went through the stream engine
+        self.stream_windows = 0       # total windows streamed
+        self.cancelled_dumps = 0      # dumps rolled back mid-stream
         self.lock = threading.Lock()
 
 
@@ -299,6 +310,8 @@ class DeltaCR:
         pipeline: Optional[DeltaDumpPipeline] = None,
         capacity_frac: float = 0.5,
         max_generations: int = 4,
+        stream: bool = True,
+        stream_config: Optional[StreamConfig] = None,
     ):
         if dump_mode not in ("auto", "digest", "legacy"):
             raise ValueError(f"unknown dump_mode {dump_mode!r}")
@@ -312,10 +325,14 @@ class DeltaCR:
         self.dump_mode = dump_mode
         self.pipeline = pipeline
         if self.pipeline is None and dump_mode == "auto":
+            engine = None
+            if stream:
+                engine = ChunkStreamEngine(stream_config)
             self.pipeline = DeltaDumpPipeline(
                 self.store,
                 capacity_frac=capacity_frac,
                 max_generations=max_generations,
+                stream=engine,
             )
         # Single-worker pool, like the paper's GSD dump thread.
         self._dump_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-dump")
@@ -323,10 +340,26 @@ class DeltaCR:
         self._templates: "OrderedDict[int, ForkableState]" = OrderedDict()
         self._images: Dict[int, Future] = {}        # ckpt_id -> Future[DumpImage]
         self._image_by_id: Dict[int, DumpImage] = {}
+        self._cancels: Dict[int, threading.Event] = {}   # ckpt_id -> dump cancel
         self._parents: Dict[int, Optional[int]] = {}
         self._lock = threading.RLock()
         self._next_image_id = 1
         self.stats = DeltaCRStats()
+
+    # ------------------------------------------------------------- qos gate
+    def attach_dump_gate(self, gate: DumpGate) -> None:
+        """Install a scheduler-owned QoS gate on the streaming engine.
+
+        Dump windows then pass through the scheduler's bounded-in-flight /
+        priority-demotion policy; a no-op when this DeltaCR has no stream
+        engine (non-auto dump modes, stream=False)."""
+        if self.pipeline is not None and self.pipeline.stream is not None:
+            self.pipeline.stream.gate = gate
+
+    def dump_gate(self) -> Optional[DumpGate]:
+        if self.pipeline is not None and self.pipeline.stream is not None:
+            return self.pipeline.stream.gate
+        return None
 
     # ---------------------------------------------------------- checkpoint
     def checkpoint(
@@ -336,6 +369,7 @@ class DeltaCR:
         parent_ckpt: Optional[int] = None,
         *,
         dump: bool = True,
+        priority: str = "bg",
     ) -> None:
         """Fork a template at the quiesce point and submit the async dump.
 
@@ -360,7 +394,14 @@ class DeltaCR:
                 # queue is single-worker FIFO, so the parent dump has always
                 # completed by the time this task runs (never blocks).
                 parent_fut = self._images.get(parent_ckpt) if parent_ckpt is not None else None
-                fut = self._dump_executor.submit(self._do_dump, dump_src, parent_fut)
+                cancel = threading.Event()
+                self._cancels[ckpt_id] = cancel
+                fut = self._dump_executor.submit(
+                    self._do_dump, dump_src, parent_fut, priority, cancel
+                )
+                fut.add_done_callback(
+                    lambda _f, c=ckpt_id: self._cancels.pop(c, None)
+                )
                 self._images[ckpt_id] = fut
             self._admit_template(ckpt_id, template)
             self._parents[ckpt_id] = parent_ckpt
@@ -379,7 +420,13 @@ class DeltaCR:
                 self.stats.evictions += 1
 
     # ------------------------------------------------------------ dump path
-    def _do_dump(self, dump_src: ForkableState, parent_fut: Optional[Future]) -> DumpImage:
+    def _do_dump(
+        self,
+        dump_src: ForkableState,
+        parent_fut: Optional[Future],
+        priority: str = "bg",
+        cancel: Optional[threading.Event] = None,
+    ) -> DumpImage:
         parent: Optional[DumpImage] = None
         if parent_fut is not None:
             try:
@@ -393,6 +440,7 @@ class DeltaCR:
         mode = self.dump_mode
         anchor_views: Optional[Dict[str, ChunkedView]] = None
         clean = kernel = full = 0
+        res = None
         try:
             use_pipeline = (
                 self.dump_mode == "auto"
@@ -402,7 +450,9 @@ class DeltaCR:
             if use_pipeline:
                 mode = "delta"
                 gen = dump_src.delta_generation(self.store.chunk_bytes)
-                res = self.pipeline.encode_generation(gen, parent)
+                res = self.pipeline.encode_generation(
+                    gen, parent, cancel=cancel, priority=priority
+                )
                 entries, dirtied = res.entries, res.dirtied
                 clean, kernel, full = res.clean_keys, res.kernel_keys, res.full_keys
                 anchor_views = gen.views
@@ -415,6 +465,13 @@ class DeltaCR:
                     meta, n_dirty = digest_encode_array(self.store, arr, pm)
                     entries[name] = meta
                     dirtied += n_dirty
+        except StreamCancelled:
+            # dropped mid-dump (drop_checkpoint): the pipeline already rolled
+            # back every chunk reference; the dump fork is all that remains
+            dump_src.release()
+            with self.stats.lock:
+                self.stats.cancelled_dumps += 1
+            raise
         except Exception:
             dump_src.release()
             raise
@@ -430,6 +487,11 @@ class DeltaCR:
             dump_bytes=self.store.stats.bytes_written - bytes_before,
             wall_ms=wall_ms,
             mode=mode,
+            streamed=bool(res is not None and res.streamed),
+            stream_windows=res.windows if res is not None else 0,
+            encode_ms=res.encode_ms if res is not None else 0.0,
+            drain_ms=res.drain_ms if res is not None else 0.0,
+            commit_ms=res.commit_ms if res is not None else 0.0,
         )
         if anchor_views is not None:
             # The dump fork anchors this generation's (lazy) device/host
@@ -450,6 +512,9 @@ class DeltaCR:
             self.stats.clean_keys += clean
             self.stats.kernel_keys += kernel
             self.stats.full_keys += full
+            if image.streamed:
+                self.stats.streamed_dumps += 1
+                self.stats.stream_windows += image.stream_windows
         return image
 
     def _legacy_encode(
@@ -550,7 +615,31 @@ class DeltaCR:
         with self._lock:
             futs = list(self._images.values())
         for fut in futs:
-            fut.result(timeout=timeout)
+            try:
+                fut.result(timeout=timeout)
+            except StreamCancelled:
+                continue            # dropped mid-wait: done by cancellation
+
+    def release_dump_anchor(self, ckpt_id: int) -> bool:
+        """Release the pipeline generation anchored by this checkpoint's dump.
+
+        The dump worker retains its fork as the diff/restore base for future
+        O(delta) chaining — which also keeps the forked pages (HBM for a
+        PagedSession) referenced.  A *suspended* session has no upcoming
+        child dumps, so the scheduler releases the anchor once the durable
+        image has landed: later dumps against this checkpoint fall back to
+        the digest/full path and restores decode from store chunks — both
+        correct, just not O(delta)-chained."""
+        with self._lock:
+            fut = self._images.get(ckpt_id)
+        if fut is None or self.pipeline is None:
+            return False
+        try:
+            image = fut.result(timeout=60.0)
+        except Exception:
+            return False
+        self.pipeline.evict(image.image_id)
+        return True
 
     def evict_template(self, ckpt_id: int) -> bool:
         with self._lock:
@@ -563,21 +652,29 @@ class DeltaCR:
         return True
 
     def drop_checkpoint(self, ckpt_id: int) -> None:
-        """Reclaim all storage for a checkpoint (GC of unreachable nodes)."""
+        """Reclaim all storage for a checkpoint (GC of unreachable nodes).
+
+        A dump still queued or streaming is *cancelled* rather than awaited:
+        the pipeline rolls back every chunk reference it took, so dropping a
+        fresh fan-out node costs at most one window of wasted work instead
+        of a full dump plus its decref walk."""
         self.evict_template(ckpt_id)
         with self._lock:
             fut = self._images.pop(ckpt_id, None)
             self._parents.pop(ckpt_id, None)
+            cancel = self._cancels.pop(ckpt_id, None)
         if fut is not None:
+            if cancel is not None and not fut.done():
+                cancel.set()
             try:
                 image = fut.result(timeout=60.0)
-            except Exception:
+            except Exception:       # includes StreamCancelled: already rolled back
                 return
             if self.pipeline is not None:
                 self.pipeline.evict(image.image_id)
-            for meta in image.entries.values():
-                for cid in meta.chunk_ids:
-                    self.store.decref(cid)
+            self.store.decref_many(
+                cid for meta in image.entries.values() for cid in meta.chunk_ids
+            )
             with self._lock:
                 self._image_by_id.pop(image.image_id, None)
 
@@ -589,4 +686,4 @@ class DeltaCR:
         self._dump_executor.shutdown(wait=True)
         self._warm_executor.shutdown(wait=True)
         if self.pipeline is not None:
-            self.pipeline.clear()
+            self.pipeline.shutdown()

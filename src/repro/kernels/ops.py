@@ -20,10 +20,11 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref as _ref
 from .delta_apply import delta_apply as _delta_apply_kernel
@@ -38,6 +39,8 @@ __all__ = [
     "delta_apply",
     "delta_compact",
     "delta_encode",
+    "device_fetch",
+    "start_host_fetch",
     "use_interpret",
 ]
 
@@ -125,3 +128,28 @@ def delta_encode(old, new, max_changed: int):
         else _ref.delta_diff_ref(old, new)
     )
     return _ref.delta_compact_ref(new, dirty, max_changed)
+
+
+def start_host_fetch(*arrays) -> None:
+    """Begin async device→host copies without blocking.
+
+    On TPU this starts the DMA for each committed array so a later
+    ``np.asarray`` finds the bytes already on host; the streaming dump
+    engine calls it at encode time so the copy of window *k* overlaps the
+    diff dispatch of window *k+1*.  Backends (or tracers) without
+    ``copy_to_host_async`` make this a no-op — ``np.asarray`` then blocks
+    as usual, which is still correct.
+    """
+    for a in arrays:
+        fn = getattr(a, "copy_to_host_async", None)
+        if fn is not None:
+            try:
+                fn()
+            except Exception:
+                pass  # best-effort: the blocking fetch below stays correct
+
+
+def device_fetch(*arrays) -> List[np.ndarray]:
+    """Materialize device arrays on host, overlapping the copies."""
+    start_host_fetch(*arrays)
+    return [np.asarray(a) for a in arrays]

@@ -18,9 +18,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.deltacr import ForkableState
+from repro.core.deltacr import DeltaCR, ForkableState
 
-__all__ = ["FanoutResult", "fork_n", "rollout_fanout", "sync_gpu_occupation", "staleness"]
+__all__ = [
+    "FanoutResult",
+    "checkpoint_burst",
+    "fork_n",
+    "rollout_fanout",
+    "sync_gpu_occupation",
+    "staleness",
+]
 
 
 @dataclasses.dataclass
@@ -80,6 +87,40 @@ def rollout_fanout(
         for child in children:
             child.release()
     return rewards, result
+
+
+def checkpoint_burst(
+    cr: DeltaCR,
+    states: Sequence[ForkableState],
+    ckpt_ids: Sequence[int],
+    parent_ckpt: Optional[int] = None,
+    *,
+    priority: str = "bg",
+    wait: bool = False,
+) -> Tuple[List[Any], float]:
+    """Checkpoint a fan-out burst without head-of-line-blocking decode.
+
+    The deep fan-outs of MCTS expansion and RL rollouts park many sibling
+    states at once.  Submitting each dump and waiting would serialize the
+    burst on durable-dump latency; this instead enqueues every dump on
+    DeltaCR's FIFO worker in one pass — the streaming engine's QoS gate
+    bounds in-flight windows and demotes ``priority="bg"`` dumps while the
+    scheduler has runnable sessions, so the storm drains in the background
+    masked by inference.  Returns the dump futures (resolve when durable)
+    and the synchronous submit cost in ms (forks + queue pushes only).
+    """
+    if len(states) != len(ckpt_ids):
+        raise ValueError("states and ckpt_ids must align")
+    t0 = time.perf_counter()
+    for state, ckpt_id in zip(states, ckpt_ids):
+        cr.checkpoint(state, ckpt_id, parent_ckpt, priority=priority)
+    submit_ms = (time.perf_counter() - t0) * 1e3
+    futs = [cr.dump_future(c) for c in ckpt_ids]
+    if wait:
+        for fut in futs:
+            if fut is not None:
+                fut.result()
+    return futs, submit_ms
 
 
 def sync_gpu_occupation(t_sandbox_s: float, t_gen_s: float, t_train_s: float) -> float:

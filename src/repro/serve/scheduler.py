@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler over forkable sessions.
+"""Continuous-batching scheduler over forkable sessions, with dump QoS.
 
 Production serving runs many concurrent agent sessions with different
 lifecycles (prefill, decode, suspended-awaiting-tool, finished).  The
@@ -8,14 +8,32 @@ sessions by checkpointing them through DeltaCR and releasing their pages,
 resuming them later via template fork or dump restore.  Suspension turns
 idle agents (seconds-long tool calls, human turns) into near-zero HBM
 footprint, which is exactly the paper's economics applied to a fleet.
+
+Dump QoS (this layer owns the policy, ``core.stream`` owns the mechanism):
+
+* The scheduler installs a :class:`~repro.core.stream.DumpGate` on DeltaCR's
+  streaming engine and flips ``set_runnable`` every step, so background dump
+  windows are *demoted* (bounded wait) whenever decode work is ready —
+  checkpoint traffic never head-of-line-blocks token generation.
+* The gate also bounds in-flight dump windows, so a suspend storm (a search
+  fan-out parking dozens of sessions at once) holds at most
+  ``max_inflight_dump_windows`` windows of staging memory.
+* **Suspend coalescing**: ``suspend`` no longer blocks on the durable dump
+  before evicting the template.  Evictions are queued and drained
+  opportunistically as dumps land (``step``/``submit``), or forcibly only
+  when admission actually needs the pages back — a storm of suspends costs
+  one FIFO dump queue, not a chain of synchronous waits.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.deltacr import DeltaCR
+from repro.core.stream import DumpGate
 
 from .engine import Engine, SamplingParams
 from .kvcache import PagedSession
@@ -28,6 +46,12 @@ class SchedulerConfig:
     max_batch: int = 8                   # decode batch per step
     min_free_pages: int = 8              # admission watermark
     auto_suspend_free_pages: int = 4     # suspend LRU sessions below this
+    # -- dump QoS --------------------------------------------------------
+    dump_qos: bool = True                # install a DumpGate on DeltaCR
+    max_inflight_dump_windows: int = 3   # staging bound for dump streams
+    dump_demote_poll_ms: float = 2.0     # demoted-window re-check cadence
+    dump_demote_max_ms: float = 50.0     # demotion is bounded: dumps progress
+    coalesce_suspends: bool = True       # defer template eviction off suspend()
 
 
 @dataclasses.dataclass
@@ -40,24 +64,39 @@ class SessionHandle:
 
 
 class Scheduler:
-    def __init__(self, engine: Engine, deltacr: DeltaCR, cfg: SchedulerConfig = SchedulerConfig()):
+    def __init__(self, engine: Engine, deltacr: DeltaCR, cfg: Optional[SchedulerConfig] = None):
         self.engine = engine
         self.cr = deltacr
-        self.cfg = cfg
+        # per-instance config: a shared default instance would alias mutable
+        # scheduler tuning across every Scheduler in the process
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.handles: Dict[int, SessionHandle] = {}
         self._sid = itertools.count(1)
         self._ckpt = itertools.count(1_000_000)
         self.step_count = 0
         self.suspensions = 0
         self.resumes = 0
+        # (ckpt_id, dump future) pairs awaiting deferred template eviction
+        self._pending_evict: List[Tuple[int, Optional[Future]]] = []
+        self.gate: Optional[DumpGate] = None
+        if self.cfg.dump_qos:
+            self.gate = DumpGate(
+                self.cfg.max_inflight_dump_windows,
+                demote_poll_ms=self.cfg.dump_demote_poll_ms,
+                demote_max_ms=self.cfg.dump_demote_max_ms,
+            )
+            self.cr.attach_dump_gate(self.gate)
 
     # --------------------------------------------------------------- admit
-    def submit(self, prompt, sampling: SamplingParams = SamplingParams()) -> int:
+    def submit(self, prompt, sampling: Optional[SamplingParams] = None) -> int:
         """Admit a new session (prefill) if the pool allows; else raise."""
+        self._drain_suspends()
         self._ensure_headroom()
         if self.engine.pool.free_pages() < self.cfg.min_free_pages:
             raise MemoryError("no page headroom for admission")
-        sess = self.engine.new_session(list(prompt), sampling)
+        sess = self.engine.new_session(
+            list(prompt), sampling if sampling is not None else SamplingParams()
+        )
         sid = next(self._sid)
         self.handles[sid] = SessionHandle(sid=sid, state="active", session=sess)
         return sid
@@ -72,39 +111,72 @@ class Scheduler:
         return nsid
 
     # --------------------------------------------------------------- states
-    def suspend(self, sid: int, *, keep_template: bool = False) -> None:
+    def suspend(self, sid: int, *, keep_template: bool = False, urgent: bool = False) -> None:
         """Checkpoint through DeltaCR and release the session's pages.
 
         With ``keep_template=False`` (default) the template is evicted once
         the durable dump lands, so the pages really return to the pool —
         resume then takes the slow path: suspension trades restore latency
-        for HBM, exactly the paper's eviction economics."""
+        for HBM, exactly the paper's eviction economics.
+
+        Coalescing (default): the eviction is *deferred* — queued behind the
+        dump future and drained when the dump completes, so a burst of
+        suspends (search fan-out, tool-call storm) submits every dump to the
+        FIFO worker immediately instead of serializing suspend→wait→suspend.
+        ``urgent=True`` restores the old synchronous behavior (pages are
+        free when this returns) and marks the dump foreground-priority so
+        the QoS gate does not demote its windows.
+        """
         h = self.handles[sid]
         if h.state != "active":
             return
         ckpt_id = next(self._ckpt)
-        self.cr.checkpoint(h.session, ckpt_id, None)
+        self.cr.checkpoint(h.session, ckpt_id, None, priority="fg" if urgent else "bg")
+        # the handle flips to suspended BEFORE any durability wait: the
+        # template is live from here on, so even a failed/slow dump leaves a
+        # restorable handle — never an "active" one holding a released session
         h.session.release()
-        if not keep_template:
-            fut = self.cr.dump_future(ckpt_id)
-            if fut is not None:
-                fut.result(timeout=120.0)      # durable image before eviction
-            self.cr.evict_template(ckpt_id)
         h.session = None
         h.ckpt_id = ckpt_id
         h.state = "suspended"
         self.suspensions += 1
+        self._refresh_runnable_hint()
+        if not keep_template:
+            fut = self.cr.dump_future(ckpt_id)
+            if urgent or not self.cfg.coalesce_suspends:
+                if fut is not None:
+                    try:
+                        fut.result(timeout=120.0)  # durable image before eviction
+                    except FuturesTimeoutError:
+                        # slow, not failed: fall back to a deferred eviction
+                        # so the pages still return once the dump lands
+                        self._pending_evict.append((ckpt_id, fut))
+                        return
+                    except Exception:
+                        return                     # keep the template: restorable
+                self.cr.evict_template(ckpt_id)
+                self.cr.release_dump_anchor(ckpt_id)  # really return the pages
+            else:
+                self._pending_evict.append((ckpt_id, fut))
+
+    def suspend_many(self, sids, **kw) -> None:
+        """Suspend a burst of sessions; with coalescing on, all dumps queue
+        on the FIFO worker before any eviction wait happens."""
+        for sid in sids:
+            self.suspend(sid, **kw)
 
     def resume(self, sid: int) -> None:
         h = self.handles[sid]
         if h.state != "suspended":
             return
+        self._drain_suspends()
         self._ensure_headroom()
         state, path = self.cr.restore(h.ckpt_id)
         h.session = state
         h.state = "active"
         h.ckpt_id = None
         self.resumes += 1
+        self._refresh_runnable_hint()
 
     def finish(self, sid: int) -> List[int]:
         h = self.handles[sid]
@@ -113,9 +185,13 @@ class Scheduler:
             h.session.release()
             h.session = None
         if h.ckpt_id is not None:
+            self._pending_evict = [
+                (c, f) for c, f in self._pending_evict if c != h.ckpt_id
+            ]
             self.cr.drop_checkpoint(h.ckpt_id)
             h.ckpt_id = None
         h.state = "finished"
+        self._refresh_runnable_hint()
         return tokens
 
     # ----------------------------------------------------------------- step
@@ -123,7 +199,12 @@ class Scheduler:
         """One continuous-batching step over decode-ready sessions.
 
         Returns {sid: sampled token}."""
+        self._drain_suspends()
         ready = [h for h in self.handles.values() if h.state == "active"][: self.cfg.max_batch]
+        if self.gate is not None:
+            # QoS hint: while these sessions decode, background dump windows
+            # are demoted; cleared when the scheduler runs dry
+            self.gate.set_runnable(len(ready))
         if not ready:
             return {}
         toks = self.engine.step([h.session for h in ready])
@@ -135,12 +216,59 @@ class Scheduler:
         return out
 
     # ------------------------------------------------------------- internal
+    def _refresh_runnable_hint(self) -> None:
+        """Keep the QoS gate's runnable count honest on state transitions.
+
+        step() sets the authoritative per-batch count; this catches the
+        in-between case — a suspend storm parking every active session must
+        *promote* the queued dumps immediately, not leave them demoted
+        against decode work that no longer exists."""
+        if self.gate is not None:
+            n = sum(1 for h in self.handles.values() if h.state == "active")
+            self.gate.set_runnable(min(n, self.cfg.max_batch))
+
+    def _drain_suspends(self, *, block: bool = False) -> int:
+        """Evict templates whose dumps have landed (deferred suspensions).
+
+        ``block=True`` additionally waits on the *oldest* pending dump — the
+        bounded backpressure admission applies when it really needs pages.
+        Returns the number of templates evicted."""
+        if not self._pending_evict:
+            return 0
+        evicted = 0
+        remaining: List[Tuple[int, Optional[Future]]] = []
+        for i, (ckpt_id, fut) in enumerate(self._pending_evict):
+            wait = block and i == 0
+            if fut is None or fut.done() or wait:
+                if fut is not None:
+                    try:
+                        fut.result(timeout=120.0)
+                    except FuturesTimeoutError:
+                        # slow, not failed: keep the entry so the eviction
+                        # (and its pages) still happens when the dump lands
+                        remaining.append((ckpt_id, fut))
+                        continue
+                    except Exception:
+                        # dump failed: keep the template (the only remaining
+                        # copy of the state) — pages stay held, state safe
+                        continue
+                self.cr.evict_template(ckpt_id)
+                self.cr.release_dump_anchor(ckpt_id)   # really return the pages
+                evicted += 1
+            else:
+                remaining.append((ckpt_id, fut))
+        self._pending_evict = remaining
+        return evicted
+
     def _ensure_headroom(self) -> None:
-        """Below the watermark, suspend LRU active sessions (their templates
-        stay forkable; pages return to the pool)."""
-        while (
-            self.engine.pool.free_pages() < self.cfg.auto_suspend_free_pages
-        ):
+        """Below the watermark: first reap deferred evictions, then suspend
+        LRU active sessions, and only block on a pending dump when nothing
+        else can yield pages."""
+        while self.engine.pool.free_pages() < self.cfg.auto_suspend_free_pages:
+            if self._drain_suspends():
+                continue
+            if self._pending_evict and self._drain_suspends(block=True):
+                continue                 # a queued dump landed: pages are back
             actives = [h for h in self.handles.values() if h.state == "active"]
             if len(actives) <= 1:
                 break
