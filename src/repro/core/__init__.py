@@ -4,10 +4,14 @@ Change-based, millisecond-class checkpoint/rollback for stateful agent
 workloads: a transactional (durable, ephemeral) state pair built from
 
 * :class:`~repro.core.chunk_store.ChunkStore` — refcounted reflink-analogue base storage,
-* :class:`~repro.core.deltafs.DeltaFS` — runtime-switchable overlay layers (O(1) ckpt/rollback),
+* :class:`~repro.core.deltafs.LayerStore` / :class:`~repro.core.deltafs.NamespaceView`
+  / :class:`~repro.core.deltafs.DeltaFS` — shared refcounted overlay layers +
+  per-sandbox stacks (O(1) ckpt/rollback),
 * :class:`~repro.core.deltacr.DeltaCR` — template-fork fast restores + async delta dumps,
 * :class:`~repro.core.state_manager.StateManager` — the coupled-consistency protocol,
-* :mod:`~repro.core.gc` — reachability-aware snapshot GC,
+* :class:`~repro.core.sandbox_tree.SandboxTree` — N concurrent live sandboxes
+  from any checkpoint; fork/commit (Fork-Explore-Commit),
+* :mod:`~repro.core.gc` — reachability-aware snapshot GC (multi-sandbox pins),
 * :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue).
 """
 from .chunk_store import ChunkStore, ChunkStoreStats
@@ -27,12 +31,13 @@ from .stream import (
     StreamConfig,
     StreamStats,
 )
-from .deltafs import DeltaFS, LayerConfig, TensorMeta
+from .deltafs import DeltaFS, LayerConfig, LayerStore, NamespaceView, TensorMeta
 from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
 from .gc import reachability_gc, recency_gc
 from .npd import InferenceProxy, ProxyRequest
 from .persist import load_store, save_store
 from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
+from .sandbox_tree import SandboxTree, SandboxTreeStats
 
 __all__ = [
     "ChunkStore",
@@ -51,6 +56,8 @@ __all__ = [
     "mark_unknown",
     "DeltaFS",
     "LayerConfig",
+    "LayerStore",
+    "NamespaceView",
     "TensorMeta",
     "CowArrayState",
     "DeltaCR",
@@ -64,6 +71,8 @@ __all__ = [
     "ProxyRequest",
     "CheckpointError",
     "Sandbox",
+    "SandboxTree",
+    "SandboxTreeStats",
     "SnapshotNode",
     "StateManager",
 ]

@@ -258,6 +258,7 @@ class EncodeResult:
     # streaming accounting (zeros on the synchronous path)
     streamed: bool = False
     windows: int = 0
+    window_bytes: int = 0            # the (possibly adaptive) budget used
     encode_ms: float = 0.0
     drain_ms: float = 0.0
     commit_ms: float = 0.0
@@ -652,6 +653,7 @@ class DeltaDumpPipeline:
             self._merge_task_result(res, task.key, out[task.key])
         res.streamed = True
         res.windows = stats.windows
+        res.window_bytes = stats.window_bytes
         res.encode_ms = stats.encode_ms
         res.drain_ms = stats.drain_ms
         res.commit_ms = stats.commit_ms

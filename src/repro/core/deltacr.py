@@ -257,6 +257,7 @@ class DumpImage:
     # streaming accounting (zeros when the dump ran synchronously)
     streamed: bool = False
     stream_windows: int = 0
+    stream_window_bytes: int = 0     # the (possibly EWMA-adapted) budget used
     encode_ms: float = 0.0   # diff dispatch / host compare stage
     drain_ms: float = 0.0    # device→host fetch + copy + hash stage (pool)
     commit_ms: float = 0.0   # store folds + metadata stage (caller)
@@ -327,7 +328,15 @@ class DeltaCR:
         if self.pipeline is None and dump_mode == "auto":
             engine = None
             if stream:
-                engine = ChunkStreamEngine(stream_config)
+                # Default engine: adaptive windowing — window budgets track
+                # the measured bottleneck-stage throughput instead of a
+                # fixed byte count.  An explicit stream_config is honored
+                # verbatim (controlled A/B benchmarks pass fixed budgets).
+                engine = ChunkStreamEngine(
+                    stream_config
+                    if stream_config is not None
+                    else StreamConfig(adaptive=True)
+                )
             self.pipeline = DeltaDumpPipeline(
                 self.store,
                 capacity_frac=capacity_frac,
@@ -489,6 +498,7 @@ class DeltaCR:
             mode=mode,
             streamed=bool(res is not None and res.streamed),
             stream_windows=res.windows if res is not None else 0,
+            stream_window_bytes=res.window_bytes if res is not None else 0,
             encode_ms=res.encode_ms if res is not None else 0.0,
             drain_ms=res.drain_ms if res is not None else 0.0,
             commit_ms=res.commit_ms if res is not None else 0.0,

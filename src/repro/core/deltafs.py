@@ -1,24 +1,40 @@
 """DeltaFS — runtime-reconfigurable overlay layers over a tensor namespace.
 
-The durable dimension of a DeltaBox sandbox.  A ``DeltaFS`` instance manages
-a *namespace* of named host tensors ("files") resolved through a stack of
-immutable delta layers plus one writable upper layer:
+The durable dimension of a DeltaBox sandbox, split into the two roles the
+concurrent sandbox tree needs:
 
-* ``write``     — whole-tensor copy-up into the upper layer, with every chunk
-                  the write did not change *re-referenced* from the parent
-                  generation (the reflink extent-map-preservation analogue):
-                  physical write amplification is O(dirtied chunks).
-* ``checkpoint`` — freeze the upper layer, splice it as the topmost lower and
-                  install a fresh upper.  O(1) metadata; no data copied.
-* ``switch``    — replace the layer stack with any previously frozen
-                  configuration (rollback / restore).  O(1).
-* ``checkpoint_gen`` — per-filesystem generation counter.  Read resolutions
-                  are cached per key tagged with the generation at which they
-                  were resolved; a gen mismatch lazily re-resolves against the
-                  new stack (the paper's lazy switch for open files, §4.1.1).
+* :class:`LayerStore` — the **shared** half: the refcounted layer table over
+  one :class:`~repro.core.chunk_store.ChunkStore`.  Frozen layers are
+  immutable and may be referenced by any number of live namespace stacks and
+  retained checkpoint configurations at once; releasing the last reference
+  to a layer decrefs exactly the chunks no surviving generation shares.
+  One ``LayerStore`` backs every sandbox forked from the same lineage —
+  sibling sandboxes share every frozen layer byte-for-byte.
 
-Layers and the chunks they reference are refcounted; releasing a frozen
-configuration (GC) frees exactly the chunks no surviving generation shares.
+* :class:`NamespaceView` — the **per-sandbox** half: a layer *stack*
+  (bottom-to-top, last element the private writable upper), a
+  generation-tagged resolve cache, and the checkpoint/switch protocol:
+
+  - ``write``     — whole-tensor copy-up into the upper layer, with every
+                    chunk the write did not change *re-referenced* from the
+                    parent generation (the reflink extent-map-preservation
+                    analogue): physical write amplification is O(dirtied
+                    chunks).
+  - ``checkpoint`` — freeze the upper layer, splice it as the topmost lower
+                    and install a fresh upper.  O(1) metadata; no data
+                    copied.
+  - ``switch``    — replace the layer stack with any previously frozen
+                    configuration (rollback / restore).  O(1).
+  - ``checkpoint_gen`` — per-view generation counter.  Read resolutions are
+                    cached per key tagged with the generation at which they
+                    were resolved; a gen mismatch lazily re-resolves against
+                    the new stack (the paper's lazy switch for open files,
+                    §4.1.1).
+
+:class:`DeltaFS` is the single-sandbox facade (a ``NamespaceView`` owning a
+private ``LayerStore``) and keeps the historical API; multi-sandbox callers
+(:class:`~repro.core.sandbox_tree.SandboxTree`) open additional views over
+``fs.layers`` so sibling sandboxes diverge only in their uppers.
 """
 from __future__ import annotations
 
@@ -30,7 +46,14 @@ import numpy as np
 
 from .chunk_store import ChunkStore, chunk_digest, iter_chunk_views
 
-__all__ = ["DeltaFS", "LayerConfig", "TensorMeta", "digest_encode_array"]
+__all__ = [
+    "DeltaFS",
+    "LayerConfig",
+    "LayerStore",
+    "NamespaceView",
+    "TensorMeta",
+    "digest_encode_array",
+]
 
 LayerConfig = Tuple[int, ...]  # bottom-to-top tuple of frozen layer ids
 
@@ -116,47 +139,144 @@ def digest_encode_array(
 class _Layer:
     layer_id: int
     frozen: bool = False
-    refs: int = 0                       # held by live stack + retained configs
+    refs: int = 0                       # held by live stacks + retained configs
     entries: Dict[str, TensorMeta] = field(default_factory=dict)
     tombstones: set = field(default_factory=set)
 
 
-class DeltaFS:
-    """Layered copy-on-write tensor filesystem with O(1) checkpoint/rollback."""
+class LayerStore:
+    """Shared, refcounted layer table over one chunk store.
+
+    The multi-sandbox substrate: every :class:`NamespaceView` (one per live
+    sandbox) and every retained checkpoint configuration holds per-layer
+    references here.  Frozen layers are immutable, so concurrent views read
+    them lock-free in spirit (the shared lock only orders refcount motion
+    and table mutation); a layer — and, transitively, the chunks only it
+    references — is freed exactly when the last view or configuration
+    releases it.
+    """
 
     def __init__(self, store: Optional[ChunkStore] = None, *, chunk_bytes: int = 64 * 1024):
         # explicit None check: an empty ChunkStore is falsy (len 0)
-        self.store = store if store is not None else ChunkStore(chunk_bytes=chunk_bytes)
-        self._lock = threading.RLock()
+        self.chunks = store if store is not None else ChunkStore(chunk_bytes=chunk_bytes)
+        self.lock = threading.RLock()
         self._layers: Dict[int, _Layer] = {}
         self._next_layer_id = 1
+
+    # ----------------------------------------------------------- layer mgmt
+    def new_layer(self) -> _Layer:
+        """Register a fresh mutable layer with zero references."""
+        with self.lock:
+            layer = _Layer(layer_id=self._next_layer_id)
+            self._next_layer_id += 1
+            self._layers[layer.layer_id] = layer
+            return layer
+
+    def get(self, layer_id: int) -> Optional[_Layer]:
+        with self.lock:
+            return self._layers.get(layer_id)
+
+    def freeze(self, layer_id: int) -> None:
+        with self.lock:
+            self._layers[layer_id].frozen = True
+
+    # ---------------------------------------------------------- refcounting
+    def retain_layer(self, layer_id: int) -> None:
+        with self.lock:
+            self._layers[layer_id].refs += 1
+
+    def release_layer(self, layer_id: int) -> None:
+        with self.lock:
+            layer = self._layers[layer_id]
+            layer.refs -= 1
+            if layer.refs == 0:
+                for meta in layer.entries.values():
+                    for cid in meta.chunk_ids:
+                        self.chunks.decref(cid)
+                del self._layers[layer_id]
+
+    def retain_config(self, config: Iterable[int]) -> None:
+        with self.lock:
+            for layer_id in config:
+                self._layers[layer_id].refs += 1
+
+    def retain_frozen_config(self, config: Iterable[int]) -> None:
+        """Validate-then-retain a frozen configuration atomically.
+
+        The one protocol shared by ``NamespaceView.switch`` and view
+        mounting (``__init__``): every layer must exist and be frozen, and
+        no reference moves unless all of them are."""
+        with self.lock:
+            for layer_id in config:
+                layer = self._layers.get(layer_id)
+                if layer is None or not layer.frozen:
+                    raise ValueError(f"layer {layer_id} is not a frozen live layer")
+            for layer_id in config:
+                self._layers[layer_id].refs += 1
+
+    def release_config(self, config: Iterable[int]) -> None:
+        with self.lock:
+            for layer_id in config:
+                self.release_layer(layer_id)
+
+    # -------------------------------------------------------------- helpers
+    def layer_count(self) -> int:
+        with self.lock:
+            return len(self._layers)
+
+    def debug_validate(self) -> None:
+        """Invariant check used by property/stress tests.
+
+        Every chunk any live layer references must be alive in the store,
+        and every registered layer must be reachable (positive refcount) —
+        a zero-ref layer still in the table is a leak.
+        """
+        with self.lock:
+            for layer in self._layers.values():
+                assert layer.refs > 0, f"leaked layer {layer.layer_id} (refs=0)"
+                for meta in layer.entries.values():
+                    for cid in meta.chunk_ids:
+                        assert cid in self.chunks, f"dangling chunk {cid}"
+
+
+class NamespaceView:
+    """One sandbox's mount of a shared :class:`LayerStore`.
+
+    Holds the per-sandbox state — layer stack, writable upper, resolve
+    cache, generation counter — while all layer bytes live in the shared
+    store.  Views created with a ``base_config`` start bit-identical to that
+    frozen configuration and diverge only through their private upper; any
+    number of sibling views may share the same base layers.
+    """
+
+    def __init__(self, layers: LayerStore, *, base_config: LayerConfig = ()):
+        self.layers = layers
+        self._lock = layers.lock         # shared: refs move across views
         self._stack: list[int] = []      # bottom-to-top; last element is the writable upper
         self.checkpoint_gen = 0
         # key -> (generation, layer_id holding the topmost entry, is_tombstone)
         self._resolve_cache: Dict[str, Tuple[int, int, bool]] = {}
         self.lazy_reresolves = 0         # slow-path count (gen mismatch), for tests/benches
-        self._push_fresh_upper()
+        self._closed = False
+        self._inflight = 0               # ops in their unlocked heavy phase
+        # stacks switched away from while ops were in flight; released by
+        # the last op out so reads never gather from freed chunks
+        self._pending_release: list[list[int]] = []
+        with self._lock:
+            layers.retain_frozen_config(base_config)   # live-stack references
+            self._stack = list(base_config)
+            self._push_fresh_upper()
 
-    # ----------------------------------------------------------- layer mgmt
-    def _new_layer(self) -> _Layer:
-        layer = _Layer(layer_id=self._next_layer_id)
-        self._next_layer_id += 1
-        self._layers[layer.layer_id] = layer
-        return layer
+    # ------------------------------------------------------------- plumbing
+    @property
+    def store(self) -> ChunkStore:
+        """The backing chunk store (kept as the historical attribute name)."""
+        return self.layers.chunks
 
     def _push_fresh_upper(self) -> None:
-        layer = self._new_layer()
-        layer.refs += 1  # held by the live stack
+        layer = self.layers.new_layer()
+        layer.refs += 1  # held by this live stack (caller holds the lock)
         self._stack.append(layer.layer_id)
-
-    def _release_layer(self, layer_id: int) -> None:
-        layer = self._layers[layer_id]
-        layer.refs -= 1
-        if layer.refs == 0:
-            for meta in layer.entries.values():
-                for cid in meta.chunk_ids:
-                    self.store.decref(cid)
-            del self._layers[layer_id]
 
     @property
     def upper_id(self) -> int:
@@ -167,16 +287,48 @@ class DeltaFS:
         with self._lock:
             return tuple(self._stack)
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self) -> None:
+        # fail fast and loud: an operation on a closed view must not reach
+        # the shared store (a write would take chunk refs it can never
+        # release) nor masquerade as "key missing"
+        if self._closed:
+            raise RuntimeError("namespace view is closed (sandbox released)")
+
+    def _finish_op(self) -> None:
+        """End an op's unlocked heavy phase; the last one out performs any
+        deferred stack releases (close() or switch() that arrived while
+        this op was gathering/encoding)."""
+        with self._lock:
+            self._inflight -= 1
+            if self._inflight == 0:
+                for stack in self._pending_release:
+                    for layer_id in stack:
+                        self.layers.release_layer(layer_id)
+                self._pending_release.clear()
+                if self._closed:
+                    self._release_stack_locked()
+
+    def _release_stack_locked(self) -> None:
+        stack, self._stack = self._stack, []
+        self._resolve_cache.clear()
+        for layer_id in stack:
+            self.layers.release_layer(layer_id)
+
     # -------------------------------------------------------------- resolve
     def _resolve(self, key: str) -> Optional[TensorMeta]:
         """Topmost-entry resolution with generation-tagged caching."""
+        layers = self.layers._layers
         cached = self._resolve_cache.get(key)
         if cached is not None:
             gen, layer_id, dead = cached
             if gen == self.checkpoint_gen:  # fast path: same generation
                 if dead:
                     return None
-                layer = self._layers.get(layer_id)
+                layer = layers.get(layer_id)
                 if layer is not None:
                     entry = layer.entries.get(key)
                     if entry is not None:
@@ -184,7 +336,7 @@ class DeltaFS:
             else:
                 self.lazy_reresolves += 1   # slow path: stale gen, re-resolve
         for layer_id in reversed(self._stack):
-            layer = self._layers[layer_id]
+            layer = layers[layer_id]
             if key in layer.tombstones:
                 self._resolve_cache[key] = (self.checkpoint_gen, layer_id, True)
                 return None
@@ -198,13 +350,16 @@ class DeltaFS:
     # ------------------------------------------------------------------ api
     def exists(self, key: str) -> bool:
         with self._lock:
+            self._check_open()
             return self._resolve(key) is not None
 
     def keys(self) -> list[str]:
         with self._lock:
+            self._check_open()
+            layers = self.layers._layers
             seen: Dict[str, bool] = {}
             for layer_id in reversed(self._stack):
-                layer = self._layers[layer_id]
+                layer = layers[layer_id]
                 for k in layer.tombstones:
                     seen.setdefault(k, False)
                 for k in layer.entries:
@@ -213,13 +368,23 @@ class DeltaFS:
 
     def read(self, key: str) -> np.ndarray:
         with self._lock:
+            self._check_open()
             meta = self._resolve(key)
             if meta is None:
                 raise KeyError(key)
+            self._inflight += 1
+        try:
+            # Chunk gather runs outside the shared layer lock (the store
+            # locks itself).  The in-flight count makes a concurrent
+            # close() defer the stack release, so the chunks stay alive
+            # until this op finishes.
             return self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
+        finally:
+            self._finish_op()
 
     def read_meta(self, key: str) -> TensorMeta:
         with self._lock:
+            self._check_open()
             meta = self._resolve(key)
             if meta is None:
                 raise KeyError(key)
@@ -233,9 +398,26 @@ class DeltaFS:
         """
         value = np.ascontiguousarray(value)
         with self._lock:
+            self._check_open()
             prev = self._resolve(key)
+            self._inflight += 1
+        # The O(tensor-bytes) hash/encode runs outside the shared layer lock
+        # (the chunk store locks itself), so sibling sandboxes' copy-ups
+        # proceed in parallel.  The in-flight count keeps a concurrent
+        # close() from freeing ``prev``'s chunks mid-encode.
+        try:
             meta, dirtied = digest_encode_array(self.store, value, prev)
-            upper = self._layers[self.upper_id]
+        except BaseException:
+            self._finish_op()
+            raise
+        with self._lock:
+            if self._closed:
+                # closed between the two phases: return the just-taken chunk
+                # refs before failing, or they would leak
+                self.store.decref_many(meta.chunk_ids)
+                self._finish_op()
+                raise RuntimeError("namespace view is closed (sandbox released)")
+            upper = self.layers._layers[self.upper_id]
             old_entry = upper.entries.get(key)
             if old_entry is not None:  # second write to same key in this generation
                 for cid in old_entry.chunk_ids:
@@ -243,13 +425,15 @@ class DeltaFS:
             upper.entries[key] = meta
             upper.tombstones.discard(key)
             self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, False)
+            self._finish_op()
             return dirtied
 
     def delete(self, key: str) -> None:
         with self._lock:
+            self._check_open()
             if self._resolve(key) is None:
                 raise KeyError(key)
-            upper = self._layers[self.upper_id]
+            upper = self.layers._layers[self.upper_id]
             entry = upper.entries.pop(key, None)
             if entry is not None:
                 for cid in entry.chunk_ids:
@@ -265,11 +449,12 @@ class DeltaFS:
         reference retained on every layer in it on behalf of the caller.
         """
         with self._lock:
-            upper = self._layers[self.upper_id]
-            upper.frozen = True
+            self._check_open()
+            layers = self.layers._layers
+            self.layers.freeze(self.upper_id)
             config = tuple(self._stack)
             for layer_id in config:       # caller's retained reference
-                self._layers[layer_id].refs += 1
+                layers[layer_id].refs += 1
             self._push_fresh_upper()
             self.checkpoint_gen += 1
             return config
@@ -281,28 +466,40 @@ class DeltaFS:
         The abandoned (possibly dirty) upper layer is released.
         """
         with self._lock:
-            for layer_id in config:
-                layer = self._layers.get(layer_id)
-                if layer is None or not layer.frozen:
-                    raise ValueError(f"layer {layer_id} is not a frozen live layer")
+            self._check_open()
+            self.layers.retain_frozen_config(config)   # new stack references
             old_stack = list(self._stack)
-            for layer_id in config:       # new stack references
-                self._layers[layer_id].refs += 1
             self._stack = list(config)
             self._push_fresh_upper()
-            for layer_id in old_stack:    # drop old stack references
-                self._release_layer(layer_id)
+            if self._inflight:
+                # an unlocked read/encode may still reference the old
+                # stack's chunks; the last op out releases it
+                self._pending_release.append(old_stack)
+            else:
+                for layer_id in old_stack:    # drop old stack references
+                    self.layers.release_layer(layer_id)
             self.checkpoint_gen += 1
 
     def retain_config(self, config: LayerConfig) -> None:
-        with self._lock:
-            for layer_id in config:
-                self._layers[layer_id].refs += 1
+        self.layers.retain_config(config)
 
     def release_config(self, config: LayerConfig) -> None:
+        self.layers.release_config(config)
+
+    def close(self) -> None:
+        """Release this view's live-stack references (sandbox teardown).
+
+        Frozen layers shared with siblings or retained configurations
+        survive; the private upper (and any un-checkpointed writes in it)
+        is freed.  Idempotent.
+        """
         with self._lock:
-            for layer_id in config:
-                self._release_layer(layer_id)
+            if self._closed:
+                return
+            self._closed = True
+            if self._inflight == 0:
+                self._release_stack_locked()
+            # else: the last in-flight op's _finish_op releases the stack
 
     # ------------------------------------------------------------- helpers
     def write_pytree(self, prefix: str, tree: Dict[str, np.ndarray]) -> int:
@@ -312,13 +509,30 @@ class DeltaFS:
         return dirtied
 
     def layer_count(self) -> int:
-        with self._lock:
-            return len(self._layers)
+        return self.layers.layer_count()
 
     def debug_validate(self) -> None:
         """Invariant check used by property tests: every referenced chunk is alive."""
-        with self._lock:
-            for layer in self._layers.values():
-                for meta in layer.entries.values():
-                    for cid in meta.chunk_ids:
-                        assert cid in self.store, f"dangling chunk {cid}"
+        self.layers.debug_validate()
+
+
+class DeltaFS(NamespaceView):
+    """Layered copy-on-write tensor filesystem with O(1) checkpoint/rollback.
+
+    The single-sandbox facade: a :class:`NamespaceView` over a (by default
+    private) :class:`LayerStore`.  Pass ``layers=`` to mount a view over an
+    existing store — that is how :class:`~repro.core.sandbox_tree.SandboxTree`
+    materializes sibling sandboxes sharing every frozen layer.
+    """
+
+    def __init__(
+        self,
+        store: Optional[ChunkStore] = None,
+        *,
+        chunk_bytes: int = 64 * 1024,
+        layers: Optional[LayerStore] = None,
+        base_config: LayerConfig = (),
+    ):
+        if layers is None:
+            layers = LayerStore(store, chunk_bytes=chunk_bytes)
+        super().__init__(layers, base_config=base_config)

@@ -11,6 +11,10 @@ restore-fail re-selection loop.  The reachability rule keeps
   * every ancestor of a kept node (LW markers replay through their parents;
     the index tree must stay connected),
   * the node the sandbox currently descends from,
+  * every node a **live forked sandbox** descends from (the multi-sandbox
+    DAG: SandboxTree children pin their base checkpoints, so a layer or
+    template is reclaimable only when no live sandbox *or* surviving
+    snapshot references it),
 
 and reclaims the rest — safe by construction: only nodes the search itself
 has declared unreachable are dropped.  Non-tree search (Best-of-N), where
@@ -20,7 +24,7 @@ from __future__ import annotations
 
 from typing import List, Set
 
-from .state_manager import StateManager
+from .state_manager import CheckpointError, StateManager
 
 __all__ = ["reachability_gc", "recency_gc"]
 
@@ -39,11 +43,15 @@ def reachability_gc(
             keep.add(node.ckpt_id)
     if sm.current is not None:
         keep.add(sm.current)
+    keep |= sm.pinned_ckpts()            # live forked sandboxes' bases
     closed = _close_over_replay_chains(sm, keep)
     reclaimed = []
     for node in sm.live_nodes():
         if node.ckpt_id not in closed:
-            sm.reclaim(node.ckpt_id)
+            try:
+                sm.reclaim(node.ckpt_id)
+            except CheckpointError:
+                continue            # pinned by a fork racing this pass
             reclaimed.append(node.ckpt_id)
     return reclaimed
 
@@ -68,10 +76,14 @@ def recency_gc(sm: StateManager, *, keep_last: int = 8) -> List[int]:
     protected = {n.ckpt_id for n in live[:keep_last]}
     if sm.current is not None:
         protected.add(sm.current)
+    protected |= sm.pinned_ckpts()       # live forked sandboxes' bases
     closed = _close_over_replay_chains(sm, protected)
     reclaimed = []
     for node in live[keep_last:]:
         if node.ckpt_id not in closed:
-            sm.reclaim(node.ckpt_id)
+            try:
+                sm.reclaim(node.ckpt_id)
+            except CheckpointError:
+                continue            # pinned by a fork racing this pass
             reclaimed.append(node.ckpt_id)
     return reclaimed

@@ -41,7 +41,8 @@ def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
     seen = set()
     layers_meta = {}
     for lid in layer_ids:
-        layer = fs._layers[lid]
+        layer = fs.layers.get(lid)
+        assert layer is not None, f"config references dead layer {lid}"
         entries = {}
         for key, meta in layer.entries.items():
             entries[key] = {
@@ -105,7 +106,7 @@ def load_store(path: str) -> Tuple[DeltaFS, Dict[str, LayerConfig]]:
     # rebuild layers bottom-up in id order, as frozen lowers
     lid_map: Dict[int, int] = {}
     for old_lid_s, meta in sorted(manifest["layers"].items(), key=lambda kv: int(kv[0])):
-        layer = fs._new_layer()
+        layer = fs.layers.new_layer()
         layer.frozen = True
         for key, ent in meta["entries"].items():
             ids = []

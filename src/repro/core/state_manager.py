@@ -19,6 +19,11 @@ Responsibilities (paper §3.2, §3.3, §4.3):
   restore replays the recorded actions on the parent's state (§6.3.3).
 * **Value-time test isolation**: pre-test checkpoint + unconditional restore
   around side-effecting evaluations (§4.3).
+* **Multi-sandbox support**: :class:`~repro.core.sandbox_tree.SandboxTree`
+  children *pin* the checkpoints they descend from (``pin``/``unpin``) —
+  pinned nodes are exempt from ``reclaim`` and protected by GC — and
+  register their checkpoints through ``allocate_ckpt_id``/``adopt_node``
+  without moving the trunk's ``current``.
 """
 from __future__ import annotations
 
@@ -106,6 +111,11 @@ class StateManager:
         self.nodes: Dict[int, SnapshotNode] = {}
         self._next_ckpt = 1
         self._current: Optional[int] = None      # checkpoint the session descends from
+        self._root_id: Optional[int] = None      # cached tree root (root() is O(1))
+        # ckpt_id -> count of live forked sandboxes descending from it; a
+        # pinned checkpoint must not be reclaimed (SandboxTree children
+        # resolve reads through its layers and dump deltas against it)
+        self._pins: Dict[int, int] = {}
         self._lock = threading.RLock()
         # replay-from for LW restore: ckpt_id -> action applier
         self.action_applier: Optional[Callable[[Sandbox, Any], None]] = None
@@ -121,10 +131,81 @@ class StateManager:
         return self.nodes[ckpt_id]
 
     def root(self) -> Optional[SnapshotNode]:
-        for node in self.nodes.values():
-            if node.parent_id is None:
-                return node
-        return None
+        """The tree root, O(1): cached at registration instead of scanned."""
+        with self._lock:
+            if self._root_id is None:
+                return None
+            return self.nodes.get(self._root_id)
+
+    # ---------------------------------------------------------- fork pins
+    def pin(self, ckpt_id: int) -> None:
+        """Record a live forked sandbox descending from ``ckpt_id``.
+
+        Pinned checkpoints are exempt from ``reclaim`` and are added to the
+        GC keep set: a layer or template is reclaimable only when no live
+        sandbox *or* surviving snapshot references it."""
+        with self._lock:
+            node = self.nodes.get(ckpt_id)
+            if node is None:
+                raise KeyError(f"cannot pin unknown checkpoint {ckpt_id}")
+            if node.reclaimed:
+                # atomic with reclaim (same lock): a fork that lost the race
+                # against GC must fail here, never restore freed state
+                raise KeyError(f"cannot pin reclaimed checkpoint {ckpt_id}")
+            self._pins[ckpt_id] = self._pins.get(ckpt_id, 0) + 1
+
+    def unpin(self, ckpt_id: int) -> None:
+        with self._lock:
+            n = self._pins.get(ckpt_id, 0)
+            if n <= 1:
+                self._pins.pop(ckpt_id, None)
+            else:
+                self._pins[ckpt_id] = n - 1
+
+    def pinned_ckpts(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._pins)
+
+    # ------------------------------------------------- forked-child support
+    def allocate_ckpt_id(self) -> int:
+        """Reserve a checkpoint id (SandboxTree children checkpoint
+        concurrently; id allocation must be atomic across them)."""
+        with self._lock:
+            ckpt_id = self._next_ckpt
+            self._next_ckpt += 1
+            return ckpt_id
+
+    def adopt_node(
+        self,
+        ckpt_id: int,
+        parent_id: Optional[int],
+        layer_config: Optional[LayerConfig],
+        *,
+        lightweight: bool = False,
+        replay_actions: Tuple[Any, ...] = (),
+    ) -> SnapshotNode:
+        """Register a checkpoint produced by a forked sandbox.
+
+        Unlike :meth:`checkpoint` this does not move ``current`` — the trunk
+        session keeps descending from its own node; the new node hangs off
+        ``parent_id`` exactly like a child the trunk itself expanded."""
+        with self._lock:
+            if ckpt_id in self.nodes:
+                raise ValueError(f"checkpoint {ckpt_id} already registered")
+            node = SnapshotNode(
+                ckpt_id=ckpt_id,
+                parent_id=parent_id,
+                layer_config=layer_config,
+                lightweight=lightweight,
+                replay_actions=tuple(replay_actions),
+            )
+            self.nodes[ckpt_id] = node
+            if parent_id is not None:
+                self.nodes[parent_id].children.append(ckpt_id)
+            elif self._root_id is None:
+                self._root_id = ckpt_id
+            self.checkpoint_count += 1
+            return node
 
     # ---------------------------------------------------------- checkpoint
     def checkpoint(
@@ -159,6 +240,8 @@ class StateManager:
                 self.nodes[ckpt_id] = node
                 if parent is not None:
                     self.nodes[parent].children.append(ckpt_id)
+                elif self._root_id is None:
+                    self._root_id = ckpt_id
                 self._current = ckpt_id
                 self.checkpoint_count += 1
                 return ckpt_id
@@ -173,9 +256,13 @@ class StateManager:
                     self.sandbox.proc, ckpt_id, self._nearest_full(parent), dump=dump
                 )
             except Exception as exc:
-                # §4.3 failure handling: roll the filesystem back so no
-                # inconsistent half-state is ever registered.
-                self.sandbox.fs.switch(config[:-1] if len(config) > 1 else config)
+                # §4.3 failure handling: no inconsistent half-state is ever
+                # registered.  The live stack already equals the full
+                # pre-checkpoint state (every just-frozen layer plus a fresh
+                # upper), so the session keeps *all* of its writes — only the
+                # caller-retained config reference is dropped.  Switching to a
+                # truncated config here would silently discard the frozen
+                # upper's writes and desynchronize session and filesystem.
                 self.sandbox.fs.release_config(config)
                 raise CheckpointError(f"checkpoint {ckpt_id} aborted: {exc}") from exc
 
@@ -183,6 +270,8 @@ class StateManager:
             self.nodes[ckpt_id] = node
             if parent is not None:
                 self.nodes[parent].children.append(ckpt_id)
+            elif self._root_id is None:
+                self._root_id = ckpt_id
             self._current = ckpt_id
             self.checkpoint_count += 1
             return ckpt_id
@@ -232,21 +321,32 @@ class StateManager:
             # 4. LW replay: re-apply recorded read-only actions on top.
             mode = path
             if full != ckpt_id:
-                chain: List[SnapshotNode] = []
-                walk: Optional[int] = ckpt_id
-                while walk is not None and walk != full:
-                    chain.append(self.nodes[walk])
-                    walk = self.nodes[walk].parent_id
-                for lw in reversed(chain):
-                    for action in lw.replay_actions:
-                        if self.action_applier is None:
-                            raise CheckpointError("LW restore requires action_applier")
-                        self.action_applier(self.sandbox, action)
+                self.replay_lw_chain(self.sandbox, full, ckpt_id)
                 mode = f"{path}+replay"
 
             self._current = ckpt_id
             self.restore_count += 1
             return mode
+
+    def replay_lw_chain(self, sandbox: Sandbox, full: int, ckpt_id: int) -> int:
+        """Re-apply the LW markers' recorded actions between ``full``
+        (exclusive) and ``ckpt_id`` (inclusive) on ``sandbox``.
+
+        The one replay loop shared by trunk restore and SandboxTree forks
+        from lightweight nodes; returns the number of actions replayed."""
+        chain: List[SnapshotNode] = []
+        walk: Optional[int] = ckpt_id
+        while walk is not None and walk != full:
+            chain.append(self.nodes[walk])
+            walk = self.nodes[walk].parent_id
+        replayed = 0
+        for lw in reversed(chain):
+            for action in lw.replay_actions:
+                if self.action_applier is None:
+                    raise CheckpointError("LW replay requires action_applier")
+                self.action_applier(sandbox, action)
+                replayed += 1
+        return replayed
 
     # ------------------------------------------------- value-time isolation
     def isolated_eval(self, fn: Callable[[Sandbox], Any]) -> Any:
@@ -277,16 +377,27 @@ class StateManager:
             if node.parent_id is not None:
                 self.nodes[node.parent_id].children.remove(ckpt_id)
             del self.nodes[ckpt_id]
+            if self._root_id == ckpt_id:
+                self._root_id = None
             if self._current == ckpt_id:
                 self._current = node.parent_id
 
     # ------------------------------------------------------------------ gc
     def reclaim(self, ckpt_id: int) -> None:
-        """Release a node's storage (template + dump + layer refs)."""
+        """Release a node's storage (template + dump + layer refs).
+
+        Refuses while live forked sandboxes still descend from the node:
+        their reads resolve through its layers and their next dump deltas
+        against its image, so reclaiming it would corrupt live sessions."""
         with self._lock:
             node = self.nodes[ckpt_id]
             if node.reclaimed:
                 return
+            if self._pins.get(ckpt_id, 0) > 0:
+                raise CheckpointError(
+                    f"checkpoint {ckpt_id} is pinned by "
+                    f"{self._pins[ckpt_id]} live forked sandbox(es)"
+                )
             node.reclaimed = True
             if not node.lightweight:
                 self.deltacr.drop_checkpoint(ckpt_id)

@@ -70,6 +70,17 @@ class StreamConfig:
     two workers overlap two windows' hashing on top of overlapping with the
     encode stage; ``max_inflight`` (encode-ahead + draining windows) bounds
     total staging memory at ``max_inflight × window_bytes``.
+
+    **Adaptive windowing** (``adaptive=True``): instead of the fixed byte
+    budget, each dump's window size is derived from an EWMA of the
+    *measured* bottleneck-stage throughput of previous dumps, targeting
+    ``target_window_ms`` of bottleneck work per window — fast hosts get
+    bigger windows (less per-window glue), slow or contended hosts get
+    smaller ones (finer-grained overlap, bounded staging latency), clamped
+    to ``[min_window_bytes, max_window_bytes]``.  The first dump seeds with
+    ``window_bytes``.  Windowing only moves stage *boundaries*: streamed
+    images stay bit-identical whatever budget is chosen, and the budget a
+    dump actually used is reported in :attr:`StreamStats.window_bytes`.
     """
 
     window_bytes: int = 4 << 20
@@ -77,6 +88,12 @@ class StreamConfig:
     min_windows: int = 2             # fewer → run synchronously
     drain_workers: int = 2           # parallel window drains (hash/DMA-bound)
     enabled: bool = True
+    # -- adaptive windowing ----------------------------------------------
+    adaptive: bool = False           # EWMA-sized windows (DeltaCR default: on)
+    target_window_ms: float = 8.0    # bottleneck-stage work per window
+    min_window_bytes: int = 1 << 20
+    max_window_bytes: int = 32 << 20
+    ewma_alpha: float = 0.3          # weight of the newest dump's measurement
 
 
 @dataclass
@@ -90,6 +107,7 @@ class StreamStats:
     commit_ms: float = 0.0           # caller thread: store puts + metadata
     wall_ms: float = 0.0
     demoted_windows: int = 0
+    window_bytes: int = 0            # the budget this dump's windows used
 
     @property
     def stage_sum_ms(self) -> float:
@@ -239,9 +257,44 @@ class ChunkStreamEngine:
             max_workers=max(1, self.cfg.drain_workers), thread_name_prefix="stream-drain"
         )
         self._shut = False
+        # EWMA of the bottleneck stage's ms-per-MiB over completed dumps;
+        # None until the first successful streamed dump seeds it.  Touched
+        # only by DeltaCR's single dump worker — no lock needed.
+        self._ewma_ms_per_mib: Optional[float] = None
+
+    # ------------------------------------------------------- window budget
+    def window_budget(self) -> int:
+        """The byte budget the *next* dump's windows will be packed with.
+
+        Fixed ``cfg.window_bytes`` unless adaptive windowing is on and at
+        least one dump has been measured, in which case the budget targets
+        ``cfg.target_window_ms`` of bottleneck-stage work per window."""
+        cfg = self.cfg
+        if not cfg.adaptive or self._ewma_ms_per_mib is None:
+            return cfg.window_bytes
+        budget = int(cfg.target_window_ms / self._ewma_ms_per_mib * (1 << 20))
+        return max(cfg.min_window_bytes, min(cfg.max_window_bytes, budget))
+
+    def _observe(self, stats: StreamStats, total_weight: int) -> None:
+        """Fold one completed dump's stage timings into the EWMA."""
+        if not self.cfg.adaptive or total_weight <= 0:
+            return
+        bottleneck_ms = max(stats.encode_ms, stats.drain_ms, stats.commit_ms)
+        if bottleneck_ms <= 0.0:
+            return
+        ms_per_mib = bottleneck_ms / (total_weight / (1 << 20))
+        if self._ewma_ms_per_mib is None:
+            self._ewma_ms_per_mib = ms_per_mib
+        else:
+            a = self.cfg.ewma_alpha
+            self._ewma_ms_per_mib = a * ms_per_mib + (1 - a) * self._ewma_ms_per_mib
 
     # ------------------------------------------------------------------ api
     def should_stream(self, items: Sequence[WindowItem]) -> bool:
+        # Eligibility uses the FIXED seed budget, not the adaptive one: if a
+        # grown adaptive budget could demote dumps to the synchronous path,
+        # the EWMA (updated only by streamed dumps) could never shrink back
+        # — a one-way ratchet that would permanently disable overlap.
         if not self.cfg.enabled or self._shut or not items:
             return False
         return len(pack_windows(items, self.cfg.window_bytes)) >= self.cfg.min_windows
@@ -266,8 +319,18 @@ class ChunkStreamEngine:
         the cancel event tripped (the caller rolls back ``results`` and
         re-raises or recovers).
         """
-        windows = pack_windows(items, self.cfg.window_bytes)
-        stats = StreamStats(windows=len(windows), items=len(items))
+        budget = self.window_budget()
+        total_weight = sum(it.weight for it in items) if self.cfg.adaptive else 0
+        if self.cfg.adaptive:
+            # floor first, then cap: the min_windows guarantee must win, or
+            # an oversized floor could collapse a streamable dump into one
+            # window — the degeneration this guard exists to prevent (the
+            # EWMA only updates on streamed dumps, so losing the windows
+            # would also freeze the budget)
+            budget = max(budget, self.cfg.min_window_bytes)
+            budget = min(budget, max(1, total_weight // max(self.cfg.min_windows, 1)))
+        windows = pack_windows(items, budget)
+        stats = StreamStats(windows=len(windows), items=len(items), window_bytes=budget)
         gate = self.gate
         # never dispatch more windows than the gate can admit, or the commit
         # loop could wait on a slot the caller itself is holding
@@ -316,6 +379,7 @@ class ChunkStreamEngine:
             raise StreamCancelled(
                 f"dump stream cancelled after {len(results)}/{len(items)} tensors"
             )
+        self._observe(stats, total_weight)
         return stats
 
     def _commit_window(self, entry, results, stats, cancel, gate) -> bool:

@@ -1,10 +1,19 @@
 """Search strategies over DeltaState: MCTS (UCT) + Best-of-N / RL fan-out."""
 from .archetypes import ARCHETYPES, ArchetypeSpec, SyntheticAgentTask, build_sandbox_state
-from .fanout import FanoutResult, fork_n, rollout_fanout, staleness, sync_gpu_occupation
+from .fanout import (
+    FanoutResult,
+    checkpoint_burst,
+    fork_n,
+    fork_sandboxes,
+    rollout_fanout,
+    staleness,
+    sync_gpu_occupation,
+)
 from .mcts import MCTS, AgentTask, MCTSConfig, MCTSStats
 
 __all__ = [
     "ARCHETYPES", "ArchetypeSpec", "SyntheticAgentTask", "build_sandbox_state",
-    "FanoutResult", "fork_n", "rollout_fanout", "staleness", "sync_gpu_occupation",
+    "FanoutResult", "checkpoint_burst", "fork_n", "fork_sandboxes",
+    "rollout_fanout", "staleness", "sync_gpu_occupation",
     "MCTS", "AgentTask", "MCTSConfig", "MCTSStats",
 ]

@@ -2,10 +2,22 @@
 
 Each training step forks N independent sandboxes from the same warm
 starting state, runs them as rollouts, scores them, and tears them down.
-Fork latency directly bounds training throughput, so the primitive here is
-``fork_n``: N template forks (page-table copies + refcount bumps) with
-latency percentiles and footprint accounting — the Table 3 / Fig 7(a)
-analogue.
+Fork latency directly bounds training throughput, so the primitives here
+are:
+
+* ``fork_n``         — N bare template forks (page-table copies + refcount
+                       bumps) with latency percentiles and footprint
+                       accounting — the Table 3 / Fig 7(a) analogue.
+* ``fork_sandboxes`` — N **live sandboxes** from a checkpoint through a
+                       :class:`~repro.core.sandbox_tree.SandboxTree`:
+                       process template fork *plus* a shared-layer
+                       namespace view per child, i.e. the end-to-end cost a
+                       real fan-out pays.
+* ``rollout_fanout`` — the full RL-step substrate path over either source:
+                       fan-out + (optionally threaded) rollouts + teardown.
+                       Passing a ``SandboxTree`` + ``ckpt_id`` drives real
+                       sandbox forks; passing a bare ``ForkableState`` keeps
+                       the historical process-only behavior.
 
 ``sync_gpu_occupation`` reproduces the Fig 7(c) model:
     occ = (T_gen + T_train) / (T_sandbox + T_gen + T_train).
@@ -14,16 +26,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.deltacr import DeltaCR, ForkableState
+from repro.core.sandbox_tree import SandboxTree
+from repro.core.state_manager import Sandbox
 
 __all__ = [
     "FanoutResult",
     "checkpoint_burst",
     "fork_n",
+    "fork_sandboxes",
     "rollout_fanout",
     "sync_gpu_occupation",
     "staleness",
@@ -47,6 +63,22 @@ class FanoutResult:
         return float(np.percentile(self.fork_ms, 99))
 
 
+def _result(children: Sequence[Any], fork_ms: List[float], total_ms: float) -> FanoutResult:
+    resident = 0
+    for c in children:
+        state = c.proc if isinstance(c, Sandbox) else c
+        rb = getattr(state, "resident_bytes", None)
+        if callable(rb):
+            resident += rb()
+    return FanoutResult(
+        n=len(children),
+        fork_ms=fork_ms,
+        total_ms=total_ms,
+        resident_bytes=resident,
+        forks_per_s=len(children) / max(total_ms / 1e3, 1e-9),
+    )
+
+
 def fork_n(template: ForkableState, n: int) -> Tuple[List[ForkableState], FanoutResult]:
     """Fork ``n`` children from one frozen template, timing each fork."""
     children: List[ForkableState] = []
@@ -57,35 +89,73 @@ def fork_n(template: ForkableState, n: int) -> Tuple[List[ForkableState], Fanout
         children.append(template.fork())
         fork_ms.append((time.perf_counter() - t0) * 1e3)
     total_ms = (time.perf_counter() - t_start) * 1e3
-    resident = 0
-    for c in children:
-        rb = getattr(c, "resident_bytes", None)
-        if callable(rb):
-            resident += rb()
-    return children, FanoutResult(
-        n=n,
-        fork_ms=fork_ms,
-        total_ms=total_ms,
-        resident_bytes=resident,
-        forks_per_s=n / max(total_ms / 1e3, 1e-9),
-    )
+    return children, _result(children, fork_ms, total_ms)
+
+
+def fork_sandboxes(
+    tree: SandboxTree, ckpt_id: int, n: int
+) -> Tuple[List[Sandbox], FanoutResult]:
+    """Fork ``n`` live sandboxes from a checkpoint, timing each fork.
+
+    The end-to-end fan-out primitive: each fork is a DeltaCR template fork
+    *plus* a fresh namespace view over the shared layer store — what a real
+    rollout pays before its first action.  Callers release children via
+    ``tree.release(sandbox.sandbox_id)`` (or ``tree.release_all()``)."""
+    children: List[Sandbox] = []
+    fork_ms: List[float] = []
+    t_start = time.perf_counter()
+    for _ in range(n):
+        t0 = time.perf_counter()
+        children.append(tree.fork(ckpt_id, 1)[0])
+        fork_ms.append((time.perf_counter() - t0) * 1e3)
+    total_ms = (time.perf_counter() - t_start) * 1e3
+    return children, _result(children, fork_ms, total_ms)
 
 
 def rollout_fanout(
-    template: ForkableState,
+    source: Union[ForkableState, SandboxTree],
     n: int,
-    rollout_fn: Callable[[ForkableState, int], float],
+    rollout_fn: Callable[[Any, int], float],
     *,
+    ckpt_id: Optional[int] = None,
     teardown: bool = True,
+    workers: int = 0,
 ) -> Tuple[List[float], FanoutResult]:
     """Fork N children, run ``rollout_fn(child, i) -> reward``, tear down.
 
-    The full RL-step substrate path: fan-out + rollouts + release."""
-    children, result = fork_n(template, n)
-    rewards = [rollout_fn(child, i) for i, child in enumerate(children)]
-    if teardown:
+    The full RL-step substrate path: fan-out + rollouts + release.  With a
+    :class:`SandboxTree` source (``ckpt_id`` required) the children are live
+    sandboxes sharing every frozen layer; ``workers > 1`` runs the rollouts
+    on a thread pool — sound because sibling sandboxes are mutually
+    isolated by construction (CoW process state, private fs uppers)."""
+    if isinstance(source, SandboxTree):
+        if ckpt_id is None:
+            raise ValueError("SandboxTree fan-out requires ckpt_id")
+        children, result = fork_sandboxes(source, ckpt_id, n)
+    else:
+        children, result = fork_n(source, n)
+
+    def _release_children() -> None:
         for child in children:
-            child.release()
+            if isinstance(source, SandboxTree):
+                source.release(child.sandbox_id)
+            else:
+                child.release()
+
+    try:
+        if workers > 1:
+            with ThreadPoolExecutor(max_workers=workers, thread_name_prefix="rollout") as pool:
+                rewards = list(pool.map(rollout_fn, children, range(len(children))))
+        else:
+            rewards = [rollout_fn(child, i) for i, child in enumerate(children)]
+    except BaseException:
+        # a failed rollout must not leak the fan-out: live children would
+        # stay resident and keep their base checkpoint pinned forever
+        _release_children()
+        raise
+
+    if teardown:
+        _release_children()
     return rewards, result
 
 
@@ -93,7 +163,7 @@ def checkpoint_burst(
     cr: DeltaCR,
     states: Sequence[ForkableState],
     ckpt_ids: Sequence[int],
-    parent_ckpt: Optional[int] = None,
+    parent_ckpt: Union[Optional[int], Sequence[Optional[int]]] = None,
     *,
     priority: str = "bg",
     wait: bool = False,
@@ -106,14 +176,23 @@ def checkpoint_burst(
     DeltaCR's FIFO worker in one pass — the streaming engine's QoS gate
     bounds in-flight windows and demotes ``priority="bg"`` dumps while the
     scheduler has runnable sessions, so the storm drains in the background
-    masked by inference.  Returns the dump futures (resolve when durable)
-    and the synchronous submit cost in ms (forks + queue pushes only).
+    masked by inference.  ``parent_ckpt`` may be a single id (all states
+    dump against one parent — the classic same-template burst) or one id
+    per state (a SandboxTree batch whose children descend from different
+    nodes).  Returns the dump futures (resolve when durable) and the
+    synchronous submit cost in ms (forks + queue pushes only).
     """
     if len(states) != len(ckpt_ids):
         raise ValueError("states and ckpt_ids must align")
+    if isinstance(parent_ckpt, (list, tuple)):
+        if len(parent_ckpt) != len(states):
+            raise ValueError("per-state parents must align with states")
+        parents: Sequence[Optional[int]] = parent_ckpt
+    else:
+        parents = [parent_ckpt] * len(states)
     t0 = time.perf_counter()
-    for state, ckpt_id in zip(states, ckpt_ids):
-        cr.checkpoint(state, ckpt_id, parent_ckpt, priority=priority)
+    for state, ckpt_id, parent in zip(states, ckpt_ids, parents):
+        cr.checkpoint(state, ckpt_id, parent, priority=priority)
     submit_ms = (time.perf_counter() - t0) * 1e3
     futs = [cr.dump_future(c) for c in ckpt_ids]
     if wait:

@@ -9,6 +9,13 @@ resuming them later via template fork or dump restore.  Suspension turns
 idle agents (seconds-long tool calls, human turns) into near-zero HBM
 footprint, which is exactly the paper's economics applied to a fleet.
 
+Forked children are first-class sessions: ``fork`` splits an active
+scheduled session in place, and ``admit_forked`` adopts a session forked
+*outside* the scheduler — e.g. a SandboxTree child's process state — into
+the same lifecycle (continuous batching, LRU suspension through DeltaCR,
+dump QoS), so a search fan-out and the serving fleet share one admission
+and eviction policy.
+
 Dump QoS (this layer owns the policy, ``core.stream`` owns the mechanism):
 
 * The scheduler installs a :class:`~repro.core.stream.DumpGate` on DeltaCR's
@@ -108,7 +115,27 @@ class Scheduler:
         child = h.session.fork()
         nsid = next(self._sid)
         self.handles[nsid] = SessionHandle(sid=nsid, state="active", session=child)
+        self._refresh_runnable_hint()
         return nsid
+
+    def admit_forked(self, session) -> int:
+        """Admit an externally forked live session as a scheduled session.
+
+        The SandboxTree integration point: a child forked from a checkpoint
+        (its process state is a ``PagedSession``/``ForkableState`` the
+        caller owns) joins continuous batching, LRU suspension, and dump
+        QoS exactly like a session this scheduler prefilled itself.  The
+        scheduler takes ownership: ``finish``/``suspend`` release it.
+        Raises ``MemoryError`` when the pool lacks admission headroom (the
+        fork itself allocated nothing, but decoding it will)."""
+        self._drain_suspends()
+        self._ensure_headroom()
+        if self.engine.pool.free_pages() < self.cfg.min_free_pages:
+            raise MemoryError("no page headroom to admit forked session")
+        sid = next(self._sid)
+        self.handles[sid] = SessionHandle(sid=sid, state="active", session=session)
+        self._refresh_runnable_hint()
+        return sid
 
     # --------------------------------------------------------------- states
     def suspend(self, sid: int, *, keep_template: bool = False, urgent: bool = False) -> None:

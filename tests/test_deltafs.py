@@ -1,11 +1,12 @@
-"""DeltaFS: layer semantics, O(1) rollback, lazy re-resolution, and a
+"""DeltaFS: layer semantics, O(1) rollback, lazy re-resolution, the
+LayerStore/NamespaceView split (sibling views sharing frozen layers), and a
 hypothesis state machine checking the overlay against a dict-of-snapshots
 reference model."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.deltafs import DeltaFS
+from repro.core.deltafs import DeltaFS, LayerStore, NamespaceView
 
 
 def _arr(seed, n=64):
@@ -106,6 +107,71 @@ def test_abandoned_upper_released_on_switch():
     fs.switch(c1)                                 # rollback discards junk
     assert fs.store.stats.physical_bytes < before
     assert not fs.exists("junk")
+
+
+# ---------------------------------------------------------------------------
+# LayerStore / NamespaceView: sibling views over shared frozen layers
+# ---------------------------------------------------------------------------
+
+def test_sibling_views_share_layers_and_isolate_writes():
+    fs = DeltaFS(chunk_bytes=32)
+    fs.write("shared", _arr(1, 1024))
+    cfg = fs.checkpoint()
+    phys = fs.store.stats.physical_bytes
+    views = [NamespaceView(fs.layers, base_config=cfg) for _ in range(3)]
+    assert fs.store.stats.physical_bytes == phys          # mounting copies nothing
+    for v in views:
+        np.testing.assert_array_equal(v.read("shared"), _arr(1, 1024))
+    for i, v in enumerate(views):
+        v.write(f"own{i}", _arr(10 + i))
+    for i, v in enumerate(views):
+        for j in range(3):
+            assert v.exists(f"own{j}") == (i == j)        # private uppers
+    assert not fs.exists("own0")                          # original view untouched
+    for v in views:
+        v.close()
+    assert fs.store.stats.physical_bytes == phys          # private deltas freed
+    fs.release_config(cfg)
+    fs.debug_validate()
+
+
+def test_view_checkpoint_configs_cross_views():
+    """A config frozen by one view is switchable/mountable by another —
+    the substrate for SandboxTree.commit splicing a child's layers onto
+    the trunk lineage."""
+    fs = DeltaFS(chunk_bytes=32)
+    fs.write("a", _arr(1))
+    base = fs.checkpoint()
+    view = NamespaceView(fs.layers, base_config=base)
+    view.write("a", _arr(2))
+    view.write("b", _arr(3))
+    child_cfg = view.checkpoint()
+    view.close()
+    fs.switch(child_cfg)                                  # trunk adopts child's layers
+    np.testing.assert_array_equal(fs.read("a"), _arr(2))
+    np.testing.assert_array_equal(fs.read("b"), _arr(3))
+    fs.release_config(child_cfg)
+    fs.release_config(base)
+    fs.debug_validate()
+
+
+def test_view_requires_frozen_base():
+    fs = DeltaFS(chunk_bytes=32)
+    fs.write("a", _arr(1))
+    with pytest.raises(ValueError):
+        NamespaceView(fs.layers, base_config=(fs.upper_id,))   # mutable upper
+    with pytest.raises(ValueError):
+        NamespaceView(fs.layers, base_config=(999,))           # unknown layer
+
+
+def test_layerstore_debug_validate_catches_leaks():
+    store = LayerStore(chunk_bytes=32)
+    layer = store.new_layer()                             # refs=0: a leak
+    with pytest.raises(AssertionError):
+        store.debug_validate()
+    store.retain_layer(layer.layer_id)
+    store.debug_validate()
+    store.release_layer(layer.layer_id)
 
 
 # ---------------------------------------------------------------------------

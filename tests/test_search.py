@@ -7,6 +7,7 @@ from repro.core import (
     DeltaCR,
     DeltaFS,
     Sandbox,
+    SandboxTree,
     StateManager,
     reachability_gc,
 )
@@ -16,7 +17,9 @@ from repro.search import (
     MCTSConfig,
     SyntheticAgentTask,
     build_sandbox_state,
+    checkpoint_burst,
     fork_n,
+    fork_sandboxes,
     rollout_fanout,
     staleness,
     sync_gpu_occupation,
@@ -85,6 +88,125 @@ def test_mcts_with_gc_stays_correct():
         if not node.lightweight:
             sm.restore(node.ckpt_id)
     fs.debug_validate()
+
+
+def test_parallel_mcts_explores_and_stays_consistent():
+    sm, task, cr, fs = _rig()
+    mcts = MCTS(sm, task, MCTSConfig(iterations=24, parallel_leaves=4, seed=5))
+    st = mcts.run()
+    cr.wait_dumps()
+    assert st.iterations == 24
+    assert st.forks >= 24                    # every leaf explored on a fork
+    assert st.parallel_batches >= 6
+    assert st.nodes > 10
+    assert 0.0 <= st.best_value <= 1.0
+    assert mcts.best_leaf() is not None
+    assert mcts.tree is not None and mcts.tree.live_count() == 0
+    fs.debug_validate()
+    # the tree remains restorable after the parallel run
+    for node in sm.live_nodes():
+        if not node.lightweight:
+            sm.restore(node.ckpt_id)
+            break
+
+
+def test_parallel_mcts_with_gc():
+    sm, task, cr, fs = _rig(pool=8)
+    mcts = MCTS(sm, task, MCTSConfig(iterations=24, parallel_leaves=4, gc_every=8, seed=6))
+    mcts.run()
+    cr.wait_dumps()
+    for node in sm.live_nodes():
+        if not node.lightweight:
+            sm.restore(node.ckpt_id)
+    fs.debug_validate()
+
+
+def test_parallel_mcts_routes_readonly_to_lw():
+    """The parallel driver honors use_lightweight exactly like the serial
+    one: read-only actions become metadata-only markers, not full dumps."""
+    sm, task, cr, fs = _rig("sympy")        # readonly_prob = 0.75
+    mcts = MCTS(sm, task, MCTSConfig(iterations=24, parallel_leaves=4, seed=8))
+    st = mcts.run()
+    cr.wait_dumps()
+    assert st.lw_checkpoints > 0
+    assert st.lw_checkpoints < st.checkpoints
+    # LW children are forkable/restorable (replay through the full ancestor)
+    for node in sm.live_nodes():
+        if node.lightweight and node.replay_actions:
+            assert sm.restore(node.ckpt_id).endswith("+replay")
+            break
+    fs.debug_validate()
+
+
+def test_mcts_time_budget_stops_early():
+    sm, task, cr, fs = _rig()
+    task.action_time_s = 0.02
+    cfg = MCTSConfig(iterations=10_000, time_budget_s=0.3, seed=7)
+    st = MCTS(sm, task, cfg).run()
+    assert 0 < st.iterations < 10_000
+    assert st.wall_s < 5.0
+
+
+def test_rollout_fanout_over_sandbox_tree():
+    sm, task, cr, fs = _rig()
+    c0 = sm.checkpoint()
+    tree = SandboxTree(sm)
+
+    def rollout(sandbox, i):
+        sandbox.fs.write("repo/rollout", np.full(8, i, np.int32))
+        sandbox.proc.mutate("cursor", lambda c: c.__setitem__(0, i))
+        return float(sandbox.fs.read("repo/rollout")[0])
+
+    rewards, res = rollout_fanout(tree, 6, rollout, ckpt_id=c0, workers=3)
+    assert sorted(rewards) == [float(i) for i in range(6)]
+    assert tree.live_count() == 0
+    # trunk untouched by any rollout
+    assert not fs.exists("repo/rollout")
+    assert res.n == 6 and len(res.fork_ms) == 6
+    fs.debug_validate()
+
+
+def test_rollout_fanout_failure_releases_children():
+    """A raising rollout_fn must not leak forked sandboxes or pins."""
+    sm, task, cr, fs = _rig()
+    c0 = sm.checkpoint()
+    tree = SandboxTree(sm)
+
+    def exploding(sandbox, i):
+        if i == 2:
+            raise RuntimeError("rollout died")
+        return 0.0
+
+    with pytest.raises(RuntimeError):
+        rollout_fanout(tree, 4, exploding, ckpt_id=c0)
+    assert tree.live_count() == 0
+    assert not sm.pinned_ckpts()
+    fs.debug_validate()
+
+
+def test_fork_sandboxes_requires_ckpt():
+    sm, task, cr, fs = _rig()
+    tree = SandboxTree(sm)
+    with pytest.raises(ValueError):
+        rollout_fanout(tree, 2, lambda s, i: 0.0)
+
+
+def test_checkpoint_burst_per_state_parents():
+    sm, task, cr, fs = _rig()
+    c0 = sm.checkpoint()
+    tree = SandboxTree(sm)
+    kids, _ = fork_sandboxes(tree, c0, 3)
+    for i, k in enumerate(kids):
+        k.proc.mutate("cursor", lambda c, i=i: c.__setitem__(0, i + 1))
+    ids = [sm.allocate_ckpt_id() for _ in kids]
+    parents = [tree.base_ckpt(k.sandbox_id) for k in kids]
+    futs, submit_ms = checkpoint_burst(
+        cr, [k.proc for k in kids], ids, parents, wait=True
+    )
+    assert all(f is not None and f.done() for f in futs)
+    with pytest.raises(ValueError):
+        checkpoint_burst(cr, [kids[0].proc], [99], [1, 2])   # misaligned parents
+    tree.release_all()
 
 
 def test_fork_n_scaling():

@@ -165,3 +165,39 @@ def test_scheduler_continuous_batching_and_suspension(rig):
         if sched.handles[sid].state != "finished":
             sched.finish(sid)
     cr.shutdown()
+
+
+def test_scheduler_admits_forked_children(rig):
+    """Externally forked sessions (SandboxTree children) join scheduling:
+    they batch, suspend, and resume like scheduler-born sessions."""
+    from repro.core import DeltaCR
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+    cfg, model, params, _ = rig
+    pool = PagePool(cfg, num_pages=32, page_size=8, max_pages_per_session=8)
+    eng = Engine(model, params, pool)
+    cr = DeltaCR(
+        template_pool_size=8,
+        restore_fn=lambda p: PagedSession.restore_from_payload(pool, p),
+    )
+    sched = Scheduler(eng, cr, SchedulerConfig(max_batch=4, min_free_pages=2,
+                                               auto_suspend_free_pages=2))
+    parent = sched.submit([1, 2, 3, 4, 5], SamplingParams(seed=0))
+    sched.step()
+    # fan-out forked outside the scheduler (what a SandboxTree child's proc is)
+    ext = sched.handles[parent].session.fork()
+    free_before = pool.free_pages()
+    sid = sched.admit_forked(ext)
+    assert pool.free_pages() == free_before           # adoption allocates nothing
+    h = sched.handles[sid]
+    assert h.state == "active" and h.session is ext
+    out = sched.step()
+    assert sid in out                                 # batches like any session
+    # full lifecycle: suspend via DeltaCR, resume, finish
+    sched.suspend(sid, keep_template=True)
+    assert sched.handles[sid].state == "suspended"
+    sched.resume(sid)
+    assert sched.handles[sid].state == "active"
+    for s in list(sched.handles):
+        sched.finish(s)
+    cr.shutdown()

@@ -59,6 +59,41 @@ def test_dump_failure_rolls_back_fs():
     assert sm.restore(c1) in ("fast", "slow")
 
 
+def test_dump_failure_preserves_upper_writes():
+    """Regression: the abort rollback used to switch to ``config[:-1]``,
+    silently discarding the just-frozen upper's writes — the live session
+    then diverged from the filesystem.  Writes must survive the abort."""
+    sm, sb, cr = _mk(fail_dump=lambda cid: cid == 2)
+    c1 = sm.checkpoint()
+    sb.fs.write("repo/dirty", np.full(16, 7, np.int32))        # upper-layer write
+    sb.fs.write("repo/f", np.full(100, 3, np.int32))           # overwrite
+    with pytest.raises(CheckpointError):
+        sm.checkpoint()
+    # every pre-abort write is still visible to the session
+    assert sb.fs.read("repo/dirty")[0] == 7
+    assert sb.fs.read("repo/f")[0] == 3
+    # and the sandbox remains fully usable: checkpoint + restore round-trip
+    c3 = sm.checkpoint()
+    sm.restore(c1)
+    assert not sb.fs.exists("repo/dirty")
+    assert sb.fs.read("repo/f")[99] == 99
+    sm.restore(c3)
+    assert sb.fs.read("repo/dirty")[0] == 7 and sb.fs.read("repo/f")[0] == 3
+    sb.fs.debug_validate()
+
+
+def test_root_is_cached_and_correct():
+    sm, sb, cr = _mk()
+    assert sm.root() is None
+    c1 = sm.checkpoint()
+    ids = [sm.checkpoint() for _ in range(5)]
+    assert sm.root().ckpt_id == c1
+    # still the same object after restores / more checkpoints
+    sm.restore(ids[0])
+    sm.checkpoint()
+    assert sm.root().ckpt_id == c1
+
+
 def test_quiesce_required():
     sm, sb, cr = _mk()
     proxy = InferenceProxy(lambda p: p, latency_s=0.2)

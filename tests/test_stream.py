@@ -93,6 +93,101 @@ def test_streamed_images_identical_to_sync():
     cr_str.shutdown()
 
 
+def test_adaptive_windowing_images_identical_to_sync():
+    """EWMA-sized windows only move stage boundaries: images must stay
+    bit-identical to the synchronous pipeline, dump for dump."""
+    cr_sync = _mk_cr(stream=False)
+    cr_adapt = DeltaCR(
+        store=ChunkStore(chunk_bytes=4096),
+        restore_fn=_restore,
+        chunk_bytes=4096,
+        stream=True,
+        stream_config=StreamConfig(
+            window_bytes=24 * 1024,
+            min_windows=2,
+            adaptive=True,
+            target_window_ms=0.05,      # tiny target: forces real adaptation
+            min_window_bytes=8 * 1024,
+            max_window_bytes=1 << 20,
+        ),
+    )
+    _run_chain(cr_sync)
+    _run_chain(cr_adapt)
+    for ckpt in range(1, 5):
+        fp_sync, _ = _entry_fingerprint(cr_sync, ckpt)
+        fp_adapt, _ = _entry_fingerprint(cr_adapt, ckpt)
+        assert fp_sync == fp_adapt
+    assert cr_adapt.store.stats.bytes_written == cr_sync.store.stats.bytes_written
+    cr_sync.shutdown()
+    cr_adapt.shutdown()
+
+
+def test_adaptive_windowing_tracks_measured_rate():
+    """The engine's window budget follows the EWMA of the bottleneck-stage
+    throughput, clamped to the configured bounds, and every streamed dump
+    reports the budget it actually used."""
+    cfg = StreamConfig(
+        window_bytes=64 * 1024,
+        adaptive=True,
+        target_window_ms=4.0,
+        min_window_bytes=16 * 1024,
+        max_window_bytes=256 * 1024,
+        ewma_alpha=0.5,
+        min_windows=1,
+    )
+    eng = ChunkStreamEngine(cfg)
+    assert eng.window_budget() == cfg.window_bytes        # unseeded: fixed seed
+
+    def mk_items(n):
+        # the drain does a measurable slice of real work so the EWMA sees a
+        # nonzero bottleneck-stage time
+        return [
+            WindowItem(key=f"k{i}", weight=32 * 1024,
+                       encode=lambda: None,
+                       drain=lambda e: sum(range(20_000)),
+                       commit=lambda d: d)
+            for i in range(n)
+        ]
+
+    out = {}
+    stats = eng.stream(mk_items(8), out)
+    assert stats.window_bytes == cfg.window_bytes          # first dump: seed budget
+    assert eng._ewma_ms_per_mib is not None and eng._ewma_ms_per_mib > 0
+    budget = eng.window_budget()
+    assert cfg.min_window_bytes <= budget <= cfg.max_window_bytes
+    # a fast workload (near-zero stage times) drives the budget to the clamp
+    stats2 = eng.stream(mk_items(8), {})
+    assert stats2.window_bytes == budget                   # reported = used
+    assert eng.window_budget() <= cfg.max_window_bytes
+    # stats stay observable through DeltaCR images as well
+    eng.shutdown()
+
+    cr = DeltaCR(
+        store=ChunkStore(chunk_bytes=4096),
+        restore_fn=_restore,
+        chunk_bytes=4096,
+        stream=True,
+        stream_config=StreamConfig(window_bytes=24 * 1024, min_windows=2, adaptive=True),
+    )
+    _run_chain(cr)
+    streamed = [cr.dump_future(c).result() for c in range(1, 5)]
+    assert any(img.streamed and img.stream_window_bytes > 0 for img in streamed)
+    cr.shutdown()
+
+
+def test_fixed_windowing_budget_is_constant():
+    cfg = StreamConfig(window_bytes=32 * 1024, adaptive=False, min_windows=1)
+    eng = ChunkStreamEngine(cfg)
+    items = [
+        WindowItem(key=f"k{i}", weight=16 * 1024,
+                   encode=lambda: None, drain=lambda e: e, commit=lambda d: d)
+        for i in range(6)
+    ]
+    eng.stream(items, {})
+    assert eng.window_budget() == cfg.window_bytes         # no drift when fixed
+    eng.shutdown()
+
+
 def test_streamed_slow_restore_roundtrip():
     cr = _mk_cr(stream=True, template_pool_size=1)
     s = _run_chain(cr)
