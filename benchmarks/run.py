@@ -20,6 +20,8 @@ def main() -> None:
         fig9_write_amp,
         fig10_gc_lw,
         fig11_dump_pipeline,
+        fig12_stream_overlap,
+        fig13_persist_recover,
         roofline,
         table2_cr_latency,
         table3_fork_fanout,
@@ -36,6 +38,8 @@ def main() -> None:
         "fig9": fig9_write_amp.run,
         "fig10": fig10_gc_lw.run,
         "fig11": fig11_dump_pipeline.run,
+        "fig12": fig12_stream_overlap.run,
+        "fig13": fig13_persist_recover.run,
         "roofline": roofline.run,
     }
     selected = sys.argv[1:] or list(benches)

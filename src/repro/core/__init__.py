@@ -12,6 +12,10 @@ workloads: a transactional (durable, ephemeral) state pair built from
 * :class:`~repro.core.sandbox_tree.SandboxTree` — N concurrent live sandboxes
   from any checkpoint; fork/commit (Fork-Explore-Commit),
 * :mod:`~repro.core.gc` — reachability-aware snapshot GC (multi-sandbox pins),
+* :class:`~repro.core.image_store.ImageStore` — refcounted image lifecycle +
+  lineage (non-blocking reclaim; no wait-before-reclaim conventions),
+* :mod:`~repro.core.persist` — crash-consistent persistence plane
+  (manifest-committed snapshots of the whole DeltaState + ``recover``),
 * :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue).
 """
 from .chunk_store import ChunkStore, ChunkStoreStats
@@ -34,8 +38,17 @@ from .stream import (
 from .deltafs import DeltaFS, LayerConfig, LayerStore, NamespaceView, TensorMeta
 from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
 from .gc import reachability_gc, recency_gc
+from .image_store import ImageRef, ImageStore, ImageStoreStats
 from .npd import InferenceProxy, ProxyRequest
-from .persist import load_store, save_store
+from .persist import (
+    PersistencePlane,
+    RecoveredState,
+    RecoverError,
+    load_store,
+    recover,
+    save_state,
+    save_store,
+)
 from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
 from .sandbox_tree import SandboxTree, SandboxTreeStats
 
@@ -65,8 +78,16 @@ __all__ = [
     "ForkableState",
     "reachability_gc",
     "recency_gc",
+    "ImageRef",
+    "ImageStore",
+    "ImageStoreStats",
     "InferenceProxy",
+    "PersistencePlane",
+    "RecoverError",
+    "RecoveredState",
     "load_store",
+    "recover",
+    "save_state",
     "save_store",
     "ProxyRequest",
     "CheckpointError",

@@ -362,6 +362,49 @@ class DeltaDumpPipeline:
         for rec in releasable:
             rec.release()
 
+    def anchored_ids(self) -> List[int]:
+        """Image ids with a registered generation, oldest-first (LRU order).
+
+        The persistence plane records these as the *generation-cache
+        anchors*: after a restart, :meth:`rebuild_generation` re-materializes
+        them from store chunks so the first post-recovery dumps are already
+        O(delta)-chained instead of paying a full-path dump each."""
+        with self._lock:
+            return list(self._gens.keys())
+
+    def rebuild_generation(self, image: Any) -> bool:
+        """Re-register an image's generation from its store chunks.
+
+        Restart recovery: builds host byte-grids for every grid-aligned
+        tensor of ``image`` and registers them as a diff/restore base
+        (anchor-less — the grids own their memory).  Returns False when no
+        tensor was rebuildable (nothing registered)."""
+        store = self.store
+        views: Dict[str, ChunkedView] = {}
+        for name, meta in image.entries.items():
+            n = len(meta.chunk_ids)
+            if n == 0:
+                continue
+            row_bytes = len(store.get(meta.chunk_ids[0]))
+            if row_bytes == 0 or not self._rows_match(meta, row_bytes):
+                continue
+            grid = np.empty((n, row_bytes), np.uint8)
+            for i, cid in enumerate(meta.chunk_ids):
+                grid[i] = np.frombuffer(store.get(cid), np.uint8)
+            views[name] = ChunkedView(
+                shape=meta.shape,
+                dtype=meta.dtype,
+                nbytes=meta.nbytes,
+                chunk_bytes=row_bytes,
+                n_chunks=n,
+                trailing_pad=meta.trailing_pad,
+                grid_fn=lambda g=grid: g,
+            )
+        if not views:
+            return False
+        self.register(image.image_id, views, anchor=None)
+        return True
+
     def evict(self, image_id: int) -> None:
         releasable: list = []
         with self._lock:

@@ -55,6 +55,7 @@ from .delta_pipeline import (
     mark_unknown,
 )
 from .deltafs import TensorMeta
+from .image_store import DumpTicket, ImageStore
 from .stream import ChunkStreamEngine, DumpGate, StreamCancelled, StreamConfig
 
 __all__ = [
@@ -348,12 +349,21 @@ class DeltaCR:
         self._warm_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-warm")
         self._templates: "OrderedDict[int, ForkableState]" = OrderedDict()
         self._images: Dict[int, Future] = {}        # ckpt_id -> Future[DumpImage]
-        self._image_by_id: Dict[int, DumpImage] = {}
         self._cancels: Dict[int, threading.Event] = {}   # ckpt_id -> dump cancel
-        self._parents: Dict[int, Optional[int]] = {}
         self._lock = threading.RLock()
-        self._next_image_id = 1
+        # The lifecycle plane: every DumpImage is owned by the refcounted
+        # ImageStore — dependents (in-flight child dumps, decodes, forked
+        # sandboxes) hold references, and a dropped parent's chunks survive
+        # exactly until the last dependent releases.  No wait_dumps()
+        # convention anywhere in the reclaim paths.
+        self.images = ImageStore(self.store, evict_hook=self._evict_generation)
         self.stats = DeltaCRStats()
+
+    def _evict_generation(self, image_id: int) -> None:
+        """ImageStore hook: a dying/dropped image releases its generation
+        anchor (the dump fork pinning pages/HBM for O(delta) chaining)."""
+        if self.pipeline is not None:
+            self.pipeline.evict(image_id)
 
     # ------------------------------------------------------------- qos gate
     def attach_dump_gate(self, gate: DumpGate) -> None:
@@ -405,15 +415,26 @@ class DeltaCR:
                 parent_fut = self._images.get(parent_ckpt) if parent_ckpt is not None else None
                 cancel = threading.Event()
                 self._cancels[ckpt_id] = cancel
+                ticket = self.images.begin(ckpt_id)
+                # The in-flight dump holds a lineage reference on the parent
+                # image: the parent checkpoint (template, anchor, chunks) can
+                # be reclaimed at any time and this dump still delta-encodes
+                # and commits bit-identically; the ref releases on commit,
+                # failure, or cancel.
+                parent_ref = (
+                    self.images.acquire(parent_ckpt)
+                    if parent_fut is not None and parent_ckpt is not None
+                    else None
+                )
                 fut = self._dump_executor.submit(
-                    self._do_dump, dump_src, parent_fut, priority, cancel
+                    self._do_dump, ckpt_id, ticket, dump_src, parent_fut,
+                    parent_ref, priority, cancel,
                 )
                 fut.add_done_callback(
                     lambda _f, c=ckpt_id: self._cancels.pop(c, None)
                 )
                 self._images[ckpt_id] = fut
             self._admit_template(ckpt_id, template)
-            self._parents[ckpt_id] = parent_ckpt
         # The session is now bit-identical to checkpoint ckpt_id: its write
         # tracking restarts, keyed to ckpt_id, so the *next* dump's
         # dirty-key hint is exact iff it dumps against this checkpoint.
@@ -431,11 +452,38 @@ class DeltaCR:
     # ------------------------------------------------------------ dump path
     def _do_dump(
         self,
+        ckpt_id: int,
+        ticket: DumpTicket,
         dump_src: ForkableState,
         parent_fut: Optional[Future],
+        parent_ref,
         priority: str = "bg",
         cancel: Optional[threading.Event] = None,
     ) -> DumpImage:
+        try:
+            return self._dump_image(ckpt_id, ticket, dump_src, parent_fut, priority, cancel)
+        finally:
+            # lineage ref off: if the parent checkpoint was dropped while
+            # this dump ran, its chunks are returned here, not before
+            self.images.release(parent_ref)
+
+    def _dump_image(
+        self,
+        ckpt_id: int,
+        ticket: DumpTicket,
+        dump_src: ForkableState,
+        parent_fut: Optional[Future],
+        priority: str,
+        cancel: Optional[threading.Event],
+    ) -> DumpImage:
+        if cancel is not None and cancel.is_set():
+            # dropped while still queued: resolve transactionally — release
+            # the fork, never materialize a dead image
+            dump_src.release()
+            self.images.abort(ticket)
+            with self.stats.lock:
+                self.stats.cancelled_dumps += 1
+            raise StreamCancelled(f"checkpoint {ckpt_id}: dump cancelled while queued")
         parent: Optional[DumpImage] = None
         if parent_fut is not None:
             try:
@@ -470,6 +518,16 @@ class DeltaCR:
             else:
                 mode = "digest"
                 for name, arr in dump_src.dump_payload().items():
+                    if cancel is not None and cancel.is_set():
+                        # transactional digest-path cancel: return every
+                        # chunk reference this dump already took
+                        self.store.decref_many(
+                            cid for m in entries.values() for cid in m.chunk_ids
+                        )
+                        raise StreamCancelled(
+                            f"checkpoint {ckpt_id}: digest dump cancelled "
+                            f"after {len(entries)} tensors"
+                        )
                     pm = parent.entries.get(name) if parent is not None else None
                     meta, n_dirty = digest_encode_array(self.store, arr, pm)
                     entries[name] = meta
@@ -478,16 +536,16 @@ class DeltaCR:
             # dropped mid-dump (drop_checkpoint): the pipeline already rolled
             # back every chunk reference; the dump fork is all that remains
             dump_src.release()
+            self.images.abort(ticket)
             with self.stats.lock:
                 self.stats.cancelled_dumps += 1
             raise
         except Exception:
             dump_src.release()
+            self.images.abort(ticket)
             raise
         wall_ms = (time.perf_counter() - t0) * 1e3
-        with self._lock:
-            image_id = self._next_image_id
-            self._next_image_id += 1
+        image_id = self.images.allocate_image_id()
         image = DumpImage(
             image_id=image_id,
             parent_id=parent.image_id if parent else None,
@@ -503,16 +561,22 @@ class DeltaCR:
             drain_ms=res.drain_ms if res is not None else 0.0,
             commit_ms=res.commit_ms if res is not None else 0.0,
         )
-        if anchor_views is not None:
+        # Ownership transfers to the ImageStore.  When the checkpoint was
+        # dropped mid-dump, commit() resolves it transactionally: the image
+        # is freed the moment its last dependent releases (possibly now) and
+        # no anchor may be registered for it.
+        alive = self.images.commit(ticket, image)
+        if anchor_views is not None and alive:
             # The dump fork anchors this generation's (lazy) device/host
             # views so the next checkpoint diffs against them in place; the
             # pipeline's LRU releases it.
             assert self.pipeline is not None
             self.pipeline.register(image_id, anchor_views, anchor=dump_src)
+            if not self.images.is_live(ckpt_id):
+                # dropped between commit and register: never leak the anchor
+                self.pipeline.evict(image_id)
         else:
             dump_src.release()
-        with self._lock:
-            self._image_by_id[image_id] = image
         with self.stats.lock:
             self.stats.dumps += 1
             self.stats.dump_dirty_chunks += dirtied
@@ -587,15 +651,25 @@ class DeltaCR:
         image = fut.result()  # may wait for the background dump to land
         if self.restore_fn is None:
             raise RuntimeError("slow-path restore requires restore_fn")
-        if self.pipeline is not None:
-            with self._lock:
-                parent_image = self._image_by_id.get(image.parent_id)
-            payload = self.pipeline.decode(image, parent_image)
-        else:
-            payload = {
-                name: self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
-                for name, meta in image.entries.items()
-            }
+        # Decode under dependent references: a concurrent drop of this
+        # checkpoint (or of the delta parent) defers the chunk frees until
+        # the decode finishes — never a read from freed storage.
+        image_ref = self.images.acquire_image(image.image_id)
+        if image_ref is None:
+            raise KeyError(f"checkpoint {ckpt_id}: image was dropped")
+        parent_ref = self.images.acquire_image(image.parent_id)
+        try:
+            if self.pipeline is not None:
+                parent_image = self.images.get(image.parent_id)
+                payload = self.pipeline.decode(image, parent_image)
+            else:
+                payload = {
+                    name: self.store.get_array(meta.chunk_ids, meta.shape, np.dtype(meta.dtype))
+                    for name, meta in image.entries.items()
+                }
+        finally:
+            self.images.release(parent_ref)
+            self.images.release(image_ref)
         rebuilt = self.restore_fn(payload)
         mark_unknown(rebuilt)
         with self._lock:
@@ -664,29 +738,33 @@ class DeltaCR:
     def drop_checkpoint(self, ckpt_id: int) -> None:
         """Reclaim all storage for a checkpoint (GC of unreachable nodes).
 
-        A dump still queued or streaming is *cancelled* rather than awaited:
-        the pipeline rolls back every chunk reference it took, so dropping a
-        fresh fan-out node costs at most one window of wasted work instead
-        of a full dump plus its decref walk."""
+        Entirely non-blocking.  A dump still queued or streaming is
+        *cancelled* rather than awaited: the pipeline rolls back every chunk
+        reference it took, so dropping a fresh fan-out node costs at most
+        one window of wasted work instead of a full dump plus its decref
+        walk.  A landed image is handed to the ImageStore: its generation
+        anchor is evicted immediately, and its chunks are returned now — or,
+        if a dependent child dump is still in flight against it, exactly
+        when that dump commits or aborts.  No caller ever needs to
+        ``wait_dumps()`` before reclaiming."""
         self.evict_template(ckpt_id)
         with self._lock:
             fut = self._images.pop(ckpt_id, None)
-            self._parents.pop(ckpt_id, None)
             cancel = self._cancels.pop(ckpt_id, None)
-        if fut is not None:
-            if cancel is not None and not fut.done():
-                cancel.set()
-            try:
-                image = fut.result(timeout=60.0)
-            except Exception:       # includes StreamCancelled: already rolled back
-                return
-            if self.pipeline is not None:
-                self.pipeline.evict(image.image_id)
-            self.store.decref_many(
-                cid for meta in image.entries.values() for cid in meta.chunk_ids
-            )
-            with self._lock:
-                self._image_by_id.pop(image.image_id, None)
+        if cancel is not None and fut is not None and not fut.done():
+            cancel.set()
+        self.images.drop(ckpt_id)
+
+    def adopt_image(self, ckpt_id: int, image: DumpImage) -> None:
+        """Install a recovered durable image for ``ckpt_id`` (restart
+        recovery: the persistence plane rebuilt the image's chunk references
+        in the store; restores and child dumps then see it exactly like an
+        image this process dumped itself)."""
+        self.images.adopt(ckpt_id, image)
+        fut: Future = Future()
+        fut.set_result(image)
+        with self._lock:
+            self._images[ckpt_id] = fut
 
     def template_count(self) -> int:
         with self._lock:

@@ -164,10 +164,14 @@ class LayerStore:
         self._next_layer_id = 1
 
     # ----------------------------------------------------------- layer mgmt
-    def new_layer(self) -> _Layer:
-        """Register a fresh mutable layer with zero references."""
+    def new_layer(self, *, refs: int = 0) -> _Layer:
+        """Register a fresh mutable layer.
+
+        ``refs`` pre-retains the layer atomically with its creation — a
+        live stack installing an upper must never expose a zero-ref layer
+        to a concurrent ``debug_validate``."""
         with self.lock:
-            layer = _Layer(layer_id=self._next_layer_id)
+            layer = _Layer(layer_id=self._next_layer_id, refs=refs)
             self._next_layer_id += 1
             self._layers[layer.layer_id] = layer
             return layer
@@ -251,7 +255,14 @@ class NamespaceView:
 
     def __init__(self, layers: LayerStore, *, base_config: LayerConfig = ()):
         self.layers = layers
-        self._lock = layers.lock         # shared: refs move across views
+        # Per-view lock: guards this view's private state only (stack,
+        # resolve cache, in-flight count).  All refcount motion and layer
+        # table/entry mutation goes through LayerStore methods (or a nested
+        # ``layers.lock`` block), so sibling views' metadata ops — resolves,
+        # cache hits, stack reads — no longer serialize on the one shared
+        # lock under wide write-heavy fan-outs.  Lock order is always
+        # view lock → store lock, never the reverse.
+        self._lock = threading.RLock()
         self._stack: list[int] = []      # bottom-to-top; last element is the writable upper
         self.checkpoint_gen = 0
         # key -> (generation, layer_id holding the topmost entry, is_tombstone)
@@ -267,6 +278,11 @@ class NamespaceView:
             self._stack = list(base_config)
             self._push_fresh_upper()
 
+    # Reads of *frozen* layers' entries run without the store lock: frozen
+    # layers are immutable, the private upper is only mutated by this view
+    # (under both locks), and our stack references keep every stacked layer
+    # alive — the store lock only orders table mutation and ref motion.
+
     # ------------------------------------------------------------- plumbing
     @property
     def store(self) -> ChunkStore:
@@ -274,8 +290,7 @@ class NamespaceView:
         return self.layers.chunks
 
     def _push_fresh_upper(self) -> None:
-        layer = self.layers.new_layer()
-        layer.refs += 1  # held by this live stack (caller holds the lock)
+        layer = self.layers.new_layer(refs=1)      # held by this live stack
         self._stack.append(layer.layer_id)
 
     @property
@@ -417,14 +432,15 @@ class NamespaceView:
                 self.store.decref_many(meta.chunk_ids)
                 self._finish_op()
                 raise RuntimeError("namespace view is closed (sandbox released)")
-            upper = self.layers._layers[self.upper_id]
-            old_entry = upper.entries.get(key)
+            upper_id = self.upper_id
+            with self.layers.lock:   # entry mutation: visible to validators
+                upper = self.layers._layers[upper_id]
+                old_entry = upper.entries.get(key)
+                upper.entries[key] = meta
+                upper.tombstones.discard(key)
             if old_entry is not None:  # second write to same key in this generation
-                for cid in old_entry.chunk_ids:
-                    self.store.decref(cid)
-            upper.entries[key] = meta
-            upper.tombstones.discard(key)
-            self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, False)
+                self.store.decref_many(old_entry.chunk_ids)
+            self._resolve_cache[key] = (self.checkpoint_gen, upper_id, False)
             self._finish_op()
             return dirtied
 
@@ -433,13 +449,14 @@ class NamespaceView:
             self._check_open()
             if self._resolve(key) is None:
                 raise KeyError(key)
-            upper = self.layers._layers[self.upper_id]
-            entry = upper.entries.pop(key, None)
+            upper_id = self.upper_id
+            with self.layers.lock:   # entry mutation: visible to validators
+                upper = self.layers._layers[upper_id]
+                entry = upper.entries.pop(key, None)
+                upper.tombstones.add(key)
             if entry is not None:
-                for cid in entry.chunk_ids:
-                    self.store.decref(cid)
-            upper.tombstones.add(key)
-            self._resolve_cache[key] = (self.checkpoint_gen, upper.layer_id, True)
+                self.store.decref_many(entry.chunk_ids)
+            self._resolve_cache[key] = (self.checkpoint_gen, upper_id, True)
 
     # ------------------------------------------------------- checkpointing
     def checkpoint(self) -> LayerConfig:
@@ -450,11 +467,9 @@ class NamespaceView:
         """
         with self._lock:
             self._check_open()
-            layers = self.layers._layers
             self.layers.freeze(self.upper_id)
             config = tuple(self._stack)
-            for layer_id in config:       # caller's retained reference
-                layers[layer_id].refs += 1
+            self.layers.retain_config(config)   # caller's retained reference
             self._push_fresh_upper()
             self.checkpoint_gen += 1
             return config

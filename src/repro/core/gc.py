@@ -19,20 +19,39 @@ restore-fail re-selection loop.  The reachability rule keeps
 and reclaims the rest — safe by construction: only nodes the search itself
 has declared unreachable are dropped.  Non-tree search (Best-of-N), where
 nodes are never re-selected, uses plain recency.
+
+GC is **non-blocking** end to end: reclaiming a node whose child delta dump
+is still in flight hands the image to the refcounted
+:class:`~repro.core.image_store.ImageStore`, which returns the chunks when
+the dependent dump commits or aborts — a GC pass never waits on the dump
+worker (the old ``wait_dumps()`` convention is gone).  ``stats_out``
+surfaces the deferral so callers/benchmarks can observe it.
 """
 from __future__ import annotations
 
-from typing import List, Set
+from typing import Dict, List, Optional, Set
 
 from .state_manager import CheckpointError, StateManager
 
 __all__ = ["reachability_gc", "recency_gc"]
 
 
+def _fill_stats(sm: StateManager, reclaimed: List[int], stats_out: Optional[Dict]) -> None:
+    if stats_out is None:
+        return
+    images = sm.deltacr.images
+    stats_out["reclaimed"] = list(reclaimed)
+    # images whose checkpoint is gone but whose chunks are pinned by an
+    # in-flight dependent dump — the refcounting plane's deferred frees
+    stats_out["deferred_images"] = images.deferred_count()
+    stats_out["live_images"] = images.live_count()
+
+
 def reachability_gc(
     sm: StateManager,
     *,
     keep_terminal_candidates: bool = True,
+    stats_out: Optional[Dict] = None,
 ) -> List[int]:
     """Run one GC pass; returns the list of reclaimed ckpt ids."""
     keep: Set[int] = set()
@@ -53,6 +72,7 @@ def reachability_gc(
             except CheckpointError:
                 continue            # pinned by a fork racing this pass
             reclaimed.append(node.ckpt_id)
+    _fill_stats(sm, reclaimed, stats_out)
     return reclaimed
 
 
@@ -70,7 +90,9 @@ def _close_over_replay_chains(sm: StateManager, keep: Set[int]) -> Set[int]:
     return closed
 
 
-def recency_gc(sm: StateManager, *, keep_last: int = 8) -> List[int]:
+def recency_gc(
+    sm: StateManager, *, keep_last: int = 8, stats_out: Optional[Dict] = None
+) -> List[int]:
     """Plain recency policy for non-tree (Best-of-N style) search."""
     live = sorted(sm.live_nodes(), key=lambda n: n.created_at, reverse=True)
     protected = {n.ckpt_id for n in live[:keep_last]}
@@ -86,4 +108,5 @@ def recency_gc(sm: StateManager, *, keep_last: int = 8) -> List[int]:
             except CheckpointError:
                 continue            # pinned by a fork racing this pass
             reclaimed.append(node.ckpt_id)
+    _fill_stats(sm, reclaimed, stats_out)
     return reclaimed

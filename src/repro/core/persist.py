@@ -1,28 +1,709 @@
-"""Disk persistence for DeltaFS checkpoint stores.
+"""Crash-consistent persistence plane for the whole DeltaState.
 
 The in-memory chunk store is the paper's tmpfs; real restarts need the
-durable tier.  ``save_store`` writes the chunks + layer metadata of a set of
-retained configurations as a single ``.npz`` (chunks concatenated, offsets
-indexed), preserving structural sharing on disk: a chunk referenced by ten
-generations is written once.  ``load_store`` rebuilds a DeltaFS with the
-same layer configs (fresh ids, mapping returned).
+durable tier.  Two APIs live here:
 
-Used by the Trainer for cross-process restart
-(``Trainer.save_checkpoints`` / ``Trainer.load_checkpoints``).
+* **The lifecycle plane** (`save_state` / `recover` /
+  :class:`PersistencePlane`): snapshots the *entire* DeltaState — the
+  StateManager's snapshot tree (nodes, lineage, LW replay chains, fork
+  pins), the refcounted :class:`~repro.core.image_store.ImageStore` image
+  set with its delta edges, the DeltaFS :class:`~repro.core.deltafs.LayerStore`
+  (layers + tombstones), the generation-cache anchors, and every chunk any
+  of them references (written once; structural sharing and content digests
+  are preserved bit-identically) — and rebuilds all of it after a restart.
+
+  Crash consistency is manifest-based: each snapshot blob is written
+  temp-file-first, fsynced, then atomically renamed; only *then* is a
+  checksummed record appended (and fsynced) to the append-only ``MANIFEST``
+  log.  ``recover`` replays the manifest and restores the newest record
+  whose checksum, file, and file digest all verify — a torn append, a
+  half-written blob, or a kill anywhere mid-`save` lands on the previous
+  durable snapshot, never on a partial tree.
+
+  In-flight dumps at snapshot time are resolved transactionally: a node
+  whose durable image has not landed (and its descendants) is *cleanly
+  absent* from the snapshot; everything included restores bit-identically
+  (chunk digests and all).
+
+* **The legacy layer archive** (`save_store` / `load_store`): the original
+  DeltaFS-only ``.npz`` format, kept for the Trainer's cross-process
+  restart (`Trainer.save_checkpoints` / `load_checkpoints`).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Dict, List, Optional, Tuple
+import struct
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .chunk_store import ChunkStore
-from .deltafs import DeltaFS, LayerConfig, TensorMeta
+from .deltacr import CowArrayState, DeltaCR, DumpImage
+from .deltafs import DeltaFS, LayerConfig, LayerStore, TensorMeta
+from .state_manager import Sandbox, StateManager
 
-__all__ = ["save_store", "load_store"]
+__all__ = [
+    "PersistencePlane",
+    "RecoveredState",
+    "RecoverError",
+    "recover",
+    "save_state",
+    "save_store",
+    "load_store",
+]
 
+_MAGIC = b"DBOXSNAP1\n"
+_MANIFEST = "MANIFEST"
+_SNAP_VERSION = 1
+
+
+class RecoverError(RuntimeError):
+    """No durable snapshot could be recovered from the manifest."""
+
+
+# --------------------------------------------------------------------------
+# canonical encoding helpers (byte-stable: save → recover → re-save equality)
+# --------------------------------------------------------------------------
+def _canon_json(obj: Any) -> bytes:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+
+
+def _line_digest(payload: bytes) -> str:
+    return hashlib.blake2b(payload, digest_size=8).hexdigest()
+
+
+def _encode_obj(x: Any) -> Any:
+    """JSON-encode arbitrary replay actions / extras deterministically.
+
+    Supports None/bool/int/float/str, lists, tuples, str-keyed dicts, bytes
+    and numpy arrays; tuples and binary payloads round-trip exactly."""
+    if x is None or isinstance(x, (bool, int, str)):
+        return x
+    if isinstance(x, float):
+        return x
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, tuple):
+        return {"__t__": [_encode_obj(v) for v in x]}
+    if isinstance(x, list):
+        return [_encode_obj(v) for v in x]
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        return {"__b__": bytes(x).hex()}
+    if isinstance(x, np.ndarray):
+        arr = np.ascontiguousarray(x)
+        return {
+            "__nd__": {
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "data": arr.tobytes().hex(),
+            }
+        }
+    if isinstance(x, dict):
+        return {"__d__": {str(k): _encode_obj(v) for k, v in x.items()}}
+    raise TypeError(f"unpersistable object in snapshot: {type(x)!r}")
+
+
+def _decode_obj(x: Any) -> Any:
+    if isinstance(x, list):
+        return [_decode_obj(v) for v in x]
+    if isinstance(x, dict):
+        if "__t__" in x and len(x) == 1:
+            return tuple(_decode_obj(v) for v in x["__t__"])
+        if "__b__" in x and len(x) == 1:
+            return bytes.fromhex(x["__b__"])
+        if "__nd__" in x and len(x) == 1:
+            nd = x["__nd__"]
+            flat = np.frombuffer(bytes.fromhex(nd["data"]), np.dtype(nd["dtype"]))
+            return flat.reshape([int(s) for s in nd["shape"]]).copy()
+        if "__d__" in x and len(x) == 1:
+            return {k: _decode_obj(v) for k, v in x["__d__"].items()}
+        return {k: _decode_obj(v) for k, v in x.items()}
+    return x
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    """Temp-write + fsync + rename: the blob is durable-or-absent."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path) or ".")
+
+
+# --------------------------------------------------------------------------
+# snapshot construction
+# --------------------------------------------------------------------------
+def _meta_doc(meta: TensorMeta, chunk_index: Dict[int, int]) -> Dict[str, Any]:
+    return {
+        "shape": list(meta.shape),
+        "dtype": meta.dtype,
+        "chunks": [chunk_index[cid] for cid in meta.chunk_ids],
+        "digests": [d.hex() for d in meta.digests],
+        "trailing_pad": meta.trailing_pad,
+    }
+
+
+def _collect_chunks(
+    store: ChunkStore, metas: List[TensorMeta], chunk_index: Dict[int, int], order: List[int]
+) -> None:
+    for meta in metas:
+        for cid in meta.chunk_ids:
+            if cid not in chunk_index:
+                chunk_index[cid] = len(order)
+                order.append(cid)
+
+
+def _durable_nodes(tree: Dict[str, Any], deltacr: DeltaCR) -> Dict[int, Dict[str, Any]]:
+    """Filter the tree snapshot to nodes that are durable *right now*.
+
+    A node survives iff its parent survives and it is (a) a reclaimed
+    tombstone, (b) a lightweight marker, or (c) a full checkpoint whose
+    image has landed and is still registered.  Everything else — above all
+    a node whose dump is still in flight — is cleanly absent, along with
+    its subtree (FIFO dump order means descendants cannot have landed)."""
+    kept: Dict[int, Dict[str, Any]] = {}
+    for nd in sorted(tree["nodes"], key=lambda n: n["ckpt_id"]):
+        cid = int(nd["ckpt_id"])
+        parent = nd["parent_id"]
+        if parent is not None and int(parent) not in kept:
+            continue
+        if nd["reclaimed"] or nd["lightweight"]:
+            kept[cid] = nd
+            continue
+        if deltacr.images.is_live(cid) and deltacr.images.image_for(cid) is not None:
+            kept[cid] = nd
+    return kept
+
+
+def _snapshot_doc(
+    sm: Optional[StateManager],
+    deltacr: DeltaCR,
+    extra: Optional[Dict[str, Any]],
+) -> Tuple[Dict[str, Any], bytes]:
+    """Build the canonical snapshot document + chunk blob."""
+    store = deltacr.store
+    chunk_index: Dict[int, int] = {}
+    chunk_order: List[int] = []
+
+    # ---- tree + layers (trunk StateManager, when present) ----------------
+    tree_doc: Optional[Dict[str, Any]] = None
+    layers_doc: List[Dict[str, Any]] = []
+    layer_dense: Dict[int, int] = {}
+    kept_full: Optional[set] = None
+    if sm is not None:
+        tree = sm.snapshot_tree()
+        kept = _durable_nodes(tree, deltacr)
+        kept_full = {
+            cid
+            for cid, nd in kept.items()
+            if not nd["reclaimed"] and not nd["lightweight"]
+        }
+        layer_store: LayerStore = sm.sandbox.fs.layers
+        layer_ids = sorted(
+            {
+                int(lid)
+                for nd in kept.values()
+                if nd["layer_config"] is not None
+                for lid in nd["layer_config"]
+            }
+        )
+        layer_dense = {lid: i for i, lid in enumerate(layer_ids)}
+        for lid in layer_ids:
+            layer = layer_store.get(lid)
+            assert layer is not None, f"snapshot references dead layer {lid}"
+            entries = {}
+            for key in sorted(layer.entries):
+                meta = layer.entries[key]
+                _collect_chunks(store, [meta], chunk_index, chunk_order)
+                entries[key] = _meta_doc(meta, chunk_index)
+            layers_doc.append(
+                {
+                    "id": layer_dense[lid],
+                    "entries": entries,
+                    "tombstones": sorted(layer.tombstones),
+                }
+            )
+        # adjust current onto the nearest kept *restorable* ancestor (skip
+        # excluded in-flight nodes and reclaimed tombstones); prune
+        # pins/children
+        by_id = {int(n["ckpt_id"]): n for n in tree["nodes"]}
+        current = tree["current"]
+        while current is not None and (
+            int(current) not in kept or kept[int(current)]["reclaimed"]
+        ):
+            current = by_id[int(current)]["parent_id"]
+        nodes_doc = []
+        for cid in sorted(kept):
+            nd = kept[cid]
+            cfg = nd["layer_config"]
+            nodes_doc.append(
+                {
+                    "ckpt_id": cid,
+                    "parent_id": nd["parent_id"],
+                    "layer_config": None if cfg is None else [layer_dense[int(l)] for l in cfg],
+                    "lightweight": nd["lightweight"],
+                    "replay_actions": [_encode_obj(a) for a in nd["replay_actions"]],
+                    "children": [int(c) for c in nd["children"] if int(c) in kept],
+                    "terminal": nd["terminal"],
+                    "expandable": nd["expandable"],
+                    "visits": nd["visits"],
+                    "value": nd["value"],
+                    "reclaimed": nd["reclaimed"],
+                    "created_at": nd["created_at"],
+                }
+            )
+        root = tree["root"]
+        if root is not None and int(root) not in kept:
+            root = None
+        tree_doc = {
+            "nodes": nodes_doc,
+            "current": None if current is None else int(current),
+            "root": root,
+            "next_ckpt": tree["next_ckpt"],
+            "pins": {k: v for k, v in tree["pins"].items() if int(k) in kept},
+        }
+
+    # ---- images (the refcounted lineage) ---------------------------------
+    images_doc: List[Dict[str, Any]] = []
+    saved_image_ids: set = set()
+    for ckpt_id, image in deltacr.images.live_images():
+        if kept_full is not None and ckpt_id not in kept_full:
+            continue
+        entries = {}
+        for key in sorted(image.entries):
+            meta = image.entries[key]
+            _collect_chunks(store, [meta], chunk_index, chunk_order)
+            entries[key] = _meta_doc(meta, chunk_index)
+        saved_image_ids.add(image.image_id)
+        images_doc.append(
+            {
+                "ckpt": ckpt_id,
+                "image_id": image.image_id,
+                "parent_id": image.parent_id,
+                "entries": entries,
+                "dirtied_chunks": image.dirtied_chunks,
+                "dump_bytes": image.dump_bytes,
+                "wall_ms": image.wall_ms,
+                "mode": image.mode,
+                "streamed": image.streamed,
+                "stream_windows": image.stream_windows,
+                "stream_window_bytes": image.stream_window_bytes,
+                "encode_ms": image.encode_ms,
+                "drain_ms": image.drain_ms,
+                "commit_ms": image.commit_ms,
+            }
+        )
+
+    # ---- generation-cache anchors ---------------------------------------
+    anchors: List[int] = []
+    if deltacr.pipeline is not None:
+        anchors = [i for i in deltacr.pipeline.anchored_ids() if i in saved_image_ids]
+
+    # ---- chunk blob ------------------------------------------------------
+    blobs = [store.get(cid) for cid in chunk_order]
+    offsets = [0]
+    for b in blobs:
+        offsets.append(offsets[-1] + len(b))
+    blob = b"".join(blobs)
+
+    doc = {
+        "version": _SNAP_VERSION,
+        "kind": "deltastate",
+        "chunk_bytes": store.chunk_bytes,
+        "dedupe": store.dedupe,
+        "chunk_offsets": offsets,
+        "chunk_pads": [store.pad_of(cid) for cid in chunk_order],
+        "layers": layers_doc,
+        "images": images_doc,
+        "next_image_id": deltacr.images.next_image_id(),
+        "tree": tree_doc,
+        "anchors": anchors,
+        "extra": _encode_obj(extra if extra is not None else {}),
+    }
+    return doc, blob
+
+
+def _snapshot_bytes(doc: Dict[str, Any], blob: bytes) -> bytes:
+    payload = _canon_json(doc)
+    return _MAGIC + struct.pack("<Q", len(payload)) + payload + blob
+
+
+# --------------------------------------------------------------------------
+# manifest log
+# --------------------------------------------------------------------------
+def _manifest_path(root: str) -> str:
+    return os.path.join(root, _MANIFEST)
+
+
+def _parse_manifest(raw: bytes) -> List[Dict[str, Any]]:
+    """Parse manifest bytes, silently dropping torn/corrupt records."""
+    entries: List[Dict[str, Any]] = []
+    for line in raw.split(b"\n"):
+        if not line:
+            continue
+        head, sep, digest = line.rpartition(b"\t")
+        if not sep:
+            continue
+        if _line_digest(head) != digest.decode("ascii", "replace"):
+            continue  # torn append: ignore this and any trailing garbage
+        try:
+            entries.append(json.loads(head.decode()))
+        except ValueError:
+            continue
+    return entries
+
+
+def _read_manifest(root: str) -> List[Dict[str, Any]]:
+    path = _manifest_path(root)
+    if not os.path.exists(path):
+        return []
+    with open(path, "rb") as f:
+        return _parse_manifest(f.read())
+
+
+def _read_manifest_tail(root: str, max_bytes: int = 256 << 10) -> List[Dict[str, Any]]:
+    """Recent manifest entries only: the save path needs the last seq and
+    the recent prune window, so it reads a bounded tail instead of
+    re-checksumming the whole append-only history every save.  A partial
+    first line (mid-record seek) fails its checksum and is dropped."""
+    path = _manifest_path(root)
+    if not os.path.exists(path):
+        return []
+    with open(path, "rb") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        f.seek(max(0, size - max_bytes))
+        return _parse_manifest(f.read())
+
+
+def _append_manifest(root: str, record: Dict[str, Any]) -> None:
+    payload = _canon_json(record)
+    line = payload + b"\t" + _line_digest(payload).encode() + b"\n"
+    path = _manifest_path(root)
+    with open(path, "ab") as f:
+        # a crash mid-append can leave a torn, newline-less tail; never let
+        # this record merge into it (the merged line would fail its checksum
+        # and a save reported as durable would silently not be)
+        if f.tell() > 0:
+            with open(path, "rb") as r:
+                r.seek(-1, os.SEEK_END)
+                torn = r.read(1) != b"\n"
+            if torn:
+                f.write(b"\n")
+        f.write(line)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(root)
+
+
+def _verify_entry(root: str, entry: Dict[str, Any]) -> bool:
+    path = os.path.join(root, entry["file"])
+    if not os.path.exists(path):
+        return False
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) != int(entry["bytes"]):
+        return False
+    return hashlib.blake2b(data, digest_size=16).hexdigest() == entry["blake2b"]
+
+
+# --------------------------------------------------------------------------
+# save
+# --------------------------------------------------------------------------
+def save_state(
+    root: str,
+    *,
+    sm: Optional[StateManager] = None,
+    deltacr: Optional[DeltaCR] = None,
+    extra: Optional[Dict[str, Any]] = None,
+    keep_snapshots: int = 4,
+) -> int:
+    """Commit one crash-consistent snapshot of the DeltaState; returns seq.
+
+    ``sm`` snapshots the whole lifecycle plane (tree + layers + images +
+    anchors); ``deltacr`` alone snapshots the image store only (the serving
+    scheduler's warm-pool case).  ``extra`` rides along verbatim (JSON-able
+    plus tuples/bytes/ndarrays).  Uncommitted live-upper writes and
+    in-flight dumps are *not* captured — crash semantics are "back to the
+    last durable checkpoint", never a partial tree."""
+    if sm is None and deltacr is None:
+        raise ValueError("save_state needs sm= or deltacr=")
+    cr = deltacr if deltacr is not None else sm.deltacr  # type: ignore[union-attr]
+    os.makedirs(root, exist_ok=True)
+    entries = _read_manifest_tail(root)
+    seq = (max((int(e["seq"]) for e in entries), default=0)) + 1
+    doc, blob = _snapshot_doc(sm, cr, extra)
+    data = _snapshot_bytes(doc, blob)
+    fname = f"snap-{seq:08d}.dbox"
+    _write_atomic(os.path.join(root, fname), data)
+    _append_manifest(
+        root,
+        {
+            "seq": seq,
+            "file": fname,
+            "bytes": len(data),
+            "blake2b": hashlib.blake2b(data, digest_size=16).hexdigest(),
+        },
+    )
+    # prune superseded snapshot blobs (the manifest itself is append-only);
+    # the latest `keep_snapshots` stay for corruption fallback.  Only the
+    # recent window is scanned — older entries' blobs were unlinked by
+    # previous saves, so per-save work stays O(keep), not O(history).
+    live = {e["file"] for e in entries[-(keep_snapshots - 1) :]} if keep_snapshots > 1 else set()
+    live.add(fname)
+    for e in entries[-(2 * keep_snapshots + 4) :]:
+        if e["file"] not in live:
+            try:
+                os.unlink(os.path.join(root, e["file"]))
+            except OSError:
+                pass
+    return seq
+
+
+# --------------------------------------------------------------------------
+# recover
+# --------------------------------------------------------------------------
+@dataclass
+class RecoveredState:
+    """Everything `recover` rebuilt from the last durable snapshot."""
+
+    seq: int
+    fs: DeltaFS                       # trunk namespace view over the layers
+    layer_store: LayerStore
+    deltacr: DeltaCR
+    state_manager: Optional[StateManager]
+    current: Optional[int]            # checkpoint the pre-crash session was at
+    # Fork pins recovered into the StateManager.  They record which bases
+    # the pre-crash forked sandboxes descended from; those sandboxes are
+    # process-local and did not survive, so a caller that does not rebuild
+    # forked work over these bases should call
+    # ``state_manager.release_recovered_pins()`` to make the nodes
+    # GC-reclaimable again.
+    recovered_pins: Dict[int, int]
+    extra: Dict[str, Any]
+    snapshot_path: str
+
+
+def _load_snapshot(path: str) -> Tuple[Dict[str, Any], bytes]:
+    with open(path, "rb") as f:
+        data = f.read()
+    if not data.startswith(_MAGIC):
+        raise RecoverError(f"{path}: bad snapshot magic")
+    off = len(_MAGIC)
+    (plen,) = struct.unpack_from("<Q", data, off)
+    off += 8
+    doc = json.loads(data[off : off + plen].decode())
+    blob = data[off + plen :]
+    return doc, blob
+
+
+def recover(
+    root: str,
+    *,
+    restore_fn=None,
+    template_pool_size: int = 8,
+    stream: bool = True,
+) -> RecoveredState:
+    """Rebuild the full DeltaState from the newest durable snapshot.
+
+    Walks the manifest newest-first, skipping any record whose checksum,
+    blob, or blob digest fails to verify (a crash mid-`save` therefore
+    recovers the previous snapshot).  Rebuilds, in order: the chunk store
+    (bit-identical bytes, pads and digests), the LayerStore and every
+    frozen layer, the ImageStore lineage (restores and child dumps see the
+    recovered images exactly like local ones), the snapshot tree with its
+    pins, and the generation-cache anchors — so the first post-restart
+    dumps are already O(delta)-chained.
+
+    ``restore_fn`` rebuilds session state from an image payload on the
+    first `sm.restore(...)`; it defaults to the host `CowArrayState`."""
+    entries = _read_manifest(root)
+    chosen: Optional[Dict[str, Any]] = None
+    for entry in reversed(entries):
+        if _verify_entry(root, entry):
+            chosen = entry
+            break
+    if chosen is None:
+        raise RecoverError(f"{root}: no durable snapshot in manifest")
+    snap_path = os.path.join(root, chosen["file"])
+    doc, blob = _load_snapshot(snap_path)
+    if doc.get("kind") != "deltastate" or int(doc.get("version", -1)) != _SNAP_VERSION:
+        raise RecoverError(f"{snap_path}: unsupported snapshot format")
+
+    # ---- chunks ----------------------------------------------------------
+    store = ChunkStore(chunk_bytes=int(doc["chunk_bytes"]), dedupe=bool(doc["dedupe"]))
+    offsets = doc["chunk_offsets"]
+    pads = doc["chunk_pads"]
+    cid_map: Dict[int, int] = {}
+    for i in range(len(offsets) - 1):
+        piece = blob[int(offsets[i]) : int(offsets[i + 1])]
+        cid_map[i] = store.put(piece, pad=int(pads[i]))
+
+    # ---- layers ----------------------------------------------------------
+    layer_store = LayerStore(store)
+    lid_map: Dict[int, int] = {}
+    for layer_doc in doc["layers"]:
+        layer = layer_store.new_layer()
+        layer.frozen = True
+        for key in sorted(layer_doc["entries"]):
+            ent = layer_doc["entries"][key]
+            ids = []
+            for dense in ent["chunks"]:
+                new_cid = cid_map[int(dense)]
+                store.incref(new_cid)
+                ids.append(new_cid)
+            layer.entries[key] = TensorMeta(
+                shape=tuple(int(s) for s in ent["shape"]),
+                dtype=ent["dtype"],
+                chunk_ids=tuple(ids),
+                digests=tuple(bytes.fromhex(d) for d in ent["digests"]),
+                trailing_pad=int(ent["trailing_pad"]),
+            )
+        layer.tombstones.update(layer_doc["tombstones"])
+        lid_map[int(layer_doc["id"])] = layer.layer_id
+
+    # ---- DeltaCR + images ------------------------------------------------
+    cr = DeltaCR(
+        store,
+        template_pool_size=template_pool_size,
+        restore_fn=restore_fn if restore_fn is not None else (lambda p: CowArrayState(p)),
+        stream=stream,
+    )
+    for img_doc in doc["images"]:
+        img_entries = {}
+        for key in sorted(img_doc["entries"]):
+            ent = img_doc["entries"][key]
+            ids = []
+            for dense in ent["chunks"]:
+                new_cid = cid_map[int(dense)]
+                store.incref(new_cid)
+                ids.append(new_cid)
+            img_entries[key] = TensorMeta(
+                shape=tuple(int(s) for s in ent["shape"]),
+                dtype=ent["dtype"],
+                chunk_ids=tuple(ids),
+                digests=tuple(bytes.fromhex(d) for d in ent["digests"]),
+                trailing_pad=int(ent["trailing_pad"]),
+            )
+        image = DumpImage(
+            image_id=int(img_doc["image_id"]),
+            parent_id=None if img_doc["parent_id"] is None else int(img_doc["parent_id"]),
+            entries=img_entries,
+            dirtied_chunks=int(img_doc["dirtied_chunks"]),
+            dump_bytes=int(img_doc["dump_bytes"]),
+            wall_ms=float(img_doc["wall_ms"]),
+            mode=img_doc["mode"],
+            streamed=bool(img_doc["streamed"]),
+            stream_windows=int(img_doc["stream_windows"]),
+            stream_window_bytes=int(img_doc["stream_window_bytes"]),
+            encode_ms=float(img_doc["encode_ms"]),
+            drain_ms=float(img_doc["drain_ms"]),
+            commit_ms=float(img_doc["commit_ms"]),
+        )
+        cr.adopt_image(int(img_doc["ckpt"]), image)
+    cr.images.set_next_image_id(int(doc["next_image_id"]))
+
+    # balance the initial put() reference now that all consumers hold theirs
+    for new_cid in cid_map.values():
+        store.decref(new_cid)
+
+    # ---- generation-cache anchors ---------------------------------------
+    if cr.pipeline is not None:
+        for image_id in doc["anchors"]:
+            image = cr.images.get(int(image_id))
+            if image is not None:
+                cr.pipeline.rebuild_generation(image)
+
+    # ---- trunk StateManager ---------------------------------------------
+    fs = DeltaFS(layers=layer_store)
+    sm: Optional[StateManager] = None
+    current: Optional[int] = None
+    tree_doc = doc["tree"]
+    if tree_doc is not None:
+        current = tree_doc["current"]
+        decoded_tree = dict(tree_doc)
+        decoded_tree["nodes"] = [
+            {**nd, "replay_actions": [_decode_obj(a) for a in nd["replay_actions"]]}
+            for nd in tree_doc["nodes"]
+        ]
+        sm = StateManager(Sandbox(fs, CowArrayState({})), cr)
+        sm.load_tree(decoded_tree, layer_map=lid_map)
+        # each surviving node's config holds retained layer references,
+        # mirroring what checkpoint() handed the trunk pre-crash
+        for node in sm.nodes.values():
+            if node.layer_config is not None and not node.reclaimed:
+                layer_store.retain_config(node.layer_config)
+
+    return RecoveredState(
+        seq=int(chosen["seq"]),
+        fs=fs,
+        layer_store=layer_store,
+        deltacr=cr,
+        state_manager=sm,
+        current=None if current is None else int(current),
+        recovered_pins={int(k): int(v) for k, v in tree_doc["pins"].items()}
+        if tree_doc is not None
+        else {},
+        extra=_decode_obj(doc["extra"]),
+        snapshot_path=snap_path,
+    )
+
+
+class PersistencePlane:
+    """Handle on one persistence root: repeated saves + recovery.
+
+    The serving scheduler owns one of these when configured with
+    ``persist_path``: every coalesced-suspend drain commits a manifest
+    snapshot, so a warm pool of suspended sessions survives process death."""
+
+    def __init__(self, root: str, *, keep_snapshots: int = 4):
+        self.root = root
+        self.keep_snapshots = int(keep_snapshots)
+        os.makedirs(root, exist_ok=True)
+        self.saves = 0
+
+    def save(
+        self,
+        *,
+        sm: Optional[StateManager] = None,
+        deltacr: Optional[DeltaCR] = None,
+        extra: Optional[Dict[str, Any]] = None,
+    ) -> int:
+        seq = save_state(
+            self.root, sm=sm, deltacr=deltacr, extra=extra, keep_snapshots=self.keep_snapshots
+        )
+        self.saves += 1
+        return seq
+
+    def recover(self, **kw) -> RecoveredState:
+        return recover(self.root, **kw)
+
+    def last_seq(self) -> Optional[int]:
+        entries = _read_manifest(self.root)
+        return int(entries[-1]["seq"]) if entries else None
+
+
+# --------------------------------------------------------------------------
+# legacy layer-only archive (Trainer cross-process restart)
+# --------------------------------------------------------------------------
 # v2: chunks stored zero-padded with a chunk_pads table; entries carry
 # per-chunk digests + trailing_pad.  v1 archives (unpadded, digest-less)
 # still load; pre-v2 readers reject v2 archives at the version gate.

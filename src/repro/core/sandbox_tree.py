@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Set
 
 from .delta_pipeline import mark_clean
 from .deltafs import LayerStore, NamespaceView
+from .image_store import ImageRef
 from .state_manager import CheckpointError, Sandbox, StateManager
 
 __all__ = ["SandboxTree", "SandboxTreeStats"]
@@ -63,6 +64,10 @@ class _Child:
     view: NamespaceView
     base_ckpt: int                       # node the sandbox currently descends from
     full_pin: Optional[int] = None       # extra pin on the LW base's full ancestor
+    # ImageStore reference on the full base's image: the child's next dump
+    # delta-encodes against it, so the image's chunks stay alive even if the
+    # base node is force-reclaimed out from under the pins
+    image_ref: Optional[ImageRef] = None
     created: List[int] = field(default_factory=list)   # ckpts this child registered
     alive: bool = True
     busy: bool = False                   # checkpoint phase 2 in flight
@@ -170,7 +175,13 @@ class SandboxTree:
                         raise
                 with self._lock:
                     self._children[sid] = _Child(
-                        sandbox=sandbox, view=view, base_ckpt=ckpt_id, full_pin=full_pin
+                        sandbox=sandbox,
+                        view=view,
+                        base_ckpt=ckpt_id,
+                        full_pin=full_pin,
+                        # explicit lifecycle-plane ref: the base image this
+                        # child will delta against (None for dump-less bases)
+                        image_ref=self.cr.images.acquire(full),
                     )
                     self.stats.forks += 1
                 children.append(sandbox)
@@ -246,6 +257,9 @@ class SandboxTree:
                 self._unpin_child(child)
                 child.base_ckpt = ckpt_id
                 child.full_pin = None
+                # the ref moves with the base: the child now deltas against
+                # its own new checkpoint's image
+                child.image_ref = self.cr.images.acquire(ckpt_id)
                 child.created.append(ckpt_id)
                 self.stats.checkpoints += 1
                 deferred = self._clear_busy(sandbox_id, child)
@@ -297,6 +311,9 @@ class SandboxTree:
             self._unpin_child(child)
             child.base_ckpt = ckpt_id
             child.full_pin = full
+            child.image_ref = (
+                self.cr.images.acquire(full) if full is not None else None
+            )
             child.created.append(ckpt_id)
             self.stats.checkpoints += 1
             return ckpt_id
@@ -430,3 +447,6 @@ class SandboxTree:
         if child.full_pin is not None:
             self.sm.unpin(child.full_pin)
             child.full_pin = None
+        if child.image_ref is not None:
+            self.cr.images.release(child.image_ref)
+            child.image_ref = None

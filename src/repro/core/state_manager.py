@@ -24,6 +24,12 @@ Responsibilities (paper §3.2, §3.3, §4.3):
   pinned nodes are exempt from ``reclaim`` and protected by GC — and
   register their checkpoints through ``allocate_ckpt_id``/``adopt_node``
   without moving the trunk's ``current``.
+* **Lifecycle plane**: image ownership lives in DeltaCR's refcounted
+  :class:`~repro.core.image_store.ImageStore` — ``reclaim`` is non-blocking
+  and never needs a ``wait_dumps()`` convention (a dependent in-flight dump
+  holds its own reference on the parent image) — and the whole tree is
+  persistable: ``snapshot_tree``/``load_tree`` round-trip the node graph
+  through the crash-consistent manifest in :mod:`~repro.core.persist`.
 """
 from __future__ import annotations
 
@@ -165,6 +171,18 @@ class StateManager:
     def pinned_ckpts(self) -> frozenset:
         with self._lock:
             return frozenset(self._pins)
+
+    def release_recovered_pins(self) -> Dict[int, int]:
+        """Clear every pin and return the previous {ckpt: count} mapping.
+
+        Pins represent *live* forked sandboxes — process-local state.  After
+        a restart recovery the pinning children no longer exist, so a caller
+        that is not going to re-attach forked work (rebuild a SandboxTree
+        over the persisted bases) releases the recovered pins here;
+        otherwise the pinned nodes would be unreclaimable forever."""
+        with self._lock:
+            pins, self._pins = self._pins, {}
+            return pins
 
     # ------------------------------------------------- forked-child support
     def allocate_ckpt_id(self) -> int:
@@ -382,9 +400,88 @@ class StateManager:
             if self._current == ckpt_id:
                 self._current = node.parent_id
 
+    # ------------------------------------------------- persistence support
+    def snapshot_tree(self) -> Dict[str, Any]:
+        """JSON-able snapshot of the snapshot-index tree.
+
+        Consumed by the persistence plane (:mod:`~repro.core.persist`).
+        Layer configs are emitted with *live* layer ids — the plane remaps
+        them to canonical snapshot ids.  Reclaimed nodes persist as
+        config-less tombstones so child links stay resolvable."""
+        with self._lock:
+            nodes = []
+            for cid in sorted(self.nodes):
+                n = self.nodes[cid]
+                cfg = None if (n.reclaimed or n.layer_config is None) else list(n.layer_config)
+                nodes.append(
+                    {
+                        "ckpt_id": n.ckpt_id,
+                        "parent_id": n.parent_id,
+                        "layer_config": cfg,
+                        "lightweight": n.lightweight,
+                        "replay_actions": list(n.replay_actions),
+                        "children": list(n.children),
+                        "terminal": n.terminal,
+                        "expandable": n.expandable,
+                        "visits": n.visits,
+                        "value": n.value,
+                        "reclaimed": n.reclaimed,
+                        "created_at": n.created_at,
+                    }
+                )
+            return {
+                "nodes": nodes,
+                "current": self._current,
+                "root": self._root_id,
+                "next_ckpt": self._next_ckpt,
+                "pins": {str(k): v for k, v in sorted(self._pins.items())},
+            }
+
+    def load_tree(
+        self, snap: Dict[str, Any], *, layer_map: Optional[Dict[int, int]] = None
+    ) -> None:
+        """Rebuild the node graph from :meth:`snapshot_tree` output.
+
+        Restart recovery: must run on a freshly constructed StateManager.
+        ``layer_map`` translates persisted layer ids to the recovered
+        LayerStore's ids.  The caller (the persistence plane) is responsible
+        for retaining each restored config's layer references."""
+        with self._lock:
+            if self.nodes:
+                raise RuntimeError("load_tree requires an empty StateManager")
+            for nd in snap["nodes"]:
+                cfg = nd["layer_config"]
+                if cfg is not None and layer_map is not None:
+                    cfg = [layer_map[int(l)] for l in cfg]
+                node = SnapshotNode(
+                    ckpt_id=int(nd["ckpt_id"]),
+                    parent_id=None if nd["parent_id"] is None else int(nd["parent_id"]),
+                    layer_config=None if cfg is None else tuple(int(l) for l in cfg),
+                    lightweight=bool(nd["lightweight"]),
+                    replay_actions=tuple(nd["replay_actions"]),
+                )
+                node.children = [int(c) for c in nd["children"]]
+                node.terminal = bool(nd["terminal"])
+                node.expandable = bool(nd["expandable"])
+                node.visits = int(nd["visits"])
+                node.value = float(nd["value"])
+                node.reclaimed = bool(nd["reclaimed"])
+                node.created_at = float(nd["created_at"])
+                self.nodes[node.ckpt_id] = node
+                self.checkpoint_count += 1
+            self._current = None if snap["current"] is None else int(snap["current"])
+            self._root_id = None if snap["root"] is None else int(snap["root"])
+            self._next_ckpt = int(snap["next_ckpt"])
+            self._pins = {int(k): int(v) for k, v in snap["pins"].items()}
+
     # ------------------------------------------------------------------ gc
     def reclaim(self, ckpt_id: int) -> None:
         """Release a node's storage (template + dump + layer refs).
+
+        Non-blocking even while a dependent child dump is still in flight:
+        the dump holds its own ImageStore reference on this node's image, so
+        the chunks are returned exactly when it commits or aborts — no
+        ``wait_dumps()`` convention anywhere in the reclaim path.
 
         Refuses while live forked sandboxes still descend from the node:
         their reads resolve through its layers and their next dump deltas

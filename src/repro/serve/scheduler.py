@@ -40,6 +40,7 @@ from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.deltacr import DeltaCR
+from repro.core.persist import PersistencePlane
 from repro.core.stream import DumpGate
 
 from .engine import Engine, SamplingParams
@@ -59,6 +60,13 @@ class SchedulerConfig:
     dump_demote_poll_ms: float = 2.0     # demoted-window re-check cadence
     dump_demote_max_ms: float = 50.0     # demotion is bounded: dumps progress
     coalesce_suspends: bool = True       # defer template eviction off suspend()
+    # -- persistence plane -----------------------------------------------
+    # When set, the scheduler commits a crash-consistent manifest snapshot
+    # (suspended-session map + DeltaCR image store) every time a coalesced
+    # suspend drain lands dumps — a warm pool of parked agents survives
+    # process death and is re-admitted via Scheduler.recover().
+    persist_path: Optional[str] = None
+    keep_snapshots: int = 4
 
 
 @dataclasses.dataclass
@@ -93,6 +101,11 @@ class Scheduler:
                 demote_max_ms=self.cfg.dump_demote_max_ms,
             )
             self.cr.attach_dump_gate(self.gate)
+        self.plane: Optional[PersistencePlane] = None
+        if self.cfg.persist_path is not None:
+            self.plane = PersistencePlane(
+                self.cfg.persist_path, keep_snapshots=self.cfg.keep_snapshots
+            )
 
     # --------------------------------------------------------------- admit
     def submit(self, prompt, sampling: Optional[SamplingParams] = None) -> int:
@@ -285,7 +298,65 @@ class Scheduler:
             else:
                 remaining.append((ckpt_id, fut))
         self._pending_evict = remaining
+        if evicted and self.plane is not None:
+            # the just-landed dumps are durable in the image store; commit
+            # the manifest so this warm pool survives process death
+            self.persist_now()
         return evicted
+
+    # ---------------------------------------------------------- persistence
+    def persist_now(self) -> Optional[int]:
+        """Commit a manifest snapshot of the suspended warm pool (sessions
+        whose dumps have landed + the DeltaCR image store); returns the
+        snapshot seq, or None when no plane is configured."""
+        if self.plane is None:
+            return None
+        sessions = sorted(
+            (h.sid, h.ckpt_id)
+            for h in self.handles.values()
+            if h.state == "suspended"
+            and h.ckpt_id is not None
+            and self.cr.images.image_for(h.ckpt_id) is not None
+        )
+        return self.plane.save(
+            deltacr=self.cr,
+            extra={"sessions": [list(s) for s in sessions]},
+        )
+
+    @classmethod
+    def recover(
+        cls,
+        engine: Engine,
+        path: str,
+        cfg: Optional[SchedulerConfig] = None,
+        *,
+        restore_fn,
+    ) -> "Scheduler":
+        """Rebuild a scheduler warm pool after process death.
+
+        Recovers the persisted DeltaCR image store and re-admits every
+        persisted suspended session as a ``suspended`` handle; ``resume``
+        then slow-restores it from its durable image exactly as if this
+        process had suspended it.  ``restore_fn`` rebuilds a session from
+        an image payload (e.g. ``PagedSession.restore_from_payload``)."""
+        from repro.core.persist import recover as recover_state
+
+        rec = recover_state(path, restore_fn=restore_fn)
+        cfg = cfg if cfg is not None else SchedulerConfig()
+        if cfg.persist_path is None:
+            cfg = dataclasses.replace(cfg, persist_path=path)
+        sched = cls(engine, rec.deltacr, cfg)
+        max_sid, max_ckpt = 0, 1_000_000 - 1
+        for sid, ckpt_id in rec.extra.get("sessions", []):
+            sid, ckpt_id = int(sid), int(ckpt_id)
+            sched.handles[sid] = SessionHandle(
+                sid=sid, state="suspended", session=None, ckpt_id=ckpt_id
+            )
+            max_sid = max(max_sid, sid)
+            max_ckpt = max(max_ckpt, ckpt_id)
+        sched._sid = itertools.count(max_sid + 1)
+        sched._ckpt = itertools.count(max_ckpt + 1)
+        return sched
 
     def _ensure_headroom(self) -> None:
         """Below the watermark: first reap deferred evictions, then suspend

@@ -216,3 +216,56 @@ def test_deltafs_matches_reference_model(ops):
         for kk, ss in model.items():
             np.testing.assert_array_equal(fs.read(kk), _arr(ss, 24))
         fs.debug_validate()
+
+
+def test_sibling_view_metadata_contention_microbench():
+    """Per-view resolve locks: sibling views' metadata ops (resolve-cached
+    reads + copy-up writes) run concurrently instead of serializing on the
+    one shared LayerStore lock.  Correctness-asserted; throughput printed
+    (the satellite's contention microbenchmark — numbers are informational,
+    never gated, so oversubscribed CI can't flake)."""
+    import threading
+    import time
+
+    store = LayerStore(chunk_bytes=256)
+    base = NamespaceView(store)
+    base.write("seed", _arr(0, 4096))
+    config = base.checkpoint()
+
+    n_views, per_thread_ops = 4, 150
+    views = [NamespaceView(store, base_config=config) for _ in range(n_views)]
+    errors = []
+
+    def worker(i):
+        rng = np.random.default_rng(i)
+        v = views[i]
+        try:
+            for op in range(per_thread_ops):
+                key = f"v{i}/k{op % 8}"
+                v.write(key, rng.integers(0, 255, 512).astype(np.uint8))
+                np.testing.assert_array_equal(v.read("seed"), _arr(0, 4096))
+                assert v.exists(key)
+        except Exception as exc:  # pragma: no cover - failure reporting
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n_views)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not errors, errors
+    total_ops = n_views * per_thread_ops * 3
+    print(
+        f"\n[contention-microbench] {n_views} sibling views × "
+        f"{per_thread_ops} write+read+exists rounds: "
+        f"{total_ops / max(wall, 1e-9):,.0f} metadata ops/s ({wall * 1e3:.1f} ms)"
+    )
+    # isolation held: every view sees its own keys, nobody else's
+    for i, v in enumerate(views):
+        assert v.exists(f"v{i}/k0")
+        assert not v.exists(f"v{(i + 1) % n_views}/k0")
+        v.close()
+    base.close()
+    store.debug_validate()

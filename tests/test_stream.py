@@ -372,11 +372,12 @@ def test_drop_checkpoint_cancels_queued_dump():
     cr._dump_executor.submit(gate.wait)
     s.mutate("t0", lambda a: a.__setitem__(slice(0, 64), 5.0))
     cr.checkpoint(s, 2, 1)
-    # drop_checkpoint sets the cancel flag first, then waits for the worker;
-    # unstall the worker shortly after so the (pre-cancelled) dump runs
-    threading.Timer(0.05, gate.set).start()
+    # drop_checkpoint is non-blocking: it flags the cancel and returns
+    # immediately; unstall the worker and drain the FIFO to observe the
+    # (pre-cancelled) dump resolve transactionally
     cr.drop_checkpoint(2)
-    cr.wait_dumps()
+    gate.set()
+    cr._dump_executor.submit(lambda: None).result(timeout=30)
     after = cr.store.stats.snapshot()
     assert cr.stats.cancelled_dumps == 1
     assert after.chunks_alive == snap.chunks_alive
