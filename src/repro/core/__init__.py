@@ -16,9 +16,17 @@ workloads: a transactional (durable, ephemeral) state pair built from
   lineage (non-blocking reclaim; no wait-before-reclaim conventions),
 * :mod:`~repro.core.persist` — crash-consistent persistence plane
   (manifest-committed snapshots of the whole DeltaState + ``recover``),
-* :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue).
+* :class:`~repro.core.npd.InferenceProxy` — dispatch decoupling (NPD analogue),
+* :mod:`~repro.core.faults` — deterministic fault injection through the
+  production seams (chaos testing + the self-healing dump/read paths).
 """
-from .chunk_store import ChunkStore, ChunkStoreStats
+from .chunk_store import (
+    ChunkCorruptionError,
+    ChunkStore,
+    ChunkStoreStats,
+    RepairStats,
+)
+from .faults import FaultError, FaultPlan, FaultSpec, WorkerKilled
 from .delta_pipeline import (
     ChunkedView,
     DeltaDumpPipeline,
@@ -36,7 +44,7 @@ from .stream import (
     StreamStats,
 )
 from .deltafs import DeltaFS, LayerConfig, LayerStore, NamespaceView, TensorMeta
-from .deltacr import CowArrayState, DeltaCR, DumpImage, ForkableState
+from .deltacr import CowArrayState, DeltaCR, DumpImage, DumpTimeout, ForkableState
 from .gc import reachability_gc, recency_gc
 from .image_store import ImageRef, ImageStore, ImageStoreStats
 from .npd import InferenceProxy, ProxyRequest
@@ -44,6 +52,7 @@ from .persist import (
     PersistencePlane,
     RecoveredState,
     RecoverError,
+    find_chunk_by_digest,
     load_store,
     recover,
     save_state,
@@ -53,8 +62,16 @@ from .state_manager import CheckpointError, Sandbox, SnapshotNode, StateManager
 from .sandbox_tree import SandboxTree, SandboxTreeStats
 
 __all__ = [
+    "ChunkCorruptionError",
     "ChunkStore",
     "ChunkStoreStats",
+    "RepairStats",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "WorkerKilled",
+    "DumpTimeout",
+    "find_chunk_by_digest",
     "ChunkStreamEngine",
     "ChunkedView",
     "DeltaDumpPipeline",

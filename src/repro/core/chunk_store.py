@@ -27,6 +27,17 @@ Producers that already hold a chunk's digest (the delta pipeline hashes each
 dirty chunk exactly once) store through :meth:`put_digested`, which skips
 re-hashing.
 
+**Verified reads** (``verify_reads=True``, off by default): :meth:`get`
+re-hashes the chunk against its stored digest.  On a mismatch the store
+walks its *repair sources* (the persistence plane's durable blobs, DeltaCR's
+anchored generation grids — see :meth:`attach_repair_source`); a source that
+produces digest-matching bytes heals the chunk in place, otherwise the chunk
+is **quarantined** (future reads fail loudly with the chunk id, the dedupe
+key is retired so the bad bytes are never handed out again) and
+:class:`ChunkCorruptionError` is raised.  Outcomes are surfaced in
+:class:`RepairStats`.  Verification is off by default so the fault-free dump
+hot path pays nothing.
+
 The store is process-local and thread-safe; it is the "base storage"
 (Layer 1) of the paper's architecture.
 """
@@ -35,11 +46,20 @@ from __future__ import annotations
 import hashlib
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, Optional, Tuple, Union
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import numpy as np
 
-__all__ = ["ChunkStore", "ChunkStoreStats", "chunk_digest", "iter_chunk_views"]
+from . import faults
+
+__all__ = [
+    "ChunkCorruptionError",
+    "ChunkStore",
+    "ChunkStoreStats",
+    "RepairStats",
+    "chunk_digest",
+    "iter_chunk_views",
+]
 
 DIGEST_BYTES = 16
 
@@ -93,12 +113,42 @@ class ChunkStoreStats:
         return ChunkStoreStats(**vars(self))
 
 
+class ChunkCorruptionError(RuntimeError):
+    """A chunk's bytes no longer match its digest and no repair source could
+    heal it; the chunk is quarantined.  Carries the chunk id so callers can
+    report exactly what was lost."""
+
+    def __init__(self, cid: int, message: str):
+        super().__init__(message)
+        self.cid = cid
+
+
+@dataclass
+class RepairStats:
+    """Verified-read outcomes (the self-healing read path, observable)."""
+
+    verified_gets: int = 0       # reads that re-hashed against the digest
+    mismatches: int = 0          # digest mismatches detected
+    repaired: int = 0            # chunks healed in place by a repair source
+    quarantined: int = 0         # chunks quarantined (unrepairable)
+
+    def snapshot(self) -> "RepairStats":
+        return RepairStats(**vars(self))
+
+
+# A repair source resolves (cid, digest, pad) -> candidate bytes or None.
+# Sources must not call back into the store (they run outside its lock but a
+# re-entrant get() on the corrupt cid would recurse through verification).
+RepairSource = Callable[[int, bytes, int], Optional[bytes]]
+
+
 @dataclass
 class _Chunk:
     data: bytes
     refs: int = 1
     digest: Optional[bytes] = None
     pad: int = 0  # trailing zero-pad bytes (last chunk of a tensor)
+    quarantined: bool = False
 
 
 class ChunkStore:
@@ -109,16 +159,25 @@ class ChunkStore:
     one store).
     """
 
-    def __init__(self, *, chunk_bytes: int = 64 * 1024, dedupe: bool = True):
+    def __init__(
+        self,
+        *,
+        chunk_bytes: int = 64 * 1024,
+        dedupe: bool = True,
+        verify_reads: bool = False,
+    ):
         if chunk_bytes <= 0:
             raise ValueError("chunk_bytes must be positive")
         self.chunk_bytes = int(chunk_bytes)
         self.dedupe = bool(dedupe)
+        self.verify_reads = bool(verify_reads)
         self._lock = threading.RLock()
         self._chunks: Dict[int, _Chunk] = {}
         self._by_digest: Dict[Tuple[bytes, int], int] = {}
         self._next_id = 1
+        self._repair_sources: List[RepairSource] = []
         self.stats = ChunkStoreStats()
+        self.repair_stats = RepairStats()
 
     # ------------------------------------------------------------------ put
     def put(self, data: bytes, *, pad: int = 0) -> int:
@@ -157,6 +216,9 @@ class ChunkStore:
         return hit
 
     def _put_locked(self, data, digest: Optional[bytes], pad: int) -> int:
+        # fault seam BEFORE any mutation: an injected put failure is
+        # transactional by construction (no partial store state to undo)
+        faults.fire("chunk_store.put")
         with self._lock:
             self.stats.puts += 1
             hit = self._dedup_hit_locked(digest, pad)
@@ -189,7 +251,79 @@ class ChunkStore:
     # ------------------------------------------------------------------ get
     def get(self, cid: int) -> bytes:
         with self._lock:
-            return self._chunks[cid].data
+            chunk = self._chunks[cid]
+            if chunk.quarantined:
+                raise ChunkCorruptionError(
+                    cid, f"chunk {cid} is quarantined (digest mismatch, unrepaired)"
+                )
+            data, digest, pad = chunk.data, chunk.digest, chunk.pad
+        # read seam: a "corrupt" spec models bitrot/transient read errors
+        data = faults.fire("chunk_store.get", data)
+        if not self.verify_reads or digest is None:
+            return data
+        self.repair_stats.verified_gets += 1
+        if hashlib.blake2b(data, digest_size=DIGEST_BYTES).digest() == digest:
+            return data
+        return self._repair_or_quarantine(cid, digest, pad)
+
+    def _repair_or_quarantine(self, cid: int, digest: bytes, pad: int) -> bytes:
+        """Digest mismatch on a verified read: heal from a repair source or
+        quarantine and fail loudly.  Runs outside the store lock — repair
+        sources walk other subsystems (persistence blobs, generation grids).
+        """
+        self.repair_stats.mismatches += 1
+        for source in list(self._repair_sources):
+            try:
+                candidate = source(cid, digest, pad)
+            except Exception:
+                continue                    # a broken source never masks the error
+            if (
+                candidate is not None
+                and hashlib.blake2b(candidate, digest_size=DIGEST_BYTES).digest() == digest
+            ):
+                healed = bytes(candidate)
+                with self._lock:
+                    chunk = self._chunks.get(cid)
+                    if chunk is not None:
+                        delta = len(healed) - len(chunk.data)
+                        if delta:
+                            self.stats.physical_bytes += delta
+                            self.stats.logical_bytes += delta * chunk.refs
+                        chunk.data = healed
+                        chunk.quarantined = False
+                self.repair_stats.repaired += 1
+                return healed
+        with self._lock:
+            chunk = self._chunks.get(cid)
+            if chunk is not None and not chunk.quarantined:
+                chunk.quarantined = True
+                # retire the dedupe key: never hand the bad bytes to a new put
+                self._by_digest.pop((digest, pad), None)
+                self.repair_stats.quarantined += 1
+        raise ChunkCorruptionError(
+            cid, f"chunk {cid}: digest mismatch and no repair source could heal it"
+        )
+
+    # -------------------------------------------------------- repair plumbing
+    def attach_repair_source(self, source: RepairSource) -> None:
+        """Register a ``(cid, digest, pad) -> bytes | None`` healer, tried in
+        attach order on verified-read mismatches."""
+        self._repair_sources.append(source)
+
+    def quarantined_ids(self) -> List[int]:
+        with self._lock:
+            return sorted(cid for cid, c in self._chunks.items() if c.quarantined)
+
+    def corrupt_chunk_for_test(self, cid: int, *, byte: int = 0) -> None:
+        """Chaos-test helper: flip one bit of a stored chunk in place,
+        modelling silent media corruption (the digest is left untouched, so
+        a verified read detects the damage)."""
+        with self._lock:
+            chunk = self._chunks[cid]
+            if not chunk.data:
+                return
+            i = byte % len(chunk.data)
+            chunk.data = chunk.data[:i] + bytes([chunk.data[i] ^ 0x01]) + chunk.data[i + 1 :]
 
     def pad_of(self, cid: int) -> int:
         with self._lock:
@@ -275,10 +409,22 @@ class ChunkStore:
         return tuple(ids)
 
     def get_bytes(self, ids: tuple[int, ...]) -> bytes:
+        if self.verify_reads:
+            # correctness path: route every chunk through the verified get
+            out = []
+            for cid in ids:
+                data = self.get(cid)
+                pad = self.pad_of(cid)
+                out.append(data[: len(data) - pad] if pad else data)
+            return b"".join(out)
         out = []
         with self._lock:
             for cid in ids:
                 chunk = self._chunks[cid]
+                if chunk.quarantined:
+                    raise ChunkCorruptionError(
+                        cid, f"chunk {cid} is quarantined (digest mismatch, unrepaired)"
+                    )
                 out.append(chunk.data[: len(chunk.data) - chunk.pad] if chunk.pad else chunk.data)
         return b"".join(out)
 

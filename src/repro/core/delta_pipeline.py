@@ -385,12 +385,18 @@ class DeltaDumpPipeline:
             n = len(meta.chunk_ids)
             if n == 0:
                 continue
-            row_bytes = len(store.get(meta.chunk_ids[0]))
-            if row_bytes == 0 or not self._rows_match(meta, row_bytes):
+            try:
+                row_bytes = len(store.get(meta.chunk_ids[0]))
+                if row_bytes == 0 or not self._rows_match(meta, row_bytes):
+                    continue
+                grid = np.empty((n, row_bytes), np.uint8)
+                for i, cid in enumerate(meta.chunk_ids):
+                    grid[i] = np.frombuffer(store.get(cid), np.uint8)
+            except Exception:
+                # a quarantined/corrupt chunk must not abort recovery: this
+                # tensor just misses the rebuilt anchor — the first dump
+                # against it pays the full path, which is correct, only slow
                 continue
-            grid = np.empty((n, row_bytes), np.uint8)
-            for i, cid in enumerate(meta.chunk_ids):
-                grid[i] = np.frombuffer(store.get(cid), np.uint8)
             views[name] = ChunkedView(
                 shape=meta.shape,
                 dtype=meta.dtype,
@@ -736,23 +742,30 @@ class DeltaDumpPipeline:
         ids = []
         digests = []
         dirtied = 0
-        for i in range(view.n_chunks):
-            pr = rows.get(i)
-            if pr is None:  # clean: re-reference the parent's chunk
-                store.incref(pm.chunk_ids[i])
-                ids.append(pm.chunk_ids[i])
+        try:
+            for i in range(view.n_chunks):
+                pr = rows.get(i)
+                if pr is None:  # clean: re-reference the parent's chunk
+                    store.incref(pm.chunk_ids[i])
+                    ids.append(pm.chunk_ids[i])
+                    if with_digests:
+                        digests.append(pm.digests[i])
+                    continue
+                payload, digest = pr
+                pad = view.trailing_pad if i == view.n_chunks - 1 else 0
+                if digest is not None:   # rows are already padded: pad-0 hash
+                    ids.append(store.put_digested(payload, digest=digest, pad=pad))
+                else:
+                    ids.append(store.put(payload, pad=pad))
                 if with_digests:
-                    digests.append(pm.digests[i])
-                continue
-            payload, digest = pr
-            pad = view.trailing_pad if i == view.n_chunks - 1 else 0
-            if digest is not None:       # rows are already padded: pad-0 hash
-                ids.append(store.put_digested(payload, digest=digest, pad=pad))
-            else:
-                ids.append(store.put(payload, pad=pad))
-            if with_digests:
-                digests.append(digest)
-            dirtied += 1
+                    digests.append(digest)
+                dirtied += 1
+        except BaseException:
+            # a put/incref failure mid-fold: the refs taken so far are not in
+            # any entry yet, so the outer rollback cannot see them — return
+            # them here to keep the dump transactional
+            store.decref_many(ids)
+            raise
         return (
             TensorMeta(
                 shape=view.shape,
@@ -780,26 +793,33 @@ class DeltaDumpPipeline:
         ids = []
         digests = []
         dirtied = 0
-        for i in range(view.n_chunks):
-            payload, digest = rows[i]
-            if i < len(prev_ids):
-                if digest is not None and i < len(prev_digests):
-                    same = prev_digests[i] == digest
-                else:  # digest-less entry or store: full byte compare
-                    same = store.get(prev_ids[i]) == payload
-                if same:
-                    store.incref(prev_ids[i])
-                    ids.append(prev_ids[i])
-                    if digest is not None:
-                        digests.append(digest)
-                    continue
-            pad = view.trailing_pad if i == view.n_chunks - 1 else 0
-            if digest is not None:
-                ids.append(store.put_digested(payload, digest=digest, pad=pad))
-                digests.append(digest)
-            else:
-                ids.append(store.put(payload, pad=pad))
-            dirtied += 1
+        try:
+            for i in range(view.n_chunks):
+                payload, digest = rows[i]
+                if i < len(prev_ids):
+                    if digest is not None and i < len(prev_digests):
+                        same = prev_digests[i] == digest
+                    else:  # digest-less entry or store: full byte compare
+                        same = store.get(prev_ids[i]) == payload
+                    if same:
+                        store.incref(prev_ids[i])
+                        ids.append(prev_ids[i])
+                        if digest is not None:
+                            digests.append(digest)
+                        continue
+                pad = view.trailing_pad if i == view.n_chunks - 1 else 0
+                if digest is not None:
+                    ids.append(store.put_digested(payload, digest=digest, pad=pad))
+                    digests.append(digest)
+                else:
+                    ids.append(store.put(payload, pad=pad))
+                dirtied += 1
+        except BaseException:
+            # partial fold (a put fault or a corrupt parent read): the refs
+            # taken so far belong to no entry yet — return them so the
+            # dump's rollback leaves the store balanced
+            store.decref_many(ids)
+            raise
         return (
             TensorMeta(
                 shape=view.shape,

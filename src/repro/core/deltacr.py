@@ -35,26 +35,31 @@ the device-side one.
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
+import weakref
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Protocol, Set, Tuple, runtime_checkable
+from typing import Any, Callable, Dict, List, Optional, Protocol, Set, Tuple, runtime_checkable
 
 import numpy as np
 
-from .chunk_store import ChunkStore
+from . import faults
+from .chunk_store import ChunkStore, chunk_digest
 from .delta_pipeline import (
     ChunkedView,
     DeltaDumpPipeline,
     DeltaGeneration,
+    EncodeResult,
     digest_encode_array,
     dirty_base,
     mark_clean,
     mark_unknown,
 )
 from .deltafs import TensorMeta
+from .faults import FaultError, WorkerKilled
 from .image_store import DumpTicket, ImageStore
 from .stream import ChunkStreamEngine, DumpGate, StreamCancelled, StreamConfig
 
@@ -62,9 +67,143 @@ __all__ = [
     "ForkableState",
     "CowArrayState",
     "DumpImage",
+    "DumpTimeout",
     "DeltaCR",
     "DeltaCRStats",
 ]
+
+
+class DumpTimeout(RuntimeError):
+    """A dump attempt exceeded its per-dump deadline.
+
+    Raised *after* the attempt's state has been fully rolled back (the
+    deadline rides the transactional :class:`StreamCancelled` cancel path),
+    so the caller may retry or degrade to the legacy full path safely."""
+
+
+class _EitherEvent:
+    """is_set() over several events — lets a per-dump deadline ride the same
+    cancel plumbing drop_checkpoint uses, without touching the user event."""
+
+    def __init__(self, *events: Optional[threading.Event]):
+        self._events = [e for e in events if e is not None]
+
+    def is_set(self) -> bool:
+        return any(e.is_set() for e in self._events)
+
+
+try:
+    # The same interpreter-shutdown hook concurrent.futures uses: runs
+    # *before* non-daemon thread joins and daemon-thread teardown, so live
+    # workers drain cleanly even when the process exits without shutdown()
+    # (an unhandled exception while a dump is mid-device-fetch would
+    # otherwise kill the daemon thread inside native code and abort).
+    from threading import _register_atexit as _thread_atexit
+except ImportError:  # pragma: no cover - future interpreters
+    _thread_atexit = None
+
+_LIVE_WORKERS: "weakref.WeakSet[_SupervisedWorker]" = weakref.WeakSet()
+_WORKER_ATEXIT_ARMED = False
+
+
+def _drain_workers_at_exit() -> None:
+    for worker in list(_LIVE_WORKERS):
+        worker.shutdown(wait=True)
+
+
+class _SupervisedWorker:
+    """Supervised single-thread FIFO executor (the GSD dump thread).
+
+    Same FIFO ordering as the ThreadPoolExecutor it replaces — the delta
+    chain depends on parent dumps completing before children — plus
+    supervision: if the worker thread dies (a :class:`WorkerKilled`
+    escaping a task, or any interpreter-level BaseException), the dying
+    thread resolves its in-flight future loudly (converted to a catchable
+    :class:`FaultError`), spawns its own successor, and exits.  Queued
+    tasks survive in the queue and drain on the successor; nothing wedges
+    and no ticket is silently lost — each dump task aborts its ImageStore
+    ticket on the way out (see ``DeltaCR._dump_image``)."""
+
+    def __init__(self, name: str):
+        self._name = name
+        self._q: "queue.Queue[Optional[Tuple[Future, Callable[..., Any], tuple]]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._shut = False
+        self.deaths = 0              # worker threads that died mid-loop
+        self.restarts = 0            # successor threads spawned
+        global _WORKER_ATEXIT_ARMED
+        if _thread_atexit is not None:
+            _LIVE_WORKERS.add(self)
+            if not _WORKER_ATEXIT_ARMED:
+                _WORKER_ATEXIT_ARMED = True
+                _thread_atexit(_drain_workers_at_exit)
+        self._spawn(initial=True)
+
+    def _spawn(self, *, initial: bool = False) -> None:
+        with self._lock:
+            if self._shut:
+                return
+            alive = self._thread is not None and self._thread.is_alive()
+            if alive and self._thread is not threading.current_thread():
+                return               # someone else already respawned
+            if not initial:
+                self.restarts += 1
+            self._thread = threading.Thread(target=self._run, name=self._name, daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            self._loop()
+        except BaseException:
+            with self._lock:
+                self.deaths += 1
+                shut = self._shut
+            if not shut:
+                self._spawn()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fut, fn, args = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                result = fn(*args)
+            except WorkerKilled as exc:
+                # resolve the task loudly with an *Exception* (callers use
+                # `except Exception` / future.result()), then let the kill
+                # escape and take this thread down — supervision restarts it
+                fut.set_exception(FaultError(f"dump worker died: {exc}"))
+                raise
+            except BaseException as exc:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+
+    def submit(self, fn: Callable[..., Any], *args: Any) -> Future:
+        with self._lock:
+            if self._shut:
+                raise RuntimeError("dump worker is shut down")
+        fut: Future = Future()
+        self._q.put((fut, fn, args))
+        # belt-and-braces: normally the dying thread respawns itself, but if
+        # that also failed, the next submit revives the worker
+        with self._lock:
+            alive = self._thread is not None and self._thread.is_alive()
+        if not alive:
+            self._spawn()
+        return fut
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            self._shut = True
+            thread = self._thread
+        self._q.put(None)
+        if wait and thread is not None:
+            thread.join(timeout=60.0)
 
 
 # --------------------------------------------------------------------------
@@ -281,7 +420,27 @@ class DeltaCRStats:
         self.streamed_dumps = 0       # dumps that went through the stream engine
         self.stream_windows = 0       # total windows streamed
         self.cancelled_dumps = 0      # dumps rolled back mid-stream
+        # fault-domain accounting (self-healing dump path)
+        self.dump_retries = 0         # encode attempts retried after rollback
+        self.dump_failures = 0        # dumps that failed loudly (ticket aborted)
+        self.fallback_dumps = 0       # delta/digest dumps degraded to legacy
+        self.degraded_dumps = 0       # dumps that skipped delta in degraded mode
+        self.deadline_trips = 0       # per-dump deadlines exceeded
         self.lock = threading.Lock()
+
+
+@dataclass
+class _EncodeOutcome:
+    """Result of one (possibly retried / degraded) encode: what landed."""
+
+    entries: Dict[str, TensorMeta]
+    dirtied: int
+    mode: str                                 # "delta" | "digest" | "legacy"
+    anchor_views: Optional[Dict[str, ChunkedView]] = None
+    clean_keys: int = 0
+    kernel_keys: int = 0
+    full_keys: int = 0
+    res: Optional[EncodeResult] = None
 
 
 # --------------------------------------------------------------------------
@@ -314,6 +473,11 @@ class DeltaCR:
         max_generations: int = 4,
         stream: bool = True,
         stream_config: Optional[StreamConfig] = None,
+        dump_retries: int = 2,
+        retry_backoff_s: float = 0.005,
+        dump_deadline_s: Optional[float] = None,
+        delta_fail_threshold: int = 3,
+        degraded_probe_every: int = 4,
     ):
         if dump_mode not in ("auto", "digest", "legacy"):
             raise ValueError(f"unknown dump_mode {dump_mode!r}")
@@ -344,8 +508,24 @@ class DeltaCR:
                 max_generations=max_generations,
                 stream=engine,
             )
-        # Single-worker pool, like the paper's GSD dump thread.
-        self._dump_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-dump")
+        # Self-healing dump knobs: bounded retry with exponential backoff,
+        # optional per-dump wall deadline, and degraded mode (after
+        # `delta_fail_threshold` consecutive delta-path failures dumps go
+        # straight to the legacy full path, probing delta every
+        # `degraded_probe_every`-th dump until one succeeds).
+        self.dump_retries = max(0, int(dump_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.dump_deadline_s = dump_deadline_s
+        self.delta_fail_threshold = max(1, int(delta_fail_threshold))
+        self.degraded_probe_every = max(1, int(degraded_probe_every))
+        # Degraded-mode state: touched only on the single dump-worker thread.
+        self._delta_failures = 0
+        self._degraded = False
+        self._degraded_skips = 0
+        # Supervised single worker, like the paper's GSD dump thread — FIFO
+        # ordering preserved (delta chaining depends on it), dead workers
+        # respawn with queued dumps intact.
+        self._dump_worker = _SupervisedWorker("deltacr-dump")
         self._warm_executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="deltacr-warm")
         self._templates: "OrderedDict[int, ForkableState]" = OrderedDict()
         self._images: Dict[int, Future] = {}        # ckpt_id -> Future[DumpImage]
@@ -358,6 +538,16 @@ class DeltaCR:
         # convention anywhere in the reclaim paths.
         self.images = ImageStore(self.store, evict_hook=self._evict_generation)
         self.stats = DeltaCRStats()
+        # Verified-read repair: a corrupt stored chunk can be re-derived from
+        # any anchored generation grid row that still maps to it.
+        self.store.attach_repair_source(self._repair_from_generations)
+
+    @property
+    def _dump_executor(self) -> _SupervisedWorker:
+        """Legacy alias: tests/benchmarks stall or flush the FIFO dump queue
+        by submitting barrier tasks; the supervised worker keeps the same
+        submit()/Future interface."""
+        return self._dump_worker
 
     def _evict_generation(self, image_id: int) -> None:
         """ImageStore hook: a dying/dropped image releases its generation
@@ -394,7 +584,11 @@ class DeltaCR:
 
         Synchronous work is the fork only (the paper's ~9 ms stash fork);
         serialization runs on the background worker, masked by inference.
+
+        Transactional: a template-fork failure raises here with nothing
+        registered — no ticket, no template, no dump queued.
         """
+        faults.fire("template.fork")
         template = state.fork()
         with self._lock:
             if dump:
@@ -426,7 +620,7 @@ class DeltaCR:
                     if parent_fut is not None and parent_ckpt is not None
                     else None
                 )
-                fut = self._dump_executor.submit(
+                fut = self._dump_worker.submit(
                     self._do_dump, ckpt_id, ticket, dump_src, parent_fut,
                     parent_ref, priority, cancel,
                 )
@@ -492,46 +686,8 @@ class DeltaCR:
                 parent = None  # parent dump failed: fall back to a full image
         t0 = time.perf_counter()
         bytes_before = self.store.stats.bytes_written
-        entries: Dict[str, TensorMeta] = {}
-        dirtied = 0
-        mode = self.dump_mode
-        anchor_views: Optional[Dict[str, ChunkedView]] = None
-        clean = kernel = full = 0
-        res = None
         try:
-            use_pipeline = (
-                self.dump_mode == "auto"
-                and self.pipeline is not None
-                and hasattr(dump_src, "delta_generation")
-            )
-            if use_pipeline:
-                mode = "delta"
-                gen = dump_src.delta_generation(self.store.chunk_bytes)
-                res = self.pipeline.encode_generation(
-                    gen, parent, cancel=cancel, priority=priority
-                )
-                entries, dirtied = res.entries, res.dirtied
-                clean, kernel, full = res.clean_keys, res.kernel_keys, res.full_keys
-                anchor_views = gen.views
-            elif self.dump_mode == "legacy":
-                entries, dirtied = self._legacy_encode(dump_src.dump_payload(), parent)
-            else:
-                mode = "digest"
-                for name, arr in dump_src.dump_payload().items():
-                    if cancel is not None and cancel.is_set():
-                        # transactional digest-path cancel: return every
-                        # chunk reference this dump already took
-                        self.store.decref_many(
-                            cid for m in entries.values() for cid in m.chunk_ids
-                        )
-                        raise StreamCancelled(
-                            f"checkpoint {ckpt_id}: digest dump cancelled "
-                            f"after {len(entries)} tensors"
-                        )
-                    pm = parent.entries.get(name) if parent is not None else None
-                    meta, n_dirty = digest_encode_array(self.store, arr, pm)
-                    entries[name] = meta
-                    dirtied += n_dirty
+            out = self._encode_with_recovery(ckpt_id, dump_src, parent, priority, cancel)
         except StreamCancelled:
             # dropped mid-dump (drop_checkpoint): the pipeline already rolled
             # back every chunk reference; the dump fork is all that remains
@@ -540,10 +696,21 @@ class DeltaCR:
             with self.stats.lock:
                 self.stats.cancelled_dumps += 1
             raise
-        except Exception:
+        except BaseException:
+            # Loud, transactional failure (retries and the legacy fallback
+            # exhausted, or an injected WorkerKilled): every encode attempt
+            # rolled back its own chunk references — resolve the ticket so
+            # no half-image survives, then re-raise to the dump future.
             dump_src.release()
             self.images.abort(ticket)
+            with self.stats.lock:
+                self.stats.dump_failures += 1
             raise
+        entries, dirtied = out.entries, out.dirtied
+        mode = out.mode
+        anchor_views = out.anchor_views
+        clean, kernel, full = out.clean_keys, out.kernel_keys, out.full_keys
+        res = out.res
         wall_ms = (time.perf_counter() - t0) * 1e3
         image_id = self.images.allocate_image_id()
         image = DumpImage(
@@ -591,32 +758,268 @@ class DeltaCR:
                 self.stats.stream_windows += image.stream_windows
         return image
 
+    # ---------------------------------------------------- self-healing encode
+    def _encode_with_recovery(
+        self,
+        ckpt_id: int,
+        dump_src: ForkableState,
+        parent: Optional[DumpImage],
+        priority: str,
+        cancel: Optional[threading.Event],
+    ) -> _EncodeOutcome:
+        """Encode with bounded retries, a per-dump deadline, and graceful
+        degradation: primary path (delta pipeline or digest) first, and after
+        it exhausts its retries the legacy full path — so a checkpoint lands
+        unless even full serialization fails, in which case the caller aborts
+        the ticket loudly.  Every failed attempt has rolled back its own
+        chunk references before the next one starts."""
+        deadline = (
+            time.monotonic() + self.dump_deadline_s
+            if self.dump_deadline_s is not None
+            else None
+        )
+        delta_capable = (
+            self.dump_mode == "auto"
+            and self.pipeline is not None
+            and hasattr(dump_src, "delta_generation")
+        )
+        primary: Optional[Tuple[str, Callable[[], _EncodeOutcome]]] = None
+        if delta_capable:
+            if not self._skip_delta_while_degraded():
+                primary = (
+                    "delta",
+                    lambda: self._delta_attempt(dump_src, parent, priority, cancel, deadline),
+                )
+            # else: degraded — go straight to the legacy full path below,
+            # probing the delta path again every degraded_probe_every dumps
+        elif self.dump_mode in ("auto", "digest"):
+            primary = (
+                "digest",
+                lambda: self._digest_attempt(ckpt_id, dump_src, parent, cancel),
+            )
+        if primary is not None:
+            what, attempt = primary
+            try:
+                out = self._retrying(attempt, what=what, deadline=deadline, cancel=cancel)
+            except StreamCancelled:
+                raise
+            except Exception as exc:
+                if what == "delta":
+                    self._note_delta_failure(parent)
+                with self.stats.lock:
+                    self.stats.fallback_dumps += 1
+                last_error = exc
+            else:
+                if what == "delta":
+                    self._note_delta_ok()
+                return out
+        else:
+            last_error = None
+        # Degradation target: the legacy full path has no device kernels, no
+        # stream engine, no delta chain — minimum moving parts.  It ignores
+        # the (already blown) deadline: the goal now is to *land*.  If it
+        # also fails, raise the legacy error chained on the primary one.
+        try:
+            return self._retrying(
+                lambda: self._legacy_attempt(ckpt_id, dump_src, parent, cancel),
+                what="legacy", deadline=None, cancel=cancel,
+            )
+        except StreamCancelled:
+            raise
+        except Exception as exc:
+            if last_error is not None:
+                raise exc from last_error
+            raise
+
+    def _retrying(
+        self,
+        attempt: Callable[[], _EncodeOutcome],
+        *,
+        what: str,
+        deadline: Optional[float],
+        cancel: Optional[threading.Event],
+    ) -> _EncodeOutcome:
+        """Run ``attempt`` up to ``1 + dump_retries`` times with exponential
+        backoff.  Each attempt is transactional (rolls back its chunk refs on
+        failure), so retrying is always safe.  A blown deadline stops the
+        retry loop — the caller degrades instead of burning more wall time."""
+        attempts = self.dump_retries + 1
+        last: Optional[Exception] = None
+        for i in range(attempts):
+            if cancel is not None and cancel.is_set():
+                raise StreamCancelled(f"dump cancelled before {what} attempt {i + 1}")
+            try:
+                faults.fire("dump.worker")
+                return attempt()
+            except StreamCancelled:
+                raise
+            except Exception as exc:
+                last = exc
+                if deadline is not None and time.monotonic() >= deadline:
+                    with self.stats.lock:
+                        self.stats.deadline_trips += 1
+                    break
+                if i + 1 < attempts:
+                    with self.stats.lock:
+                        self.stats.dump_retries += 1
+                    time.sleep(self.retry_backoff_s * (2 ** i))
+        assert last is not None
+        raise last
+
+    def _delta_attempt(
+        self,
+        dump_src: ForkableState,
+        parent: Optional[DumpImage],
+        priority: str,
+        cancel: Optional[threading.Event],
+        deadline: Optional[float],
+    ) -> _EncodeOutcome:
+        gen = dump_src.delta_generation(self.store.chunk_bytes)  # type: ignore[attr-defined]
+        deadline_evt: Optional[threading.Event] = None
+        timer: Optional[threading.Timer] = None
+        eff_cancel: Any = cancel
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise DumpTimeout("dump deadline exceeded before delta encode")
+            # The deadline rides the stream's transactional cancel plumbing:
+            # when the timer fires mid-stream, encode_generation unwinds via
+            # StreamCancelled with every chunk reference rolled back, exactly
+            # as a user drop would — we just rename the exception.
+            deadline_evt = threading.Event()
+            timer = threading.Timer(remaining, deadline_evt.set)
+            timer.daemon = True
+            timer.start()
+            eff_cancel = _EitherEvent(cancel, deadline_evt)
+        try:
+            res = self.pipeline.encode_generation(  # type: ignore[union-attr]
+                gen, parent, cancel=eff_cancel, priority=priority
+            )
+        except StreamCancelled:
+            if cancel is not None and cancel.is_set():
+                raise                      # a real drop: transactional cancel
+            if deadline_evt is not None and deadline_evt.is_set():
+                raise DumpTimeout(
+                    "dump deadline exceeded mid-stream (attempt rolled back)"
+                ) from None
+            raise
+        finally:
+            if timer is not None:
+                timer.cancel()
+        return _EncodeOutcome(
+            entries=res.entries,
+            dirtied=res.dirtied,
+            mode="delta",
+            anchor_views=gen.views,
+            clean_keys=res.clean_keys,
+            kernel_keys=res.kernel_keys,
+            full_keys=res.full_keys,
+            res=res,
+        )
+
+    def _digest_attempt(
+        self,
+        ckpt_id: int,
+        dump_src: ForkableState,
+        parent: Optional[DumpImage],
+        cancel: Optional[threading.Event],
+    ) -> _EncodeOutcome:
+        entries: Dict[str, TensorMeta] = {}
+        dirtied = 0
+        try:
+            for name, arr in dump_src.dump_payload().items():
+                if cancel is not None and cancel.is_set():
+                    raise StreamCancelled(
+                        f"checkpoint {ckpt_id}: digest dump cancelled "
+                        f"after {len(entries)} tensors"
+                    )
+                pm = parent.entries.get(name) if parent is not None else None
+                meta, n_dirty = digest_encode_array(self.store, arr, pm)
+                entries[name] = meta
+                dirtied += n_dirty
+        except BaseException:
+            # transactional: return every chunk reference this attempt took
+            # (digest_encode_array rolls back its own partial tensor)
+            self.store.decref_many(
+                cid for m in entries.values() for cid in m.chunk_ids
+            )
+            raise
+        return _EncodeOutcome(entries=entries, dirtied=dirtied, mode="digest")
+
+    def _legacy_attempt(
+        self,
+        ckpt_id: int,
+        dump_src: ForkableState,
+        parent: Optional[DumpImage],
+        cancel: Optional[threading.Event],
+    ) -> _EncodeOutcome:
+        if cancel is not None and cancel.is_set():
+            raise StreamCancelled(f"checkpoint {ckpt_id}: legacy dump cancelled")
+        entries, dirtied = self._legacy_encode(dump_src.dump_payload(), parent)
+        return _EncodeOutcome(entries=entries, dirtied=dirtied, mode="legacy")
+
+    # --------------------------------------------------- degraded-mode state
+    # (all three helpers run only on the single dump-worker thread)
+    def _skip_delta_while_degraded(self) -> bool:
+        if not self._degraded:
+            return False
+        self._degraded_skips += 1
+        if self._degraded_skips % self.degraded_probe_every == 0:
+            return False                 # probe: try the delta path again
+        with self.stats.lock:
+            self.stats.degraded_dumps += 1
+        return True
+
+    def _note_delta_ok(self) -> None:
+        self._delta_failures = 0
+        self._degraded = False
+        self._degraded_skips = 0
+
+    def _note_delta_failure(self, parent: Optional[DumpImage]) -> None:
+        self._delta_failures += 1
+        if self._delta_failures >= self.delta_fail_threshold:
+            self._degraded = True
+        # The generation this dump diffed against may itself be the poison
+        # (a corrupt anchor grid reproduces the failure on every retry):
+        # invalidate it so the next delta dump re-bases on a fresh full
+        # materialization instead of the suspect anchor.
+        if parent is not None and self.pipeline is not None:
+            self.pipeline.evict(parent.image_id)
+
     def _legacy_encode(
         self, payload: Dict[str, np.ndarray], parent: Optional[DumpImage]
     ) -> Tuple[Dict[str, TensorMeta], int]:
         """The seed's O(full state) path: serialize everything, byte-compare
-        every chunk against the parent.  Benchmark baseline only."""
+        every chunk against the parent.  Benchmark baseline — and the
+        degradation target when the delta/digest paths fail, so it rolls
+        back transactionally like every other attempt."""
         entries: Dict[str, TensorMeta] = {}
         dirtied = 0
         cb = self.store.chunk_bytes
-        for name, arr in payload.items():
-            arr = np.ascontiguousarray(arr)
-            raw = arr.tobytes()
-            prev_ids: Tuple[int, ...] = ()
-            if parent is not None:
-                pm = parent.entries.get(name)
-                if pm is not None and pm.shape == tuple(arr.shape) and pm.dtype == str(arr.dtype):
-                    prev_ids = pm.chunk_ids
-            ids = []
-            for idx, off in enumerate(range(0, max(len(raw), 1), cb)):
-                piece = raw[off : off + cb]
-                if idx < len(prev_ids) and self.store.get(prev_ids[idx]) == piece:
-                    self.store.incref(prev_ids[idx])
-                    ids.append(prev_ids[idx])
-                else:
-                    ids.append(self.store.put(piece))
-                    dirtied += 1
-            entries[name] = TensorMeta(tuple(arr.shape), str(arr.dtype), tuple(ids))
+        taken: List[int] = []            # every chunk ref this attempt holds
+        try:
+            for name, arr in payload.items():
+                arr = np.ascontiguousarray(arr)
+                raw = arr.tobytes()
+                prev_ids: Tuple[int, ...] = ()
+                if parent is not None:
+                    pm = parent.entries.get(name)
+                    if pm is not None and pm.shape == tuple(arr.shape) and pm.dtype == str(arr.dtype):
+                        prev_ids = pm.chunk_ids
+                ids = []
+                for idx, off in enumerate(range(0, max(len(raw), 1), cb)):
+                    piece = raw[off : off + cb]
+                    if idx < len(prev_ids) and self.store.get(prev_ids[idx]) == piece:
+                        self.store.incref(prev_ids[idx])
+                        ids.append(prev_ids[idx])
+                    else:
+                        ids.append(self.store.put(piece))
+                        dirtied += 1
+                    taken.append(ids[-1])
+                entries[name] = TensorMeta(tuple(arr.shape), str(arr.dtype), tuple(ids))
+        except BaseException:
+            self.store.decref_many(taken)
+            raise
         return entries, dirtied
 
     # -------------------------------------------------------------- restore
@@ -636,6 +1039,7 @@ class DeltaCR:
             template = self._templates.get(ckpt_id)
             if template is not None:
                 self._templates.move_to_end(ckpt_id)  # LRU touch
+                faults.fire("template.fork")
                 new_state = template.fork()
                 with self.stats.lock:
                     self.stats.fast_restores += 1
@@ -770,8 +1174,64 @@ class DeltaCR:
         with self._lock:
             return len(self._templates)
 
+    # ----------------------------------------------------- repair and health
+    def _repair_from_generations(self, cid: int, digest: bytes, pad: int) -> Optional[bytes]:
+        """ChunkStore repair source: re-derive a corrupt chunk's bytes from
+        any anchored generation grid row that still maps to it.
+
+        The anchor grids are independent copies of the tensor bytes (the
+        dump fork's pages), so a bit flipped in the store's copy is absent
+        there.  Rows are chunk-padded exactly like stored data, so the
+        stored digest is recomputable directly; the store re-verifies the
+        candidate before healing."""
+        if self.pipeline is None:
+            return None
+        for image_id, name, idx in self.images.find_chunk(cid):
+            rec = self.pipeline.record_for(image_id)
+            if rec is None:
+                continue
+            try:
+                view = rec.views.get(name)
+                if view is None or idx >= view.n_chunks:
+                    continue
+                row = np.ascontiguousarray(np.asarray(view.grid)[idx]).tobytes()
+            except Exception:
+                continue        # anchor unreadable: try the next location
+            finally:
+                self.pipeline.release_record(rec)
+            if chunk_digest(row, 0) == digest:
+                return row
+        return None
+
+    def health(self) -> Dict[str, Any]:
+        """One snapshot of the fault-domain state: retry/fallback/deadline
+        counters, degraded flag, supervision restarts, and verified-read
+        repair stats.  Cheap enough to poll."""
+        with self.stats.lock:
+            h: Dict[str, Any] = {
+                "dumps": self.stats.dumps,
+                "dump_retries": self.stats.dump_retries,
+                "dump_failures": self.stats.dump_failures,
+                "fallback_dumps": self.stats.fallback_dumps,
+                "degraded_dumps": self.stats.degraded_dumps,
+                "deadline_trips": self.stats.deadline_trips,
+                "cancelled_dumps": self.stats.cancelled_dumps,
+            }
+        h["degraded"] = self._degraded
+        h["worker_deaths"] = self._dump_worker.deaths
+        h["worker_restarts"] = self._dump_worker.restarts
+        rs = self.store.repair_stats.snapshot()
+        h["verified_gets"] = rs.verified_gets
+        h["chunk_mismatches"] = rs.mismatches
+        h["chunk_repairs"] = rs.repaired
+        h["chunk_quarantines"] = rs.quarantined
+        h["quarantined_chunks"] = len(self.store.quarantined_ids())
+        if self.pipeline is not None and self.pipeline.stream is not None:
+            h["drain_pool_restarts"] = self.pipeline.stream.pool_restarts
+        return h
+
     def shutdown(self) -> None:
-        self._dump_executor.shutdown(wait=True)
+        self._dump_worker.shutdown(wait=True)
         self._warm_executor.shutdown(wait=True)
         if self.pipeline is not None:
             self.pipeline.shutdown()

@@ -103,26 +103,32 @@ def digest_encode_array(
     digests = []
     dirtied = 0
     trailing_pad = 0
-    for idx, (piece, pad) in enumerate(iter_chunk_views(raw, store.chunk_bytes)):
-        trailing_pad = pad
-        digest = chunk_digest(piece, pad)
-        if idx < len(prev_ids):
-            if prev_digests:
-                same = prev_digests[idx] == digest
-            else:  # pre-digest metadata: full byte compare
-                same = store.get(prev_ids[idx]) == bytes(piece) + bytes(pad)
-            if same:
-                store.incref(prev_ids[idx])
-                ids.append(prev_ids[idx])
-                digests.append(digest)
-                continue
-        ids.append(
-            store.put_digested(
-                lambda p=piece, q=pad: bytes(p) + bytes(q), digest=digest, pad=pad
+    try:
+        for idx, (piece, pad) in enumerate(iter_chunk_views(raw, store.chunk_bytes)):
+            trailing_pad = pad
+            digest = chunk_digest(piece, pad)
+            if idx < len(prev_ids):
+                if prev_digests:
+                    same = prev_digests[idx] == digest
+                else:  # pre-digest metadata: full byte compare
+                    same = store.get(prev_ids[idx]) == bytes(piece) + bytes(pad)
+                if same:
+                    store.incref(prev_ids[idx])
+                    ids.append(prev_ids[idx])
+                    digests.append(digest)
+                    continue
+            ids.append(
+                store.put_digested(
+                    lambda p=piece, q=pad: bytes(p) + bytes(q), digest=digest, pad=pad
+                )
             )
-        )
-        digests.append(digest)
-        dirtied += 1
+            digests.append(digest)
+            dirtied += 1
+    except BaseException:
+        # transactional: a put/get fault mid-tensor must not strand the
+        # refs this call already took — callers never see partial metas
+        store.decref_many(ids)
+        raise
     return (
         TensorMeta(
             shape=tuple(arr.shape),

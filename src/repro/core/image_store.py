@@ -282,6 +282,25 @@ class ImageStore:
                 if rec.image is not None and rec.image.parent_id == image_id
             )
 
+    def find_chunk(self, cid: int) -> List[Tuple[int, str, int]]:
+        """Every (image_id, tensor_name, chunk_index) that references ``cid``.
+
+        The verified-read repair path uses this to locate an anchored
+        generation grid row that can re-derive a corrupt chunk's bytes;
+        dedupe means one chunk may back many images, so all locations are
+        returned (newest image first — its anchor is likeliest to be live)."""
+        out: List[Tuple[int, str, int]] = []
+        with self._lock:
+            for rec in self._by_image.values():
+                if rec.image is None:
+                    continue
+                for name, meta in rec.image.entries.items():
+                    for idx, chunk_id in enumerate(meta.chunk_ids):
+                        if chunk_id == cid:
+                            out.append((rec.image.image_id, name, idx))
+        out.sort(key=lambda t: t[0], reverse=True)
+        return out
+
     def live_count(self) -> int:
         with self._lock:
             return sum(

@@ -40,6 +40,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import faults
 from .chunk_store import ChunkStore
 from .deltacr import CowArrayState, DeltaCR, DumpImage
 from .deltafs import DeltaFS, LayerConfig, LayerStore, TensorMeta
@@ -49,6 +50,7 @@ __all__ = [
     "PersistencePlane",
     "RecoveredState",
     "RecoverError",
+    "find_chunk_by_digest",
     "recover",
     "save_state",
     "save_store",
@@ -139,6 +141,9 @@ def _fsync_dir(path: str) -> None:
 
 def _write_atomic(path: str, data: bytes) -> None:
     """Temp-write + fsync + rename: the blob is durable-or-absent."""
+    # fault seam before the temp write: an injected blob-I/O failure leaves
+    # at worst an orphan .tmp, never a torn visible blob
+    faults.fire("persist.blob_write")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(data)
@@ -395,6 +400,10 @@ def _read_manifest_tail(root: str, max_bytes: int = 256 << 10) -> List[Dict[str,
 
 
 def _append_manifest(root: str, record: Dict[str, Any]) -> None:
+    # fault seam before the append: a failed save leaves the snapshot blob
+    # orphaned but unreferenced — recovery ignores it (checksummed manifest
+    # is the source of truth), so the previous durable snapshot still wins
+    faults.fire("persist.manifest_append")
     payload = _canon_json(record)
     line = payload + b"\t" + _line_digest(payload).encode() + b"\n"
     path = _manifest_path(root)
@@ -667,6 +676,52 @@ def recover(
     )
 
 
+def find_chunk_by_digest(root: str, digest: bytes) -> Optional[bytes]:
+    """Locate a chunk's durable bytes by digest in the newest verified
+    snapshots (newest-first, so the healthiest copy wins).
+
+    The self-healing read path uses this as a repair source: a chunk whose
+    in-memory bytes rotted can be re-read from the fsync'd snapshot blob.
+    Returns the exact stored bytes (padded layout) or None.  Cold path —
+    runs only on a verified-read digest mismatch."""
+    want = digest.hex()
+    try:
+        entries = _read_manifest(root)
+    except OSError:
+        return None
+    for entry in reversed(entries):
+        try:
+            if not _verify_entry(root, entry):
+                continue
+            doc, blob = _load_snapshot(os.path.join(root, entry["file"]))
+        except (OSError, RecoverError, ValueError, KeyError):
+            continue
+        if doc.get("kind") != "deltastate":
+            continue
+        offsets = doc.get("chunk_offsets", [])
+        meta_docs = [
+            m
+            for img in doc.get("images", [])
+            for m in img.get("entries", {}).values()
+        ] + [
+            m
+            for layer in (doc.get("layers") or [])
+            for m in layer.get("entries", {}).values()
+        ]
+        for m in meta_docs:
+            digests = m.get("digests") or []
+            for i, dh in enumerate(digests):
+                if dh != want:
+                    continue
+                dense = m["chunks"][i]
+                if dense + 1 >= len(offsets):
+                    continue
+                piece = blob[offsets[dense] : offsets[dense + 1]]
+                if hashlib.blake2b(piece, digest_size=16).digest() == digest:
+                    return piece
+    return None
+
+
 class PersistencePlane:
     """Handle on one persistence root: repeated saves + recovery.
 
@@ -699,6 +754,19 @@ class PersistencePlane:
     def last_seq(self) -> Optional[int]:
         entries = _read_manifest(self.root)
         return int(entries[-1]["seq"]) if entries else None
+
+    # --------------------------------------------------------------- repair
+    def repair_source(self):
+        """A ``(cid, digest, pad) -> bytes | None`` healer over this root's
+        durable blobs, for :meth:`ChunkStore.attach_repair_source`."""
+        def _heal(cid: int, digest: bytes, pad: int) -> Optional[bytes]:
+            return find_chunk_by_digest(self.root, digest)
+        return _heal
+
+    def attach_to(self, store: ChunkStore) -> None:
+        """Register this plane's durable blobs as a verified-read repair
+        source on ``store``."""
+        store.attach_repair_source(self.repair_source())
 
 
 # --------------------------------------------------------------------------

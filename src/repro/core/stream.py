@@ -40,6 +40,8 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from . import faults
+
 __all__ = [
     "ChunkStreamEngine",
     "DumpGate",
@@ -253,10 +255,9 @@ class ChunkStreamEngine:
         # Externally attachable: the serving scheduler replaces this with its
         # own QoS gate (see Scheduler.__init__).
         self.gate = gate if gate is not None else DumpGate(self.cfg.max_inflight)
-        self._drain = ThreadPoolExecutor(
-            max_workers=max(1, self.cfg.drain_workers), thread_name_prefix="stream-drain"
-        )
+        self._drain = self._new_pool()
         self._shut = False
+        self.pool_restarts = 0           # drain pools respawned by supervision
         # EWMA of the bottleneck stage's ms-per-MiB over completed dumps;
         # None until the first successful streamed dump seeds it.  Touched
         # only by DeltaCR's single dump worker — no lock needed.
@@ -359,7 +360,7 @@ class ChunkStreamEngine:
                     gate.release()
                     error = e
                     break
-                pending.append((window, self._drain.submit(self._drain_window, encoded, cancel)))
+                pending.append((window, self._submit_drain(encoded, cancel)))
             while pending and error is None and not cancelled:
                 cancelled = not self._commit_window(pending.popleft(), results, stats, cancel, gate)
         except BaseException as e:
@@ -399,9 +400,34 @@ class ChunkStreamEngine:
         finally:
             gate.release()
 
+    def _new_pool(self) -> ThreadPoolExecutor:
+        return ThreadPoolExecutor(
+            max_workers=max(1, self.cfg.drain_workers), thread_name_prefix="stream-drain"
+        )
+
+    def _submit_drain(self, encoded, cancel):
+        """Supervised submit: a drain pool that died (an injected worker
+        kill, an interpreter-level failure that broke the executor) is
+        respawned and the window re-submitted — the engine never wedges on a
+        dead pool.  Per-window *task* failures still flow through the
+        window's future into the caller's transactional error path."""
+        try:
+            return self._drain.submit(self._drain_window, encoded, cancel)
+        except RuntimeError:
+            if self._shut:
+                raise
+            self._drain = self._new_pool()
+            self.pool_restarts += 1
+            return self._drain.submit(self._drain_window, encoded, cancel)
+
     @staticmethod
     def _drain_window(encoded, cancel):
         """Drain-pool body: pure per-item fetch/copy/hash, no shared state."""
+        # fault seam: an injected drain failure (FaultError or WorkerKilled)
+        # surfaces through this window's future and fails the dump
+        # transactionally — the caller's rollback + DeltaCR's retry are what
+        # get exercised
+        faults.fire("stream.drain")
         out = []
         t0 = time.perf_counter()
         for item, enc in encoded:

@@ -60,6 +60,15 @@ class SchedulerConfig:
     dump_demote_poll_ms: float = 2.0     # demoted-window re-check cadence
     dump_demote_max_ms: float = 50.0     # demotion is bounded: dumps progress
     coalesce_suspends: bool = True       # defer template eviction off suspend()
+    # -- dump timeout policy ---------------------------------------------
+    # How long a synchronous (urgent/uncoalesced) suspend waits for the
+    # durable dump, and what a timeout does:
+    #   "defer" — count it and queue a deferred eviction; the template stays
+    #             live and the pages return when the dump finally lands
+    #             (never silently evict a template whose dump didn't land)
+    #   "raise" — count it and re-raise to the caller (strict deployments)
+    dump_timeout_s: float = 120.0
+    dump_timeout_policy: str = "defer"   # "defer" | "raise"
     # -- persistence plane -----------------------------------------------
     # When set, the scheduler commits a crash-consistent manifest snapshot
     # (suspended-session map + DeltaCR image store) every time a coalesced
@@ -88,9 +97,17 @@ class Scheduler:
         self.handles: Dict[int, SessionHandle] = {}
         self._sid = itertools.count(1)
         self._ckpt = itertools.count(1_000_000)
+        if self.cfg.dump_timeout_policy not in ("defer", "raise"):
+            raise ValueError(
+                f"unknown dump_timeout_policy {self.cfg.dump_timeout_policy!r}"
+            )
         self.step_count = 0
         self.suspensions = 0
         self.resumes = 0
+        # fault-domain accounting (every timeout/failure is counted, never
+        # swallowed silently)
+        self.dump_timeouts = 0           # dumps that missed dump_timeout_s
+        self.dump_failures = 0           # dumps that failed (template kept)
         # (ckpt_id, dump future) pairs awaiting deferred template eviction
         self._pending_evict: List[Tuple[int, Optional[Future]]] = []
         self.gate: Optional[DumpGate] = None
@@ -186,14 +203,22 @@ class Scheduler:
             if urgent or not self.cfg.coalesce_suspends:
                 if fut is not None:
                     try:
-                        fut.result(timeout=120.0)  # durable image before eviction
+                        # durable image before eviction
+                        fut.result(timeout=self.cfg.dump_timeout_s)
                     except FuturesTimeoutError:
-                        # slow, not failed: fall back to a deferred eviction
-                        # so the pages still return once the dump lands
+                        # slow, not failed — routed through the timeout
+                        # policy, counted, and the template is NEVER evicted
+                        # before its dump lands
+                        self.dump_timeouts += 1
                         self._pending_evict.append((ckpt_id, fut))
+                        if self.cfg.dump_timeout_policy == "raise":
+                            raise
                         return
                     except Exception:
-                        return                     # keep the template: restorable
+                        # dump failed loudly (ticket aborted): the template
+                        # is the only remaining copy of the state — keep it
+                        self.dump_failures += 1
+                        return
                 self.cr.evict_template(ckpt_id)
                 self.cr.release_dump_anchor(ckpt_id)  # really return the pages
             else:
@@ -255,6 +280,37 @@ class Scheduler:
         self.step_count += 1
         return out
 
+    # ---------------------------------------------------------------- health
+    def health(self) -> Dict[str, object]:
+        """One fault-domain snapshot across the stack this scheduler drives:
+        DeltaCR's retry/fallback/degraded counters and verified-read repair
+        stats, dump-worker supervision, drain-pool restarts, the QoS gate,
+        and this scheduler's own timeout/failure counts.  Cheap to poll —
+        no locks beyond the stats locks."""
+        h: Dict[str, object] = dict(self.cr.health())
+        h["scheduler_dump_timeouts"] = self.dump_timeouts
+        h["scheduler_dump_failures"] = self.dump_failures
+        h["pending_evictions"] = len(self._pending_evict)
+        h["suspensions"] = self.suspensions
+        h["resumes"] = self.resumes
+        h["sessions_active"] = sum(
+            1 for x in self.handles.values() if x.state == "active"
+        )
+        h["sessions_suspended"] = sum(
+            1 for x in self.handles.values() if x.state == "suspended"
+        )
+        if self.gate is not None:
+            h["gate_acquires"] = self.gate.stats.acquires
+            h["gate_demotions"] = self.gate.stats.demotions
+        # a single boolean for monitors: anything degraded/broken right now?
+        h["ok"] = (
+            not h.get("degraded", False)
+            and int(h.get("quarantined_chunks", 0)) == 0
+            and self.dump_failures == 0
+            and int(h.get("dump_failures", 0)) == 0
+        )
+        return h
+
     # ------------------------------------------------------------- internal
     def _refresh_runnable_hint(self) -> None:
         """Keep the QoS gate's runnable count honest on state transitions.
@@ -282,15 +338,22 @@ class Scheduler:
             if fut is None or fut.done() or wait:
                 if fut is not None:
                     try:
-                        fut.result(timeout=120.0)
+                        fut.result(timeout=self.cfg.dump_timeout_s)
                     except FuturesTimeoutError:
-                        # slow, not failed: keep the entry so the eviction
-                        # (and its pages) still happens when the dump lands
+                        # slow, not failed: counted, and the entry is kept so
+                        # the eviction (and its pages) still happens when the
+                        # dump lands — the template outlives its dump, always
+                        self.dump_timeouts += 1
                         remaining.append((ckpt_id, fut))
+                        if self.cfg.dump_timeout_policy == "raise":
+                            self._pending_evict = remaining + self._pending_evict[i + 1 :]
+                            raise
                         continue
                     except Exception:
-                        # dump failed: keep the template (the only remaining
-                        # copy of the state) — pages stay held, state safe
+                        # dump failed loudly: counted; keep the template (the
+                        # only remaining copy of the state) — pages stay
+                        # held, state stays safe
+                        self.dump_failures += 1
                         continue
                 self.cr.evict_template(ckpt_id)
                 self.cr.release_dump_anchor(ckpt_id)   # really return the pages

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import faults
 from repro.core.deltafs import DeltaFS
 from repro.models.model import Model
 from .data import DataConfig, PackedStream
@@ -171,16 +172,36 @@ class Trainer:
         *,
         start_step: int = 0,
         steps: Optional[int] = None,
-        fail_at: Optional[int] = None,       # fault-injection for tests
+        fail_at: Optional[int] = None,       # legacy shim over core.faults
     ):
         n = steps if steps is not None else self.cfg.steps
+        # The train-path crash hook goes through the shared fault registry
+        # (`trainer.step` fires once per loop iteration), so train crash
+        # tests and C/R chaos tests use one deterministic fault model.  The
+        # old kwarg survives as a shim: it arms a one-shot FaultError —
+        # a RuntimeError, as before — on this run's fail_at-th step seam hit.
+        plan = faults.active_plan()
+        local_plan = None
+        if fail_at is not None and fail_at >= start_step:
+            local_plan = plan if plan is not None else faults.FaultPlan()
+            local_plan.add(
+                "trainer.step", after=local_plan.hits("trainer.step") + (fail_at - start_step) + 1
+            )
+            if plan is None:
+                faults.install(local_plan)
+        try:
+            return self._run_loop(params, opt_state, err_buf, start_step=start_step, n=n)
+        finally:
+            if local_plan is not None and plan is None:
+                faults.clear()
+
+    def _run_loop(self, params, opt_state, err_buf, *, start_step: int, n: int):
         step = start_step
         while step < n:
             t0 = time.perf_counter()
             batch_np = self.stream.next_batch()
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            if fail_at is not None and step == fail_at:
-                raise RuntimeError(f"injected failure at step {step}")
+            faults.fire("trainer.step")
             params, opt_state, err_buf, metrics = self.train_step(
                 params, opt_state, err_buf, batch
             )

@@ -20,3 +20,55 @@ except ImportError:  # hermetic image: deterministic in-repo fallback
     from _hypothesis_fallback import install
 
     install()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: deterministic fault-injection suite (run via -m chaos; "
+        "fault plans install process-globally, so chaos tests never run "
+        "with parallel workers)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test deadline (pytest-timeout when installed, "
+        "SIGALRM fallback otherwise)",
+    )
+
+
+# ---------------------------------------------------------------------------
+# pytest-timeout fallback: the hermetic image has no pytest-timeout, but an
+# injected-fault deadlock must still fail fast instead of hanging the run.
+# When the real plugin is present it owns the marker; otherwise this shim
+# enforces @pytest.mark.timeout(N) via SIGALRM (main thread, POSIX only —
+# exactly the environments the chaos suite runs in).
+# ---------------------------------------------------------------------------
+import pytest  # noqa: E402
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    use_shim = (
+        marker is not None
+        and marker.args
+        and not item.config.pluginmanager.hasplugin("timeout")
+        and hasattr(__import__("signal"), "SIGALRM")
+    )
+    if not use_shim:
+        yield
+        return
+    import signal
+
+    seconds = float(marker.args[0])
+
+    def _alarm(signum, frame):
+        raise TimeoutError(f"test exceeded {seconds:.0f}s timeout (SIGALRM shim)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)

@@ -158,6 +158,7 @@ def test_fork_replay_failure_leaks_nothing():
     c1 = sm.checkpoint()
     lw = sm.checkpoint(lightweight=True, actions=("boom",))
     tree = SandboxTree(sm)
+    cr.wait_dumps()          # deterministic baseline: c1's async dump landed
     phys = fs.store.stats.physical_bytes
     # no action_applier installed -> replay raises CheckpointError
     with pytest.raises(CheckpointError):

@@ -255,3 +255,81 @@ def test_scheduler_warm_pool_survives_restart(rig, tmp_path):
         if sched2.handles[s].state != "finished":
             sched2.finish(s)
     sched2.cr.shutdown()
+
+
+def test_scheduler_dump_timeout_counted_and_eviction_deferred(rig):
+    """A dump that misses dump_timeout_s is never swallowed: it is counted,
+    the template survives until the dump lands, and the deferred eviction
+    drains once it does."""
+    import threading
+
+    from repro.core import DeltaCR
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+    cfg, model, params, _ = rig
+    pool = PagePool(cfg, num_pages=32, page_size=8, max_pages_per_session=8)
+    eng = Engine(model, params, pool)
+    cr = DeltaCR(
+        template_pool_size=8,
+        restore_fn=lambda p: PagedSession.restore_from_payload(pool, p),
+    )
+    sched = Scheduler(eng, cr, SchedulerConfig(max_batch=4, min_free_pages=2,
+                                               dump_timeout_s=0.05))
+    sid = sched.submit([1, 2, 3, 4, 5], SamplingParams(seed=0))
+    sched.step()
+    # wedge the FIFO dump worker so the suspend's dump cannot land in time
+    gate = threading.Event()
+    cr._dump_worker.submit(gate.wait, 30.0)
+    sched.suspend(sid, urgent=True)
+    h = sched.handles[sid]
+    assert sched.dump_timeouts == 1               # counted, not swallowed
+    assert h.state == "suspended"
+    assert cr.has_template(h.ckpt_id)             # template NOT evicted early
+    health = sched.health()
+    assert health["scheduler_dump_timeouts"] == 1
+    assert health["pending_evictions"] == 1
+    gate.set()                                    # un-wedge: dump can land
+    cr.wait_dumps()
+    assert sched._drain_suspends(block=True) >= 1
+    assert not cr.has_template(h.ckpt_id)         # deferred eviction landed
+    sched.resume(sid)                             # slow path restores fine
+    assert sched.handles[sid].state == "active"
+    sched.finish(sid)
+    cr.shutdown()
+
+
+def test_scheduler_dump_timeout_policy_raise(rig):
+    """dump_timeout_policy='raise' surfaces the timeout to the caller while
+    still keeping the handle restorable (template alive, eviction queued)."""
+    import threading
+    from concurrent.futures import TimeoutError as FuturesTimeoutError
+
+    from repro.core import DeltaCR
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+    cfg, model, params, _ = rig
+    pool = PagePool(cfg, num_pages=32, page_size=8, max_pages_per_session=8)
+    eng = Engine(model, params, pool)
+    cr = DeltaCR(
+        template_pool_size=8,
+        restore_fn=lambda p: PagedSession.restore_from_payload(pool, p),
+    )
+    sched = Scheduler(eng, cr, SchedulerConfig(max_batch=4, min_free_pages=2,
+                                               dump_timeout_s=0.05,
+                                               dump_timeout_policy="raise"))
+    sid = sched.submit([9, 8, 7], SamplingParams(seed=1))
+    sched.step()
+    gate = threading.Event()
+    cr._dump_worker.submit(gate.wait, 30.0)
+    with pytest.raises(FuturesTimeoutError):
+        sched.suspend(sid, urgent=True)
+    assert sched.dump_timeouts == 1
+    h = sched.handles[sid]
+    assert h.state == "suspended" and cr.has_template(h.ckpt_id)
+    gate.set()
+    cr.wait_dumps()
+    sched._drain_suspends(block=True)
+    sched.resume(sid)
+    assert sched.handles[sid].state == "active"
+    sched.finish(sid)
+    cr.shutdown()
