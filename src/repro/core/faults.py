@@ -77,6 +77,7 @@ FAULT_POINTS: Tuple[str, ...] = (
     "template.fork",          # DeltaCR.checkpoint/restore template fork
     "persist.blob_write",     # persist._write_atomic, before the temp write
     "persist.manifest_append",  # persist._append_manifest, before the append
+    "kvcache.cow_copy",       # PagePool.materialize CoW batch (supports "corrupt")
     "trainer.step",           # Trainer.run per-step seam (fail_at shim)
 )
 

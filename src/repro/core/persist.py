@@ -509,6 +509,13 @@ class RecoveredState:
     recovered_pins: Dict[int, int]
     extra: Dict[str, Any]
     snapshot_path: str
+    # How the trunk session was brought back to ``current``:
+    #   "fast"/"slow"[+"+replay"] — auto-restored; the sandbox proc is live
+    #   "skipped-needs-applier"   — current sits atop an LW replay chain and
+    #                               no ``action_applier`` was supplied
+    #   "disabled"                — caller passed auto_restore=False
+    #   None                      — nothing to restore (no tree / no current)
+    trunk_restore_mode: Optional[str] = None
 
 
 def _load_snapshot(path: str) -> Tuple[Dict[str, Any], bytes]:
@@ -530,6 +537,8 @@ def recover(
     restore_fn=None,
     template_pool_size: int = 8,
     stream: bool = True,
+    auto_restore: bool = True,
+    action_applier=None,
 ) -> RecoveredState:
     """Rebuild the full DeltaState from the newest durable snapshot.
 
@@ -542,8 +551,17 @@ def recover(
     pins, and the generation-cache anchors — so the first post-restart
     dumps are already O(delta)-chained.
 
-    ``restore_fn`` rebuilds session state from an image payload on the
-    first `sm.restore(...)`; it defaults to the host `CowArrayState`."""
+    ``restore_fn`` rebuilds session state from an image payload; it
+    defaults to the host `CowArrayState`.
+
+    With ``auto_restore`` (the default) the trunk sandbox is restored onto
+    ``current`` before this returns — the recovered StateManager's proc is
+    live and immediately checkpointable/decodable, no hand-rolled
+    ``sm.restore(rec.current)`` needed.  ``action_applier`` (stored on the
+    StateManager either way) replays lightweight chains; when ``current``
+    needs an LW replay and no applier was given, the restore is *skipped*
+    (``trunk_restore_mode == "skipped-needs-applier"``) rather than raising
+    — the tree is intact, the caller restores manually after wiring one."""
     entries = _read_manifest(root)
     chosen: Optional[Dict[str, Any]] = None
     for entry in reversed(entries):
@@ -655,11 +673,22 @@ def recover(
         ]
         sm = StateManager(Sandbox(fs, CowArrayState({})), cr)
         sm.load_tree(decoded_tree, layer_map=lid_map)
+        sm.action_applier = action_applier
         # each surviving node's config holds retained layer references,
         # mirroring what checkpoint() handed the trunk pre-crash
         for node in sm.nodes.values():
             if node.layer_config is not None and not node.reclaimed:
                 layer_store.retain_config(node.layer_config)
+
+    # ---- trunk auto-restore ---------------------------------------------
+    trunk_restore_mode: Optional[str] = None
+    if sm is not None and current is not None:
+        if not auto_restore:
+            trunk_restore_mode = "disabled"
+        elif action_applier is None and _needs_lw_replay(sm, int(current)):
+            trunk_restore_mode = "skipped-needs-applier"
+        else:
+            trunk_restore_mode = sm.restore(int(current))
 
     return RecoveredState(
         seq=int(chosen["seq"]),
@@ -673,7 +702,21 @@ def recover(
         else {},
         extra=_decode_obj(doc["extra"]),
         snapshot_path=snap_path,
+        trunk_restore_mode=trunk_restore_mode,
     )
+
+
+def _needs_lw_replay(sm: StateManager, ckpt_id: int) -> bool:
+    """Whether restoring ``ckpt_id`` must replay recorded LW actions."""
+    walk: Optional[int] = ckpt_id
+    while walk is not None:
+        node = sm.nodes[walk]
+        if not node.lightweight:
+            return False
+        if node.replay_actions:
+            return True
+        walk = node.parent_id
+    return False
 
 
 def find_chunk_by_digest(root: str, digest: bytes) -> Optional[bytes]:

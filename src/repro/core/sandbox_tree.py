@@ -196,6 +196,35 @@ class SandboxTree:
             raise
         return children
 
+    def fork_admitted(self, ckpt_id: int, n: int, scheduler) -> List[Sandbox]:
+        """Fork ``n`` live decoders and admit each into a serving scheduler.
+
+        The serving-loop composition of the Fork-Explore-Commit primitive:
+        every child's process state (a ``PagedSession``) joins the
+        scheduler's continuous batching via ``admit_forked`` — sibling
+        decoders share every KV page copy-on-write, so the fan-out costs
+        zero block bytes until a child's first divergent write.  Each
+        returned sandbox carries its scheduler id as ``sandbox.sched_sid``;
+        the caller detaches (``scheduler.detach``) before ``release`` — the
+        tree, not the scheduler, owns the proc's lifecycle."""
+        children = self.fork(ckpt_id, n)
+        admitted: List[int] = []
+        try:
+            for sandbox in children:
+                sid = scheduler.admit_forked(sandbox.proc)
+                sandbox.sched_sid = sid
+                admitted.append(sid)
+        except BaseException:
+            for sandbox, sid in zip(children, admitted):
+                try:
+                    sandbox.proc = scheduler.detach(sid)
+                except Exception:
+                    pass
+            for sandbox in children:
+                self.release(sandbox.sandbox_id)
+            raise
+        return children
+
     def _replay_chain(self, sandbox: Sandbox, full: int, ckpt_id: int) -> None:
         """Re-apply the LW markers' recorded actions on the forked state
         (the StateManager owns the one replay loop both paths share)."""

@@ -30,11 +30,13 @@ from . import ref as _ref
 from .delta_apply import delta_apply as _delta_apply_kernel
 from .delta_diff import delta_diff as _delta_diff_kernel
 from .page_copy import page_copy as _page_copy_kernel
+from .page_copy import page_copy_stacked as _page_copy_stacked_kernel
 from .paged_attention import paged_attention as _paged_attention_kernel
 
 __all__ = [
     "paged_attention",
     "page_copy",
+    "page_copy_stacked",
     "delta_diff",
     "delta_apply",
     "delta_compact",
@@ -85,6 +87,17 @@ def _page_copy_jit(pool, src_idx, dst_idx):
 
 def page_copy(pool, src_idx, dst_idx):
     return _page_copy_jit(pool, src_idx, dst_idx)
+
+
+@jax.jit
+def _page_copy_stacked_jit(pool, src_idx, dst_idx):
+    if not _use_kernel():
+        return _ref.page_copy_stacked_ref(pool, src_idx, dst_idx)
+    return _page_copy_stacked_kernel(pool, src_idx, dst_idx, interpret=use_interpret())
+
+
+def page_copy_stacked(pool, src_idx, dst_idx):
+    return _page_copy_stacked_jit(pool, src_idx, dst_idx)
 
 
 @jax.jit

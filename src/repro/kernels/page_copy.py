@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["page_copy"]
+__all__ = ["page_copy", "page_copy_stacked"]
 
 
 def _page_copy_kernel(src_idx_ref, dst_idx_ref, pool_ref, out_ref):
@@ -51,5 +51,43 @@ def page_copy(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         input_output_aliases={2: 0},  # pool (3rd operand incl. scalars) -> out
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), pool)
+
+
+def page_copy_stacked(
+    pool: jax.Array,       # (N_periods, P, page_size, KVH, D) — donated
+    src_idx: jax.Array,    # (n,) int32
+    dst_idx: jax.Array,    # (n,) int32, distinct, disjoint from src
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked-pool CoW materialization: ``pool[:, dst] = pool[:, src]``.
+
+    The serving pools are stacked per scan period — shape
+    ``(N_periods, P, psz, KVH, Hd)`` — so a batch of CoW faults across a
+    decode step is one launch over a 2-D grid ``(pairs × periods)`` instead
+    of a vmapped per-period sweep.  Each grid step DMAs one (period, page)
+    block; the same disjointness invariant (dst are distinct free pages,
+    src ∩ dst = ∅) makes every step commute.
+    """
+    N = pool.shape[0]
+    n = src_idx.shape[0]
+    block = (1, 1) + pool.shape[2:]
+    tail = (0,) * (pool.ndim - 2)
+
+    in_spec = pl.BlockSpec(block, lambda j, r, s, d: (r, s[j]) + tail)
+    out_spec = pl.BlockSpec(block, lambda j, r, s, d: (r, d[j]) + tail)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, N),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _page_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
         interpret=interpret,
     )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), pool)

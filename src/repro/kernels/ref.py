@@ -77,6 +77,15 @@ def page_copy_ref(
     return pool.at[dst_idx].set(pool[src_idx])
 
 
+def page_copy_stacked_ref(
+    pool: jax.Array,         # (N_periods, P, page_size, KVH, D)
+    src_idx: jax.Array,      # (n,) int32
+    dst_idx: jax.Array,      # (n,) int32
+) -> jax.Array:
+    """Stacked-pool CoW: pool[:, dst_idx[i]] = pool[:, src_idx[i]]."""
+    return pool.at[:, dst_idx].set(pool[:, src_idx])
+
+
 def delta_diff_ref(old: jax.Array, new: jax.Array) -> jax.Array:
     """Per-chunk dirty bitmap: any element differs → True.  (N, C) -> (N,)."""
     return jnp.any(old != new, axis=-1)

@@ -1,8 +1,10 @@
 """Search strategies over DeltaState: MCTS (UCT) + Best-of-N / RL fan-out."""
 from .archetypes import ARCHETYPES, ArchetypeSpec, SyntheticAgentTask, build_sandbox_state
+from .decode_task import DecodeSearchTask
 from .fanout import (
     FanoutResult,
     checkpoint_burst,
+    decode_fanout,
     fork_n,
     fork_sandboxes,
     rollout_fanout,
@@ -13,7 +15,8 @@ from .mcts import MCTS, AgentTask, MCTSConfig, MCTSStats
 
 __all__ = [
     "ARCHETYPES", "ArchetypeSpec", "SyntheticAgentTask", "build_sandbox_state",
-    "FanoutResult", "checkpoint_burst", "fork_n", "fork_sandboxes",
+    "DecodeSearchTask",
+    "FanoutResult", "checkpoint_burst", "decode_fanout", "fork_n", "fork_sandboxes",
     "rollout_fanout", "staleness", "sync_gpu_occupation",
     "MCTS", "AgentTask", "MCTSConfig", "MCTSStats",
 ]

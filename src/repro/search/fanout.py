@@ -38,6 +38,7 @@ from repro.core.state_manager import Sandbox
 __all__ = [
     "FanoutResult",
     "checkpoint_burst",
+    "decode_fanout",
     "fork_n",
     "fork_sandboxes",
     "rollout_fanout",
@@ -157,6 +158,55 @@ def rollout_fanout(
     if teardown:
         _release_children()
     return rewards, result
+
+
+def decode_fanout(
+    tree: SandboxTree,
+    ckpt_id: int,
+    n: int,
+    scheduler,
+    k_tokens: int,
+    *,
+    actions: Optional[Sequence[int]] = None,
+    release: bool = True,
+) -> Tuple[List[List[int]], List[Sandbox], FanoutResult]:
+    """Fork ``n`` live decoders from one checkpoint and decode ``k_tokens``
+    each through the scheduler's continuous batching — the serving-loop
+    fan-out primitive end to end.
+
+    Each child is admitted via ``Scheduler.admit_forked`` (the fork itself
+    copies zero KV-block bytes — CoW pages stay shared until the first
+    divergent write); ``actions`` optionally force-feeds child ``i``'s
+    pending token (the divergence point — a search step's chosen action)
+    before decoding.  All ``n`` requests drain through batched ``step()``
+    calls, so siblings decode together.  Returns the per-child sampled
+    token streams, the sandboxes (empty list when ``release``), and the
+    fork accounting."""
+    children, result = fork_sandboxes(tree, ckpt_id, n)
+    sids: List[int] = []
+    try:
+        for i, sandbox in enumerate(children):
+            if actions is not None:
+                # overwrite the pending token: K/V not yet written, so this
+                # is the first divergent write's *cause*, not a write itself
+                sandbox.proc.tokens[-1] = int(actions[i])
+            sid = scheduler.admit_forked(sandbox.proc)
+            sandbox.sched_sid = sid
+            sids.append(sid)
+        futs = [scheduler.request_tokens(sid, k_tokens) for sid in sids]
+        while any(not f.done() for f in futs):
+            scheduler.step()
+        streams = [list(f.result()) for f in futs]
+    finally:
+        for sandbox, sid in zip(children, sids):
+            try:
+                sandbox.proc = scheduler.detach(sid)
+            except Exception:
+                pass
+        if release:
+            for sandbox in children:
+                tree.release(sandbox.sandbox_id)
+    return streams, ([] if release else children), result
 
 
 def checkpoint_burst(

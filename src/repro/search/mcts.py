@@ -71,6 +71,8 @@ class MCTSConfig:
     use_lightweight: bool = True    # route read-only actions to LW checkpoints
     value_isolation: bool = True    # pre-test ckpt + unconditional restore
     seed: int = 0
+    dump: bool = True               # durable dumps per checkpoint (False =
+                                    # template-only nodes: pure search speed)
     # -- parallel driver -------------------------------------------------
     parallel_leaves: int = 1        # >1: fork-based concurrent expansion
     time_budget_s: Optional[float] = None   # stop when the budget is spent
@@ -103,6 +105,7 @@ class MCTS:
         cfg: Optional[MCTSConfig] = None,
         *,
         tree: Optional[SandboxTree] = None,
+        scheduler: Optional[Any] = None,
     ):
         self.sm = sm
         self.task = task
@@ -110,6 +113,11 @@ class MCTS:
         # search tuning across every MCTS in the process
         self.cfg = cfg if cfg is not None else MCTSConfig()
         self.tree = tree
+        # serving-loop integration: each parallel worker's forked sandbox is
+        # admitted into this scheduler's continuous batching for the leaf's
+        # lifetime, so task actions can decode through ``scheduler.generate``
+        # (engine.step is not thread-safe; the shared batch is)
+        self.scheduler = scheduler
         self.stats = MCTSStats()
         # per-ckpt search metadata beyond SnapshotNode's visits/value
         self.depth: Dict[int, int] = {}
@@ -214,7 +222,7 @@ class MCTS:
         cfg, sm, task, st = self.cfg, self.sm, self.task, self.stats
 
         t0 = time.perf_counter()
-        root = sm.checkpoint()
+        root = sm.checkpoint(dump=cfg.dump)
         st.time_checkpoint_s += time.perf_counter() - t0
         st.checkpoints += 1
         self._register(root, 0, cfg.seed)
@@ -258,7 +266,9 @@ class MCTS:
 
             lw = cfg.use_lightweight and task.is_readonly(action)
             t0 = time.perf_counter()
-            child = sm.checkpoint(lightweight=lw, actions=(action,) if lw else ())
+            child = sm.checkpoint(
+                lightweight=lw, actions=(action,) if lw else (), dump=cfg.dump
+            )
             st.time_checkpoint_s += time.perf_counter() - t0
             st.checkpoints += 1
             if lw:
@@ -289,7 +299,7 @@ class MCTS:
         self.tree = tree
 
         t0 = time.perf_counter()
-        root = sm.checkpoint()
+        root = sm.checkpoint(dump=cfg.dump)
         st.time_checkpoint_s += time.perf_counter() - t0
         st.checkpoints += 1
         self._register(root, 0, cfg.seed)
@@ -376,6 +386,14 @@ class MCTS:
         with self._stats_lock:
             st.forks += 1
             self._run_forks.add(sandbox.sandbox_id)
+        # Serving-loop admission: the fork joins the scheduler's continuous
+        # batching for this leaf's lifetime, so apply_action/evaluate can
+        # decode through ``scheduler.generate`` — sibling leaves' requests
+        # batch into one engine step, CoW keeps their pages shared.
+        sched_sid = None
+        if self.scheduler is not None:
+            sched_sid = self.scheduler.admit_forked(sandbox.proc)
+            sandbox.sched_sid = sched_sid
         try:
             if action is None:
                 t0 = time.perf_counter()
@@ -396,7 +414,7 @@ class MCTS:
             if lw:
                 child = tree.checkpoint_lightweight(sandbox.sandbox_id, (action,))
             else:
-                child = tree.checkpoint(sandbox.sandbox_id)
+                child = tree.checkpoint(sandbox.sandbox_id, dump=cfg.dump)
             t_ckpt = time.perf_counter() - t0
 
             # Registration data (terminal flag, untried actions) must be
@@ -434,6 +452,13 @@ class MCTS:
                     st.lw_checkpoints += 1
             return child, value, actions, terminal
         finally:
+            if sched_sid is not None:
+                try:
+                    # rebind: the scheduler may have suspended+resumed the
+                    # session (new identity); the tree releases what's live
+                    sandbox.proc = self.scheduler.detach(sched_sid)
+                except Exception:
+                    pass
             tree.release(sandbox.sandbox_id)
             with self._stats_lock:
                 self._run_forks.discard(sandbox.sandbox_id)

@@ -1,7 +1,15 @@
 """Serving runtime: paged CoW KV cache + forkable sessions + engine."""
 from .engine import Engine, SamplingParams
-from .kvcache import PagePool, PagedSession
+from .kvcache import (
+    CowCorruptionError,
+    CowFaultError,
+    PagePool,
+    PagedSession,
+    PoolStats,
+    WritePlan,
+)
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = ["Engine", "SamplingParams", "PagePool", "PagedSession",
+           "PoolStats", "WritePlan", "CowFaultError", "CowCorruptionError",
            "Scheduler", "SchedulerConfig"]

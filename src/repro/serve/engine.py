@@ -66,14 +66,15 @@ class Engine:
         prompt = list(int(t) for t in prompt_tokens)
         sess.tokens = list(prompt)
         S = len(prompt)
-        sess.ensure_writable(extra_tokens=S)
-        sess.seq_len = S
+        with self.pool.lock:
+            sess.ensure_writable(extra_tokens=S)
+            sess.seq_len = S
 
-        cache = self._build_cache([sess], init_recurrent=True)
-        tokens = jnp.asarray([prompt], jnp.int32)
-        prefill = self._get_prefill(S)
-        logits, new_cache = prefill(self.params, tokens, cache)
-        self._absorb_cache([sess], new_cache)
+            cache = self._build_cache([sess], init_recurrent=True)
+            tokens = jnp.asarray([prompt], jnp.int32)
+            prefill = self._get_prefill(S)
+            logits, new_cache = prefill(self.params, tokens, cache)
+            self._absorb_cache([sess], new_cache)
         logits_np = np.asarray(logits[0], np.float32)
         sess.extras["last_logits"] = logits_np
         sess.extras["prompt_len"] = np.asarray([S], np.int64)
@@ -91,16 +92,30 @@ class Engine:
         yet in the cache); the step commits its K/V at position ``seq_len``
         and samples the next pending token.
         """
-        # 1. host-side CoW preparation (inline fault path if warm missed)
-        for s in sessions:
-            s.ensure_writable(extra_tokens=1)
-        # 2. stacked decode
-        last = [s.tokens[-1] for s in sessions]
-        cache = self._build_cache(sessions)
-        tokens = jnp.asarray(last, jnp.int32)
-        decode = self._get_decode(len(sessions))
-        logits, new_cache = decode(self.params, tokens, cache)
-        self._absorb_cache(sessions, new_cache, advance=True)
+        # 1. host-side CoW preparation, batched: every session's page motion
+        # is planned first, then committed through ONE transactional
+        # materialize call — one stacked-kernel launch per layer tag for the
+        # whole batch, and a failure (injected fault, allocator, verify)
+        # rolls every plan back before any decode math runs
+        # the whole step holds the pool lock: the async-warm worker commits
+        # materializations into the same pool arrays this step functionally
+        # updates, and an interleaved commit would be silently overwritten
+        with self.pool.lock:
+            plans: List[Any] = []
+            try:
+                for s in sessions:
+                    plans.append(s.plan_writable(extra_tokens=1))
+            except BaseException:
+                self.pool.discard_plans(plans)
+                raise
+            self.pool.materialize(plans)
+            # 2. stacked decode
+            last = [s.tokens[-1] for s in sessions]
+            cache = self._build_cache(sessions)
+            tokens = jnp.asarray(last, jnp.int32)
+            decode = self._get_decode(len(sessions))
+            logits, new_cache = decode(self.params, tokens, cache)
+            self._absorb_cache(sessions, new_cache, advance=True)
         # 3. sampling with checkpointable rng
         out = []
         logits_np = np.asarray(logits, np.float32)

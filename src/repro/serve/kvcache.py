@@ -23,17 +23,67 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import faults
 from repro.core.delta_pipeline import ChunkedView, DeltaGeneration
 from repro.kernels import ops as kops
 
-__all__ = ["PagePool", "PagedSession"]
+__all__ = [
+    "CowCorruptionError",
+    "CowFaultError",
+    "PagePool",
+    "PagedSession",
+    "PoolStats",
+    "WritePlan",
+]
+
+
+class CowFaultError(RuntimeError):
+    """A CoW materialization failed and was rolled back (no table mutated)."""
+
+
+class CowCorruptionError(CowFaultError):
+    """Verified CoW copy mismatched its source; the batch was rolled back."""
+
+
+@dataclass
+class PoolStats:
+    """Block accounting for the pool — the serving-side analogue of the
+    ChunkStore's byte accounting: forks are free until the first write, and
+    these counters prove it (tests/benchmarks gate on them).
+    """
+
+    cow_copies: int = 0        # pages privatized on the step path
+    warm_copies: int = 0       # pages privatized by async-warm
+    copied_pages: int = 0      # total pages materialized (cow + warm)
+    copied_bytes: int = 0      # bytes moved by CoW materialization
+    fresh_allocs: int = 0      # fresh page-boundary allocations (no copy)
+    materialize_calls: int = 0 # batched materialization rounds (≤1/step)
+    cow_rollbacks: int = 0     # failed materializations fully rolled back
+    stale_discards: int = 0    # plans that lost a same-session race (warm
+                               # vs step) and were discarded at commit time
+
+
+@dataclass
+class WritePlan:
+    """One session's planned page motion for an upcoming write window.
+
+    Built by :meth:`PagedSession.plan_writable` (pages are *allocated* but
+    no table entry, refcount-decref, or dirty set has been touched), then
+    either committed or rolled back atomically — across a whole batch — by
+    :meth:`PagePool.materialize`.
+    """
+
+    session: "PagedSession"
+    fresh: List[Tuple[int, int]]        # (table pos, newly allocated page)
+    cow: List[Tuple[int, int, int]]     # (table pos, shared src, private dst)
+    window: Tuple[int, int]             # (first_page, last_page) dirty span
 
 
 class PagePool:
@@ -47,6 +97,7 @@ class PagePool:
         page_size: int = 16,
         max_pages_per_session: int = 32,
         dtype: Optional[str] = None,
+        verify_cow: bool = False,
     ):
         self.cfg = cfg
         self.page_size = page_size
@@ -73,8 +124,38 @@ class PagePool:
         self.refs[0] = 1                       # page 0 reserved (filler)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._lock = threading.RLock()
-        self.cow_copies = 0                    # privatizations on the step path
-        self.warm_copies = 0                   # privatizations absorbed by warm
+        self.stats = PoolStats()
+        # re-read every materialized dst page against its src and roll the
+        # batch back on mismatch (bitrot on the copy path); costs a device
+        # round-trip per batch, so off outside chaos/validation runs
+        self.verify_cow = bool(verify_cow)
+        self._bytes_per_page = sum(
+            int(np.prod(self.pools_k[s][t].shape[2:])) * self.pools_k[s][t].dtype.itemsize * 2
+            * self.pools_k[s][t].shape[0]
+            for s, t in self.attn_tags
+        )
+
+    @property
+    def lock(self) -> threading.RLock:
+        """Pool mutation lock (reentrant).  Holders get exclusive access to
+        the device pool arrays *and* the host bookkeeping: the engine wraps
+        each step's read→decode→write-back window in it so a concurrent
+        async-warm materialize can never be lost to the step's functional
+        cache update."""
+        return self._lock
+
+    # ------------------------------------------------- back-compat counters
+    @property
+    def cow_copies(self) -> int:
+        return self.stats.cow_copies
+
+    @property
+    def warm_copies(self) -> int:
+        return self.stats.warm_copies
+
+    def bytes_per_page(self) -> int:
+        """Physical bytes one page occupies across every layer's K+V pools."""
+        return self._bytes_per_page
 
     # --------------------------------------------------------- page algebra
     def alloc(self) -> int:
@@ -108,16 +189,29 @@ class PagePool:
     def used_bytes(self) -> int:
         """Physical bytes attributable to live (referenced) pages."""
         live = int(np.sum(self.refs[1:] > 0))
-        bytes_per_page = sum(
-            int(np.prod(self.pools_k[s][t].shape[2:])) * self.pools_k[s][t].dtype.itemsize * 2
-            * self.pools_k[s][t].shape[0]
-            for s, t in self.attn_tags
-        )
-        return live * bytes_per_page
+        return live * self._bytes_per_page
+
+    def debug_validate(self) -> None:
+        """Allocator invariants: refs never negative, the free list and the
+        refcount table partition the page space exactly."""
+        with self._lock:
+            assert np.all(self.refs >= 0), "negative page refcount"
+            free = set(self._free)
+            assert len(free) == len(self._free), "duplicate page on free list"
+            for p in range(1, self.num_pages):
+                if self.refs[p] == 0:
+                    assert p in free, f"page {p} dead but not on the free list"
+                else:
+                    assert p not in free, f"page {p} live but on the free list"
+            assert self.refs[0] == 1 and 0 not in free, "filler page 0 corrupted"
 
     # ------------------------------------------------------------ CoW copy
     def copy_pages(self, src: List[int], dst: List[int]) -> None:
-        """Materialize CoW copies pool-wide (all layers) for (src, dst) pairs."""
+        """Materialize CoW copies pool-wide (all layers) for (src, dst) pairs.
+
+        One stacked-kernel launch per (stage, tag, k/v) — the whole batch of
+        pairs, all scan periods, in a single ``kernels.page_copy_stacked``
+        call each."""
         if not src:
             return
         si = jnp.asarray(src, jnp.int32)
@@ -125,9 +219,121 @@ class PagePool:
         for skey, tag in self.attn_tags:
             pk = self.pools_k[skey][tag]
             pv = self.pools_v[skey][tag]
-            # stacked periods: copy within each period's pool slice
-            self.pools_k[skey][tag] = jax.vmap(lambda p: kops.page_copy(p, si, di))(pk)
-            self.pools_v[skey][tag] = jax.vmap(lambda p: kops.page_copy(p, si, di))(pv)
+            self.pools_k[skey][tag] = kops.page_copy_stacked(pk, si, di)
+            self.pools_v[skey][tag] = kops.page_copy_stacked(pv, si, di)
+
+    # ------------------------------------------- transactional CoW batching
+    def materialize(self, plans: Sequence["WritePlan"], *, warm: bool = False) -> int:
+        """Commit a batch of write plans atomically; returns pages copied.
+
+        The serving loop's CoW fault handler: every plan's shared pages are
+        privatized in one batched ``copy_pages`` launch, then — only after
+        the copies landed (and verified, when ``verify_cow``) — the page
+        tables swap, the shared sources decref, and dirty tracking records
+        the write windows.  Any failure (allocator, kernel, injected fault,
+        verification mismatch) frees every page the batch allocated and
+        leaves every session's table, refcounts, and dirty sets exactly as
+        they were: a decode step either lands or aborts loudly with refs
+        rolled back.  Fault seam: ``kvcache.cow_copy``.
+
+        The whole call holds the pool lock: the async-warm worker and the
+        step path both materialize against the same device pools, and an
+        unserialized warm commit landing mid-step would be overwritten by
+        the step's functional cache update (lost-update on the dst page).
+        Plans are also *revalidated* here — two plans for the same session
+        (warm racing the step) both privatize the same table slot, and the
+        loser must discard its page instead of double-decreffing the source.
+        """
+        plans = [p for p in plans if p.fresh or p.cow]
+        if not plans:
+            return 0
+        with self._lock:
+            # revalidate against the current tables: a plan built before an
+            # earlier materialize committed may have lost its slot already
+            stale: List[int] = []
+            live: List[Tuple[WritePlan, List[Tuple[int, int]], List[Tuple[int, int, int]]]] = []
+            for p in plans:
+                sess = p.session
+                fresh_ok: List[Tuple[int, int]] = []
+                cow_ok: List[Tuple[int, int, int]] = []
+                for pos, page in p.fresh:
+                    cur = int(sess.table[pos])
+                    if cur != 0 and self.refs[cur] > 0:
+                        stale.append(page)       # slot already privately owned
+                    else:
+                        fresh_ok.append((pos, page))
+                for pos, s, d in p.cow:
+                    if int(sess.table[pos]) != s:
+                        stale.append(d)          # another plan privatized first
+                    else:
+                        cow_ok.append((pos, s, d))
+                live.append((p, fresh_ok, cow_ok))
+            src = [s for _, _, cow_ok in live for (_, s, _) in cow_ok]
+            dst = [d for _, _, cow_ok in live for (_, _, d) in cow_ok]
+            try:
+                if src:
+                    # raise-action faults fire before any device work; a
+                    # corrupt-action fault mangles the sentinel, and we model
+                    # the bitrot by scribbling on one destination post-copy
+                    blob = faults.fire("kvcache.cow_copy", b"\x00")
+                    self.copy_pages(src, dst)
+                    if blob is not None and blob != b"\x00":
+                        self._corrupt_page_for_test(dst[0])
+                    if self.verify_cow:
+                        self._verify_copies(src, dst)
+            except BaseException:
+                self.stats.cow_rollbacks += 1
+                self.discard_plans(plans)
+                raise
+            # -------------------------------------------------------- commit
+            for p, fresh_ok, cow_ok in live:
+                sess = p.session
+                for pos, page in fresh_ok:
+                    sess.table[pos] = page
+                for pos, _s, d in cow_ok:
+                    sess.table[pos] = d
+                if cow_ok:
+                    self.decref(np.asarray([s for _, s, _ in cow_ok], np.int64))
+                if sess._dirty_pages is not None:
+                    first, last = p.window
+                    sess._dirty_pages.update(range(first, last + 1))
+            if stale:
+                self.decref(np.asarray(stale, np.int64))
+                self.stats.stale_discards += len(stale)
+            n = len(src)
+            self.stats.copied_pages += n
+            self.stats.copied_bytes += n * self._bytes_per_page
+            self.stats.fresh_allocs += sum(len(f) for _, f, _ in live)
+            self.stats.materialize_calls += 1
+            if warm:
+                self.stats.warm_copies += n
+            else:
+                self.stats.cow_copies += n
+        return n
+
+    def discard_plans(self, plans: Sequence["WritePlan"]) -> None:
+        """Return every page a set of uncommitted plans allocated."""
+        for p in plans:
+            taken = [pg for _, pg in p.fresh] + [d for _, _, d in p.cow]
+            if taken:
+                self.decref(np.asarray(taken, np.int64))
+
+    def _corrupt_page_for_test(self, page: int) -> None:
+        """Injected-bitrot analogue for the copy path (chaos tests only)."""
+        skey, tag = self.attn_tags[0]
+        self.pools_k[skey][tag] = self.pools_k[skey][tag].at[:, page].add(1)
+
+    def _verify_copies(self, src: List[int], dst: List[int]) -> None:
+        si = jnp.asarray(src, jnp.int32)
+        di = jnp.asarray(dst, jnp.int32)
+        for skey, tag in self.attn_tags:
+            for pools in (self.pools_k, self.pools_v):
+                a = np.asarray(pools[skey][tag][:, si])
+                b = np.asarray(pools[skey][tag][:, di])
+                if not np.array_equal(a, b):
+                    raise CowCorruptionError(
+                        f"CoW copy mismatch in {skey}/{tag} (pairs {src}->{dst})"
+                    )
 
     # --------------------------------------------------- device page access
     def gather_page(self, page: int) -> Dict[str, np.ndarray]:
@@ -161,6 +367,10 @@ class PagePool:
 
     def scatter_pages(self, pages: np.ndarray, payload: Dict[str, np.ndarray]) -> None:
         """Vectorized inverse of ``gather_pages_device`` (slow-path restore)."""
+        with self._lock:
+            self._scatter_pages_locked(pages, payload)
+
+    def _scatter_pages_locked(self, pages: np.ndarray, payload: Dict[str, np.ndarray]) -> None:
         idx = jnp.asarray(pages, jnp.int32)
         for skey, tag in self.attn_tags:
             k = jnp.moveaxis(jnp.asarray(payload[f"kv/{skey}/{tag}/k"]), 0, 1)
@@ -248,6 +458,23 @@ class PagedSession:
         ensure_writable(warm=True) already accounts pool.warm_copies."""
         self.ensure_writable(warm=True)
 
+    def _flat_extras(self) -> Dict[str, np.ndarray]:
+        """Extras as flat numpy arrays.  Recurrent states live in extras as
+        dicts of arrays (e.g. mamba ``{"conv", "ssm"}``); nested keys are
+        joined with ``::`` — extras *names* already contain ``/``."""
+        out: Dict[str, np.ndarray] = {}
+
+        def walk(prefix: str, val: Any) -> None:
+            if isinstance(val, dict):
+                for k, v in val.items():
+                    walk(f"{prefix}::{k}", v)
+            else:
+                out[prefix] = np.asarray(val)
+
+        for name, val in self.extras.items():
+            walk(name, val)
+        return out
+
     def dump_payload(self) -> Dict[str, np.ndarray]:
         payload: Dict[str, np.ndarray] = {
             "meta/seq_len": np.asarray([self.seq_len], np.int64),
@@ -256,8 +483,8 @@ class PagedSession:
         if self.n_pages:
             for name, dev in self.pool.gather_pages_device(self.active_pages()).items():
                 payload[name] = np.asarray(dev)
-        for name, val in self.extras.items():
-            payload[f"extra/{name}"] = np.asarray(val)
+        for name, val in self._flat_extras().items():
+            payload[f"extra/{name}"] = val
         return payload
 
     @staticmethod
@@ -274,8 +501,17 @@ class PagedSession:
                 {k: v for k, v in payload.items() if k.startswith("kv/")},
             )
         for name, arr in payload.items():
-            if name.startswith("extra/"):
-                sess.extras[name[len("extra/"):]] = jnp.asarray(arr)
+            if not name.startswith("extra/"):
+                continue
+            path = name[len("extra/"):]
+            if "::" in path:                     # nested recurrent-state dict
+                head, *rest = path.split("::")
+                node = sess.extras.setdefault(head, {})
+                for part in rest[:-1]:
+                    node = node.setdefault(part, {})
+                node[rest[-1]] = jnp.asarray(arr)
+            else:
+                sess.extras[path] = jnp.asarray(arr)
         return sess
 
     # ------------------------------------------------------ DeltaEncodable
@@ -291,8 +527,8 @@ class PagedSession:
             "meta/seq_len": np.asarray([self.seq_len], np.int64),
             "meta/tokens": np.asarray(self.tokens, np.int64),
         }
-        for name, val in self.extras.items():
-            extras[f"extra/{name}"] = np.asarray(val)
+        for name, val in self._flat_extras().items():
+            extras[f"extra/{name}"] = val
         views: Dict[str, ChunkedView] = {}
         n_pages = self.n_pages
         if n_pages:
@@ -333,44 +569,56 @@ class PagedSession:
         return DeltaGeneration(views=views, extras=extras, dirty_keys=dirty_keys)
 
     # --------------------------------------------------------------- write
+    def plan_writable(self, *, extra_tokens: int = 1) -> WritePlan:
+        """Plan (but do not apply) the page motion the next ``extra_tokens``
+        appends need: fresh boundary allocations and CoW privatizations.
+
+        Pages are allocated here (so concurrent planners never collide) but
+        nothing else moves — the table, refcounts of existing pages, and
+        dirty tracking are untouched until :meth:`PagePool.materialize`
+        commits the plan.  On an allocation failure mid-plan, every page
+        this plan already took is returned before the error surfaces.
+        """
+        psz = self.pool.page_size
+        fresh: List[Tuple[int, int]] = []
+        cow: List[Tuple[int, int, int]] = []
+        new_len = self.seq_len + extra_tokens
+        first_page = self.seq_len // psz
+        last_page = (new_len - 1) // psz
+        try:
+            for pos in range(first_page, last_page + 1):
+                if pos >= len(self.table):
+                    raise MemoryError("session exceeded max_pages")
+                page = int(self.table[pos])
+                needed = pos * psz < new_len
+                if not needed:
+                    continue
+                if pos * psz >= self.seq_len and (page == 0 or self.pool.refs[page] == 0):
+                    # fresh page boundary: plain allocation, no copy
+                    fresh.append((pos, self.pool.alloc()))
+                elif self.pool.refs[page] > 1:
+                    # shared page: CoW privatize on commit
+                    cow.append((pos, page, self.pool.alloc()))
+        except BaseException:
+            taken = [pg for _, pg in fresh] + [d for _, _, d in cow]
+            if taken:
+                self.pool.decref(np.asarray(taken, np.int64))
+            raise
+        return WritePlan(
+            session=self, fresh=fresh, cow=cow, window=(first_page, last_page)
+        )
+
     def ensure_writable(self, *, warm: bool = False, extra_tokens: int = 1) -> int:
         """Guarantee the next ``extra_tokens`` appends hit exclusively-owned
         pages.  Returns the number of CoW copies performed.
 
-        This is the CoW fault (inline) or its async-warm pre-payment.
+        This is the CoW fault (inline) or its async-warm pre-payment; the
+        batched step path plans every session first and commits them through
+        one :meth:`PagePool.materialize` call instead.
         """
-        psz = self.pool.page_size
-        copies_src, copies_dst = [], []
-        new_len = self.seq_len + extra_tokens
-        first_page = self.seq_len // psz
-        last_page = (new_len - 1) // psz
-        if self._dirty_pages is not None:
-            # every position in the write window is about to change content
-            self._dirty_pages.update(range(first_page, last_page + 1))
-        for pos in range(first_page, last_page + 1):
-            if pos >= len(self.table):
-                raise MemoryError("session exceeded max_pages")
-            page = int(self.table[pos])
-            needed = pos * psz < new_len
-            if not needed:
-                continue
-            if pos * psz >= self.seq_len and (page == 0 or self.pool.refs[page] == 0):
-                # fresh page boundary: plain allocation, no copy
-                self.table[pos] = self.pool.alloc()
-            elif self.pool.refs[page] > 1:
-                # shared page: CoW privatize
-                new_page = self.pool.alloc()
-                copies_src.append(page)
-                copies_dst.append(new_page)
-                self.table[pos] = new_page
-        if copies_src:
-            self.pool.copy_pages(copies_src, copies_dst)
-            self.pool.decref(np.asarray(copies_src))
-            if warm:
-                self.pool.warm_copies += len(copies_src)
-            else:
-                self.pool.cow_copies += len(copies_src)
-        return len(copies_src)
+        plan = self.plan_writable(extra_tokens=extra_tokens)
+        self.pool.materialize([plan], warm=warm)
+        return len(plan.cow)
 
     def resident_bytes(self) -> int:
         """Footprint attributable to this session (shared pages amortized)."""

@@ -35,6 +35,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
+import time
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Dict, List, Optional, Tuple
@@ -54,6 +56,12 @@ class SchedulerConfig:
     max_batch: int = 8                   # decode batch per step
     min_free_pages: int = 8              # admission watermark
     auto_suspend_free_pages: int = 4     # suspend LRU sessions below this
+    # Batching window: >0 makes ``generate`` wait up to this long before
+    # each step for sibling requests to coalesce (early-exit once
+    # ``max_batch`` sessions want tokens).  Worth ~a batch-width of decode
+    # throughput when concurrent callers arrive staggered (forked MCTS
+    # leaves); 0 keeps the latency-first default.
+    batch_window_ms: float = 0.0
     # -- dump QoS --------------------------------------------------------
     dump_qos: bool = True                # install a DumpGate on DeltaCR
     max_inflight_dump_windows: int = 3   # staging bound for dump streams
@@ -85,6 +93,10 @@ class SessionHandle:
     session: Optional[PagedSession]
     ckpt_id: Optional[int] = None        # set while suspended
     last_step: int = 0
+    # -- decode-service request state (continuous batching) ---------------
+    want: int = 0                        # outstanding requested decode tokens
+    got: List[int] = dataclasses.field(default_factory=list)
+    waiter: Optional[Future] = None      # resolves with ``got`` when want==0
 
 
 class Scheduler:
@@ -97,6 +109,15 @@ class Scheduler:
         self.handles: Dict[int, SessionHandle] = {}
         self._sid = itertools.count(1)
         self._ckpt = itertools.count(1_000_000)
+        # Handle-table + pool-mutation lock: forked MCTS workers call
+        # admit_forked/generate/detach from their own threads while a step
+        # decodes, and slow restores scatter into the same pool arrays the
+        # step functionally updates — every public mutator serializes here.
+        self._lock = threading.RLock()
+        # Decode service: at most one thread runs engine.step at a time;
+        # whichever generate() caller grabs this lock services every
+        # waiting request (continuous batching by thread-stealing)
+        self._step_lock = threading.Lock()
         if self.cfg.dump_timeout_policy not in ("defer", "raise"):
             raise ValueError(
                 f"unknown dump_timeout_policy {self.cfg.dump_timeout_policy!r}"
@@ -127,26 +148,28 @@ class Scheduler:
     # --------------------------------------------------------------- admit
     def submit(self, prompt, sampling: Optional[SamplingParams] = None) -> int:
         """Admit a new session (prefill) if the pool allows; else raise."""
-        self._drain_suspends()
-        self._ensure_headroom()
-        if self.engine.pool.free_pages() < self.cfg.min_free_pages:
-            raise MemoryError("no page headroom for admission")
-        sess = self.engine.new_session(
-            list(prompt), sampling if sampling is not None else SamplingParams()
-        )
-        sid = next(self._sid)
-        self.handles[sid] = SessionHandle(sid=sid, state="active", session=sess)
-        return sid
+        with self._lock:
+            self._drain_suspends()
+            self._ensure_headroom()
+            if self.engine.pool.free_pages() < self.cfg.min_free_pages:
+                raise MemoryError("no page headroom for admission")
+            sess = self.engine.new_session(
+                list(prompt), sampling if sampling is not None else SamplingParams()
+            )
+            sid = next(self._sid)
+            self.handles[sid] = SessionHandle(sid=sid, state="active", session=sess)
+            return sid
 
     def fork(self, sid: int) -> int:
         """Fork an active session into a new scheduled session (BoN/search)."""
-        h = self.handles[sid]
-        assert h.state == "active" and h.session is not None
-        child = h.session.fork()
-        nsid = next(self._sid)
-        self.handles[nsid] = SessionHandle(sid=nsid, state="active", session=child)
-        self._refresh_runnable_hint()
-        return nsid
+        with self._lock:
+            h = self.handles[sid]
+            assert h.state == "active" and h.session is not None
+            child = h.session.fork()
+            nsid = next(self._sid)
+            self.handles[nsid] = SessionHandle(sid=nsid, state="active", session=child)
+            self._refresh_runnable_hint()
+            return nsid
 
     def admit_forked(self, session) -> int:
         """Admit an externally forked live session as a scheduled session.
@@ -158,14 +181,53 @@ class Scheduler:
         scheduler takes ownership: ``finish``/``suspend`` release it.
         Raises ``MemoryError`` when the pool lacks admission headroom (the
         fork itself allocated nothing, but decoding it will)."""
-        self._drain_suspends()
-        self._ensure_headroom()
-        if self.engine.pool.free_pages() < self.cfg.min_free_pages:
-            raise MemoryError("no page headroom to admit forked session")
-        sid = next(self._sid)
-        self.handles[sid] = SessionHandle(sid=sid, state="active", session=session)
-        self._refresh_runnable_hint()
-        return sid
+        with self._lock:
+            self._drain_suspends()
+            self._ensure_headroom()
+            if self.engine.pool.free_pages() < self.cfg.min_free_pages:
+                raise MemoryError("no page headroom to admit forked session")
+            sid = next(self._sid)
+            self.handles[sid] = SessionHandle(sid=sid, state="active", session=session)
+            self._refresh_runnable_hint()
+            return sid
+
+    def session(self, sid: int) -> PagedSession:
+        """The live session behind a handle (resuming it if parked).
+
+        Suspension/resume changes the session's object identity (checkpoint
+        + release, then template fork); callers holding a direct reference
+        — a SandboxTree child's ``proc`` — rebind through here."""
+        with self._lock:
+            h = self.handles[sid]
+            if h.state == "suspended":
+                self.resume(sid)
+            if h.state != "active" or h.session is None:
+                raise KeyError(f"session {sid} is not live ({h.state})")
+            return h.session
+
+    def detach(self, sid: int) -> PagedSession:
+        """Remove a handle and hand its live session back to the caller.
+
+        The inverse of ``admit_forked``: ownership returns to the caller
+        (a SandboxTree child's teardown releases the proc itself), so the
+        scheduler must NOT release it here.  A handle the scheduler
+        auto-suspended in the meantime is resumed first — the caller always
+        gets a live session back (its identity may differ from the one
+        admitted: suspension is checkpoint + release, resume is a fork)."""
+        with self._lock:
+            h = self.handles[sid]
+            if h.state == "suspended":
+                self.resume(sid)
+            if h.state != "active" or h.session is None:
+                raise KeyError(f"session {sid} is not detachable ({h.state})")
+            if h.waiter is not None:
+                raise RuntimeError(f"session {sid} detached with a request in flight")
+            sess = h.session
+            h.session = None
+            h.state = "finished"
+            del self.handles[sid]
+            self._refresh_runnable_hint()
+            return sess
 
     # --------------------------------------------------------------- states
     def suspend(self, sid: int, *, keep_template: bool = False, urgent: bool = False) -> None:
@@ -184,9 +246,19 @@ class Scheduler:
         free when this returns) and marks the dump foreground-priority so
         the QoS gate does not demote its windows.
         """
+        with self._lock:
+            self._suspend_locked(sid, keep_template=keep_template, urgent=urgent)
+
+    def _suspend_locked(self, sid: int, *, keep_template: bool, urgent: bool) -> None:
         h = self.handles[sid]
         if h.state != "active":
             return
+        if h.waiter is not None:
+            # a decode request is in flight on another thread: fail it
+            # loudly rather than silently parking a session mid-request
+            w, h.waiter = h.waiter, None
+            h.want = 0
+            w.set_exception(RuntimeError(f"session {sid} suspended mid-request"))
         ckpt_id = next(self._ckpt)
         self.cr.checkpoint(h.session, ckpt_id, None, priority="fg" if urgent else "bg")
         # the handle flips to suspended BEFORE any durability wait: the
@@ -231,54 +303,169 @@ class Scheduler:
             self.suspend(sid, **kw)
 
     def resume(self, sid: int) -> None:
-        h = self.handles[sid]
-        if h.state != "suspended":
-            return
-        self._drain_suspends()
-        self._ensure_headroom()
-        state, path = self.cr.restore(h.ckpt_id)
-        h.session = state
-        h.state = "active"
-        h.ckpt_id = None
-        self.resumes += 1
-        self._refresh_runnable_hint()
+        with self._lock:
+            h = self.handles[sid]
+            if h.state != "suspended":
+                return
+            self._drain_suspends()
+            self._ensure_headroom()
+            state, path = self.cr.restore(h.ckpt_id)
+            h.session = state
+            h.state = "active"
+            h.ckpt_id = None
+            self.resumes += 1
+            self._refresh_runnable_hint()
 
     def finish(self, sid: int) -> List[int]:
-        h = self.handles[sid]
-        tokens = list(h.session.tokens) if h.session else []
-        if h.session is not None:
-            h.session.release()
-            h.session = None
-        if h.ckpt_id is not None:
-            self._pending_evict = [
-                (c, f) for c, f in self._pending_evict if c != h.ckpt_id
-            ]
-            self.cr.drop_checkpoint(h.ckpt_id)
-            h.ckpt_id = None
-        h.state = "finished"
-        self._refresh_runnable_hint()
-        return tokens
+        with self._lock:
+            h = self.handles[sid]
+            tokens = list(h.session.tokens) if h.session else []
+            if h.session is not None:
+                h.session.release()
+                h.session = None
+            if h.ckpt_id is not None:
+                self._pending_evict = [
+                    (c, f) for c, f in self._pending_evict if c != h.ckpt_id
+                ]
+                self.cr.drop_checkpoint(h.ckpt_id)
+                h.ckpt_id = None
+            h.state = "finished"
+            self._refresh_runnable_hint()
+            return tokens
 
     # ----------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
         """One continuous-batching step over decode-ready sessions.
 
-        Returns {sid: sampled token}."""
-        self._drain_suspends()
-        ready = [h for h in self.handles.values() if h.state == "active"][: self.cfg.max_batch]
-        if self.gate is not None:
-            # QoS hint: while these sessions decode, background dump windows
-            # are demoted; cleared when the scheduler runs dry
-            self.gate.set_runnable(len(ready))
-        if not ready:
-            return {}
-        toks = self.engine.step([h.session for h in ready])
-        out = {}
-        for h, t in zip(ready, toks):
-            h.last_step = self.step_count
-            out[h.sid] = t
-        self.step_count += 1
-        return out
+        When decode *requests* are outstanding (``request_tokens``/
+        ``generate``), the batch is exactly the requesting sessions — an
+        admitted session nobody asked to decode is never stepped out from
+        under its owner.  With no requests pending, every active session is
+        batched (the fleet-serving default).  Returns {sid: sampled token}.
+        """
+        with self._lock:
+            self._drain_suspends()
+            actives = [h for h in self.handles.values() if h.state == "active"]
+            wanting = [h for h in actives if h.want > 0]
+            ready = (wanting if wanting else actives)[: self.cfg.max_batch]
+            if self.gate is not None:
+                # QoS hint: while these sessions decode, background dump
+                # windows are demoted; cleared when the scheduler runs dry
+                self.gate.set_runnable(len(ready))
+            if not ready:
+                return {}
+            try:
+                toks = self.engine.step([h.session for h in ready])
+            except BaseException as exc:
+                # a failed batched step (CoW fault, allocator) aborts every
+                # waiting request loudly — refs were already rolled back
+                for h in ready:
+                    if h.waiter is not None:
+                        w, h.waiter = h.waiter, None
+                        h.want = 0
+                        w.set_exception(
+                            exc if isinstance(exc, Exception) else RuntimeError(repr(exc))
+                        )
+                raise
+            out = {}
+            for h, t in zip(ready, toks):
+                h.last_step = self.step_count
+                out[h.sid] = t
+                if h.want > 0:
+                    h.want -= 1
+                    h.got.append(int(t))
+                    if h.want == 0 and h.waiter is not None:
+                        w, h.waiter = h.waiter, None
+                        w.set_result(list(h.got))
+            self.step_count += 1
+            return out
+
+    # -------------------------------------------------------- decode service
+    def request_tokens(self, sid: int, n: int) -> Future:
+        """Ask the decode service for ``n`` more tokens from session ``sid``.
+
+        Returns a future resolving to the list of sampled tokens once ``n``
+        continuous-batching steps have included the session.  A suspended
+        handle is resumed first.  The request is *served* by whoever drives
+        ``step()`` — the background fleet loop, or any thread inside
+        ``generate`` (work-stealing: one blocked caller steps the shared
+        batch for everyone)."""
+        with self._lock:
+            h = self.handles[sid]
+            if h.state == "suspended":
+                self.resume(sid)
+            if h.state != "active":
+                raise KeyError(f"session {sid} is not decodable ({h.state})")
+            if h.waiter is not None:
+                raise RuntimeError(f"session {sid} already has a request in flight")
+            fut: Future = Future()
+            h.got = []
+            if n <= 0:
+                fut.set_result([])
+                return fut
+            h.want = int(n)
+            h.waiter = fut
+            return fut
+
+    def generate(self, sid: int, n: int, *, timeout_s: float = 300.0) -> List[int]:
+        """Decode ``n`` tokens through the shared continuous-batching loop.
+
+        Safe to call from many threads at once (the parallel-MCTS workers
+        do): each caller's request joins the same batch, and exactly one
+        caller at a time drives ``step()`` while the rest wait on their
+        futures — forked siblings admitted through ``admit_forked`` decode
+        together, one stacked kernel launch per step for the whole set."""
+        fut = self.request_tokens(sid, n)
+        deadline = time.monotonic() + timeout_s
+        while not fut.done():
+            if self._step_lock.acquire(timeout=0.002):
+                try:
+                    # Serve until the shared batch runs dry, not merely until
+                    # our own request resolves: releasing the lock the moment
+                    # our future lands would strand every sibling request in
+                    # its wait-timeout (tens of ms each).  The holder drains
+                    # all pending wants so siblings' futures resolve the
+                    # instant their last token is sampled.
+                    while self._pending_wants():
+                        self._coalesce_window()
+                        self.step()
+                finally:
+                    self._step_lock.release()
+            else:
+                # another caller is stepping the shared batch
+                try:
+                    return list(fut.result(timeout=0.02))
+                except FuturesTimeoutError:
+                    pass
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"generate({sid}, {n}) missed {timeout_s}s deadline")
+        return list(fut.result())
+
+    def _coalesce_window(self) -> None:
+        """Give concurrently-arriving requests ``batch_window_ms`` to join
+        the next step's batch (no-op when the window is 0).  Exits early the
+        moment ``max_batch`` sessions want tokens — a full batch gains
+        nothing by waiting."""
+        w_s = self.cfg.batch_window_ms / 1e3
+        if w_s <= 0:
+            return
+        deadline = time.monotonic() + w_s
+        while time.monotonic() < deadline:
+            with self._lock:
+                wanting = sum(
+                    1
+                    for h in self.handles.values()
+                    if h.state == "active" and h.want > 0
+                )
+            if wanting >= self.cfg.max_batch:
+                return
+            time.sleep(w_s / 8)
+
+    def _pending_wants(self) -> bool:
+        with self._lock:
+            return any(
+                h.want > 0 for h in self.handles.values() if h.state == "active"
+            )
 
     # ---------------------------------------------------------------- health
     def health(self) -> Dict[str, object]:
@@ -374,13 +561,14 @@ class Scheduler:
         snapshot seq, or None when no plane is configured."""
         if self.plane is None:
             return None
-        sessions = sorted(
-            (h.sid, h.ckpt_id)
-            for h in self.handles.values()
-            if h.state == "suspended"
-            and h.ckpt_id is not None
-            and self.cr.images.image_for(h.ckpt_id) is not None
-        )
+        with self._lock:
+            sessions = sorted(
+                (h.sid, h.ckpt_id)
+                for h in self.handles.values()
+                if h.state == "suspended"
+                and h.ckpt_id is not None
+                and self.cr.images.image_for(h.ckpt_id) is not None
+            )
         return self.plane.save(
             deltacr=self.cr,
             extra={"sessions": [list(s) for s in sessions]},
@@ -433,5 +621,7 @@ class Scheduler:
             actives = [h for h in self.handles.values() if h.state == "active"]
             if len(actives) <= 1:
                 break
-            lru = min(actives, key=lambda h: h.last_step)
+            # prefer parking sessions nobody is mid-request on
+            idle = [h for h in actives if h.want == 0 and h.waiter is None] or actives
+            lru = min(idle, key=lambda h: h.last_step)
             self.suspend(lru.sid)

@@ -34,6 +34,11 @@ def pytest_configure(config):
         "timeout(seconds): per-test deadline (pytest-timeout when installed, "
         "SIGALRM fallback otherwise)",
     )
+    config.addinivalue_line(
+        "markers",
+        "slow: long soak variants (excluded from the CI test matrix via "
+        '-m "not slow"; the bench job runs them)',
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -390,3 +390,78 @@ def test_restore_after_corruption_heals_from_durable_blobs(tmp_path):
     blob.write_bytes(bytes(raw))
     with pytest.raises(RecoverError):
         plane.recover(restore_fn=_restore)
+
+
+# --------------------------------------------------------------------------
+# serving loop: CoW page privatization is transactional (kvcache.cow_copy)
+# --------------------------------------------------------------------------
+def _serve_world(verify_cow: bool):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import Engine, PagePool
+
+    cfg = get_config("olmo-1b-tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk_pool():
+        return PagePool(cfg, num_pages=64, page_size=8,
+                        max_pages_per_session=16, verify_cow=verify_cow)
+
+    pool = mk_pool()
+    return pool, Engine(model, params, pool), mk_pool, model, params
+
+
+def _kv_snapshot(pool, sessions):
+    return (
+        pool.refs.copy(),
+        pool.free_pages(),
+        [s.table.copy() for s in sessions],
+        [s.seq_len for s in sessions],
+    )
+
+
+@pytest.mark.chaos
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("mode", ["raise", "corrupt"])
+def test_cow_copy_fault_rolls_back_and_retry_matches_twin(mode):
+    """A fault inside the batched CoW privatization (raise before the copy,
+    or detected bitrot after it) must leave every session's table, the
+    refcounts, and the free list exactly as they were — and the retried step
+    must land the same tokens as a fault-free twin world."""
+    from repro.core.faults import FaultError
+    from repro.serve import CowCorruptionError, Engine
+
+    pool, eng, mk_pool, model, params = _serve_world(verify_cow=(mode == "corrupt"))
+    pool_b = mk_pool()
+    eng_b = Engine(model, params, pool_b)
+
+    prompt = list(range(1, 12))                      # unaligned: tail is shared
+    sess = eng.new_session(prompt)
+    kids = [sess.fork() for _ in range(2)]
+    sess_b = eng_b.new_session(prompt)
+    kids_b = [sess_b.fork() for _ in range(2)]
+
+    snap = _kv_snapshot(pool, [sess] + kids)
+    plan = faults.FaultPlan().add("kvcache.cow_copy", action=mode)
+    with faults.inject(plan):
+        expected_exc = FaultError if mode == "raise" else CowCorruptionError
+        with pytest.raises(expected_exc):
+            eng.step(kids)
+        # transactional abort: nothing half-committed
+        refs, free, tables, lens = _kv_snapshot(pool, [sess] + kids)
+        np.testing.assert_array_equal(refs, snap[0])
+        assert free == snap[1]
+        for got, want in zip(tables, snap[2]):
+            np.testing.assert_array_equal(got, want)
+        assert lens == snap[3]
+        assert pool.stats.cow_rollbacks == 1
+        pool.debug_validate()
+        toks = eng.step(kids)                        # fault exhausted: retry lands
+    assert plan.fired("kvcache.cow_copy") == 1
+    assert pool.stats.cow_copies == 2                # one privatized tail per kid
+    toks_b = eng_b.step(kids_b)
+    assert toks == toks_b                            # bit-identical to the twin
+    pool.debug_validate()

@@ -1,0 +1,127 @@
+"""Property tests over random op interleavings on forked paged sessions
+(ISSUE 7 satellite 2).
+
+A model-free harness drives ``PagedSession`` directly: sentinel values are
+written straight into the pool arrays (standing in for the decode kernel's
+K/V scatter), so every session's logical content is known exactly.  Random
+interleavings of fork / append-write / snapshot / rollback / release must
+preserve two invariants at every step:
+
+* **sibling isolation** — a write to one session never changes what any
+  other live session reads back, no matter how the CoW page graph is shared;
+* **refcount balance** — ``debug_validate`` holds throughout, and after
+  dropping every session the pool returns exactly to its baseline refs and
+  free count.
+
+Runs against the in-repo deterministic hypothesis fallback when the real
+package is absent (see conftest).  The soak variant is marked ``slow``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.serve import PagePool, PagedSession
+
+CFG = get_config("olmo-1b-tiny")
+
+MAX_SESSIONS = 8
+MAX_SEQ = 24
+MAX_SNAPSHOTS = 4
+
+# (op, salt): 0=fork, 1=append-write, 2=release, 3=snapshot, 4=rollback
+OPS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 1 << 20)),
+    min_size=1,
+    max_size=40,
+)
+
+
+def _append_sentinel(pool, sess, expected, value):
+    """One decode-step analogue: make position seq_len writable, then write
+    ``value`` into every attn tag's K (and -value into V) at that slot."""
+    sess.ensure_writable(extra_tokens=1)
+    pos = sess.seq_len
+    page = int(sess.table[pos // pool.page_size])
+    off = pos % pool.page_size
+    assert page != 0, "writable position must not sit on the filler page"
+    for skey, tag in pool.attn_tags:
+        pool.pools_k[skey][tag] = pool.pools_k[skey][tag].at[:, page, off].set(value)
+        pool.pools_v[skey][tag] = pool.pools_v[skey][tag].at[:, page, off].set(-value)
+    sess.seq_len += 1
+    sess.tokens.append(int(value) & 0x7FFF)
+    expected.append(float(value))
+
+
+def _read_back(pool, sess):
+    """The session's logical K stream, position by position."""
+    skey, tag = pool.attn_tags[0]
+    grid = np.asarray(pool.pools_k[skey][tag][0, :, :, 0, 0])  # (P, psz)
+    out = []
+    for pos in range(sess.seq_len):
+        page = int(sess.table[pos // pool.page_size])
+        out.append(float(grid[page, pos % pool.page_size]))
+    return out
+
+
+def _check_world(pool, world):
+    for sess, expected in world:
+        assert _read_back(pool, sess) == expected, "sibling write leaked"
+    pool.debug_validate()
+
+
+def _run_interleaving(ops, *, num_pages=128):
+    pool = PagePool(CFG, num_pages=num_pages, page_size=8, max_pages_per_session=8)
+    baseline_refs = pool.refs.copy()
+    baseline_free = pool.free_pages()
+
+    root = PagedSession(pool)
+    world = [(root, [])]          # (session, expected sentinel list)
+    snapshots = []                # (payload, expected copy)
+    counter = [0]
+
+    def next_val():
+        counter[0] += 1
+        return float(counter[0])  # ints ≤ ~2k: exact in every pool dtype
+
+    for op, salt in ops:
+        if op == 0 and world and len(world) < MAX_SESSIONS:       # fork
+            sess, expected = world[salt % len(world)]
+            world.append((sess.fork(), list(expected)))
+        elif op == 1 and world:                                    # write
+            sess, expected = world[salt % len(world)]
+            if sess.seq_len < MAX_SEQ:
+                _append_sentinel(pool, sess, expected, next_val())
+        elif op == 2 and world:                                    # release
+            sess, expected = world.pop(salt % len(world))
+            sess.release()
+        elif op == 3 and world and len(snapshots) < MAX_SNAPSHOTS:  # snapshot
+            sess, expected = world[salt % len(world)]
+            snapshots.append((sess.dump_payload(), list(expected)))
+        elif op == 4 and snapshots and len(world) < MAX_SESSIONS:  # rollback
+            payload, expected = snapshots[salt % len(snapshots)]
+            world.append(
+                (PagedSession.restore_from_payload(pool, payload), list(expected))
+            )
+        _check_world(pool, world)
+
+    # drop-all: every ref the interleaving took must come back
+    for sess, _ in world:
+        sess.release()
+    pool.debug_validate()
+    np.testing.assert_array_equal(pool.refs, baseline_refs)
+    assert pool.free_pages() == baseline_free
+
+
+@settings(max_examples=25, deadline=None)
+@given(OPS)
+def test_random_fork_write_rollback_interleavings(ops):
+    _run_interleaving(ops)
+
+
+@pytest.mark.slow
+@settings(max_examples=150, deadline=None)
+@given(OPS)
+def test_random_interleavings_soak(ops):
+    _run_interleaving(ops)

@@ -298,7 +298,7 @@ def test_persistence_plane_wrapper(tmp_path):
 def test_current_walks_past_inflight_and_tombstones(tmp_path):
     """If current sits on a non-durable node whose ancestor is a reclaimed
     tombstone, the snapshot's current walks to the nearest *restorable*
-    ancestor — recover + restore(rec.current) always works."""
+    ancestor — recover's trunk auto-restore always lands."""
     sm, fs, cr = _mk_sm()
     c1 = sm.checkpoint()
     sm.sandbox.proc.mutate("heap", lambda h: h.__setitem__(0, 1.0))
@@ -315,9 +315,43 @@ def test_current_walks_past_inflight_and_tombstones(tmp_path):
     cr.wait_dumps()
     rec = recover(root)
     assert rec.current == c1             # walked past c3 (absent) AND c2 (tombstone)
-    rec.state_manager.restore(rec.current)
+    # no hand-rolled restore: recover already rolled the trunk onto current
+    assert rec.trunk_restore_mode in ("fast", "slow")
+    assert rec.state_manager.current == c1
+    heap = rec.state_manager.sandbox.proc.get("heap")
+    assert heap[0] != 1.0 and heap[1] != 2.0   # pre-c2/c3 state, live now
     cr.shutdown()
     rec.deltacr.shutdown()
+
+
+def test_auto_restore_modes(tmp_path):
+    """Trunk auto-restore: a plain current restores live; a current atop an
+    LW replay chain is skipped without an applier, replayed with one; and
+    auto_restore=False preserves the old inert-proc behavior."""
+    sm, fs, cr = _mk_sm()
+    c1, c2, c3, c4 = _grow_tree(sm, fs, cr)
+    sm.restore(c3)                       # park current on the LW marker
+    root = str(tmp_path / "state")
+    save_state(root, sm=sm)
+
+    rec = recover(root)                  # LW chain, no applier → skipped
+    assert rec.current == c3
+    assert rec.trunk_restore_mode == "skipped-needs-applier"
+    rec.deltacr.shutdown()
+
+    applier = lambda sb, a: sb.proc.mutate("regs", lambda r: r.__setitem__(a, -1.0))
+    rec2 = recover(root, action_applier=applier)
+    assert rec2.trunk_restore_mode.endswith("+replay")
+    assert rec2.state_manager.current == c3
+    assert rec2.state_manager.sandbox.proc.get("regs")[1] == -1.0
+    # the applier stays wired: later manual restores replay too
+    assert rec2.state_manager.restore(c3).endswith("+replay")
+    rec2.deltacr.shutdown()
+
+    rec3 = recover(root, auto_restore=False)
+    assert rec3.trunk_restore_mode == "disabled"
+    rec3.deltacr.shutdown()
+    cr.shutdown()
 
 
 def test_recovered_pins_are_releasable(tmp_path):
