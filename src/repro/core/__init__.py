@@ -45,6 +45,7 @@ from .stream import (
 )
 from .deltafs import DeltaFS, LayerConfig, LayerStore, NamespaceView, TensorMeta
 from .deltacr import CowArrayState, DeltaCR, DumpImage, DumpTimeout, ForkableState
+from .policy import DumpPolicy, ModeSelector, dirty_fraction_hint
 from .gc import reachability_gc, recency_gc
 from .image_store import ImageRef, ImageStore, ImageStoreStats
 from .npd import InferenceProxy, ProxyRequest
@@ -92,6 +93,9 @@ __all__ = [
     "CowArrayState",
     "DeltaCR",
     "DumpImage",
+    "DumpPolicy",
+    "ModeSelector",
+    "dirty_fraction_hint",
     "ForkableState",
     "reachability_gc",
     "recency_gc",

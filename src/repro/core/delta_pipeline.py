@@ -53,8 +53,10 @@ from typing import (
 
 import numpy as np
 
+from . import faults
 from .chunk_store import ChunkStore, chunk_digest
 from .deltafs import TensorMeta, digest_encode_array  # noqa: F401 (re-export)
+from .faults import FaultError
 from .stream import ChunkStreamEngine, StreamCancelled, WindowItem
 
 
@@ -300,6 +302,10 @@ class _KeyTask:
 class DeltaDumpPipeline:
     """Coordinates delta_encode dumps and delta_apply restores for one store."""
 
+    #: VMEM budget for the fused kernel's resident compaction buffer
+    #: (max_changed × chunk_bytes); past it the unfused two-kernel plan runs.
+    FUSED_VMEM_BYTES = 8 * 1024 * 1024
+
     def __init__(
         self,
         store: ChunkStore,
@@ -307,11 +313,16 @@ class DeltaDumpPipeline:
         capacity_frac: float = 0.5,
         max_generations: int = 4,
         stream: Optional[ChunkStreamEngine] = None,
+        fused: bool = True,
+        fused_verify: bool = True,
     ):
         self.store = store
         self.capacity_frac = float(capacity_frac)
         self.max_generations = int(max_generations)
         self.stream = stream
+        self.fused = bool(fused)
+        self.fused_verify = bool(fused_verify)
+        self.fused_checksum_mismatches = 0    # host-verify failures (retried)
         self._gens: "OrderedDict[int, _GenRecord]" = OrderedDict()
         self._lock = threading.RLock()
 
@@ -442,6 +453,7 @@ class DeltaDumpPipeline:
         *,
         cancel: Optional[threading.Event] = None,
         priority: str = "bg",
+        use_base: bool = True,
     ) -> EncodeResult:
         """Build the image entries for one generation (dump-worker thread).
 
@@ -452,10 +464,21 @@ class DeltaDumpPipeline:
         boundary and rolls back every chunk reference this dump acquired
         (raising :class:`StreamCancelled`); ``priority`` is forwarded to the
         QoS gate ("bg" dumps yield to runnable sessions, "fg" do not).
+
+        ``use_base=False`` is the adaptive engine's *straight-copy* mode for
+        mostly-dirty generations: skip the diff kernels entirely (no base
+        grid lookup → every dirty-hinted key drains in full) while keeping
+        everything else — clean-key metadata reuse, streaming overlap, the
+        parent digest compare at commit (dump bytes stay ∝ the dirty set),
+        and the generation anchor for future O(delta) chaining.
         """
         res = EncodeResult(entries={}, dirtied=0)
         parent_entries = parent_image.entries if parent_image is not None else {}
-        parent_rec = self.record_for(parent_image.image_id) if parent_image is not None else None
+        parent_rec = (
+            self.record_for(parent_image.image_id)
+            if parent_image is not None and use_base
+            else None
+        )
         try:
             return self._encode_with_parent(
                 gen, parent_entries, parent_rec, res, cancel=cancel, priority=priority
@@ -620,6 +643,10 @@ class DeltaDumpPipeline:
         # steps); the identical zero pad rows can never read as dirty
         K2 = 1 << (K - 1).bit_length()
         cap = self._capacity(K2)
+        if self.fused and cap * view.chunk_bytes <= self.FUSED_VMEM_BYTES:
+            return self._plan_device_fused(
+                key, view, pm, old_grid, new_grid, K, K2, cap, weight
+            )
 
         def encode():
             old_j = jnp.asarray(old_grid)[:K]
@@ -640,6 +667,75 @@ class DeltaDumpPipeline:
                 return "full", self._drain_rows(np.asarray(view.grid), range(view.n_chunks))
             data_np, idx_np = np.asarray(data), np.asarray(idx)
             valid = [j for j in range(idx_np.shape[0]) if int(idx_np[j]) >= 0]
+            rows = self._drain_rows(data_np, valid, keys=(int(idx_np[j]) for j in valid))
+            if view.n_chunks > K:        # grown rows: all dirty, one fetch
+                tail = np.asarray(view.grid[K:])
+                rows.update(
+                    self._drain_rows(
+                        tail, range(tail.shape[0]), keys=range(K, K + tail.shape[0])
+                    )
+                )
+            return "kernel", rows
+
+        def commit(tagged) -> Tuple[TensorMeta, int, str]:
+            tag, rows = tagged
+            if tag == "full":
+                return (*self._commit_full_grid(view, pm, rows), "full")
+            meta, n_dirty = self._commit_kernel_meta(view, pm, K, rows)
+            return meta, n_dirty, "kernel"
+
+        return _KeyTask(key=key, weight=weight, encode=encode, drain=drain, commit=commit)
+
+    def _plan_device_fused(
+        self, key, view, pm, old_grid, new_grid, K: int, K2: int, cap: int, weight: int
+    ) -> _KeyTask:
+        """Single-pass device plan: ``kernels.fused_encode`` diffs, compacts
+        and checksums the dirty rows in one kernel launch, so dirty bytes
+        cross the device memory hierarchy once instead of three times.
+
+        Drain validates the DMA'd bytes against the device-computed checksum
+        lanes (when ``fused_verify``): a mismatch raises a catchable
+        :class:`FaultError` that rides the dump path's transactional
+        retry/fallback plane — the attempt rolls back and the retry
+        re-fetches, exactly like an injected drain fault."""
+        from repro.kernels import ops as kops
+        import jax.numpy as jnp
+
+        def encode():
+            old_j = jnp.asarray(old_grid)[:K]
+            new_j = jnp.asarray(new_grid)[:K]
+            if K2 != K:
+                pad_rows = ((0, K2 - K), (0, 0))
+                old_j = jnp.pad(old_j, pad_rows)
+                new_j = jnp.pad(new_j, pad_rows)
+            data, idx, count, sums = kops.fused_encode(old_j, new_j, cap)
+            # double-buffer overlap: start the small control DMAs (idx,
+            # count, sums) first so drain can classify immediately, then the
+            # bulk rows — by the time drain touches `data` the copy has been
+            # running behind window k+1's encode dispatch
+            kops.start_host_fetch(idx, count, sums)
+            kops.start_host_fetch(data)
+            return data, idx, count, sums
+
+        def drain(enc):
+            data, idx, count, sums = enc
+            if int(count) > cap:
+                # capacity overflow: fall back to the full chunk set
+                return "full", self._drain_rows(np.asarray(view.grid), range(view.n_chunks))
+            data_np, idx_np = np.asarray(data), np.asarray(idx)
+            valid = [j for j in range(idx_np.shape[0]) if int(idx_np[j]) >= 0]
+            faults.fire("kernels.fused")
+            if self.fused_verify and valid:
+                got = kops.chunk_checksums_host(data_np[valid])
+                want = np.asarray(sums)[valid]
+                if not np.array_equal(got, want):
+                    bad = np.flatnonzero(np.any(got != want, axis=1))
+                    self.fused_checksum_mismatches += len(bad)
+                    raise FaultError(
+                        f"fused dump checksum mismatch on {key!r}: "
+                        f"{len(bad)}/{len(valid)} fetched rows fail the "
+                        f"device-computed lanes (attempt rolls back)"
+                    )
             rows = self._drain_rows(data_np, valid, keys=(int(idx_np[j]) for j in valid))
             if view.n_chunks > K:        # grown rows: all dirty, one fetch
                 tail = np.asarray(view.grid[K:])

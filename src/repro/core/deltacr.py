@@ -61,12 +61,14 @@ from .delta_pipeline import (
 from .deltafs import TensorMeta
 from .faults import FaultError, WorkerKilled
 from .image_store import DumpTicket, ImageStore
+from .policy import DumpPolicy, ModeSelector, dirty_fraction_hint
 from .stream import ChunkStreamEngine, DumpGate, StreamCancelled, StreamConfig
 
 __all__ = [
     "ForkableState",
     "CowArrayState",
     "DumpImage",
+    "DumpPolicy",
     "DumpTimeout",
     "DeltaCR",
     "DeltaCRStats",
@@ -312,6 +314,20 @@ class CowArrayState:
     def dirty_tracking_base(self) -> Optional[int]:
         return self._dirty_base if self._dirty is not None else None
 
+    def dirty_fraction_hint(self) -> Optional[float]:
+        """Byte-weighted upper bound on the dirty fraction since the last
+        mark-clean (a key counts fully dirty after one element write);
+        None when tracking is invalid.  Feeds the adaptive mode selector."""
+        if self._dirty is None:
+            return None
+        total = sum(a.nbytes for a in self._arrays.values())
+        if total <= 0:
+            return 0.0
+        dirty = sum(
+            self._arrays[k].nbytes for k in self._dirty if k in self._arrays
+        )
+        return min(dirty / total, 1.0)
+
     # -- ForkableState ---------------------------------------------------
     def fork(self) -> "CowArrayState":
         clone = CowArrayState.__new__(CowArrayState)
@@ -393,7 +409,11 @@ class DumpImage:
     dirtied_chunks: int
     dump_bytes: int          # physical bytes this image added
     wall_ms: float
-    mode: str = "digest"     # "delta" | "digest" | "legacy"
+    mode: str = "digest"     # "delta" | "copy" | "digest" | "legacy"
+    # adaptive-selection telemetry (None when no prediction/parent applied;
+    # process-local observability — deliberately not persisted)
+    predicted_dirty_frac: Optional[float] = None
+    actual_dirty_frac: Optional[float] = None
     # streaming accounting (zeros when the dump ran synchronously)
     streamed: bool = False
     stream_windows: int = 0
@@ -426,6 +446,10 @@ class DeltaCRStats:
         self.fallback_dumps = 0       # delta/digest dumps degraded to legacy
         self.degraded_dumps = 0       # dumps that skipped delta in degraded mode
         self.deadline_trips = 0       # per-dump deadlines exceeded
+        # adaptive-mode accounting
+        self.mode_dumps: Dict[str, int] = {}  # landed mode -> dump count
+        self.pred_err_sum = 0.0       # Σ|predicted - actual| dirty fraction
+        self.pred_err_n = 0           # dumps with both prediction and actual
         self.lock = threading.Lock()
 
 
@@ -435,12 +459,16 @@ class _EncodeOutcome:
 
     entries: Dict[str, TensorMeta]
     dirtied: int
-    mode: str                                 # "delta" | "digest" | "legacy"
+    mode: str                                 # "delta" | "copy" | "digest" | "legacy"
     anchor_views: Optional[Dict[str, ChunkedView]] = None
     clean_keys: int = 0
     kernel_keys: int = 0
     full_keys: int = 0
     res: Optional[EncodeResult] = None
+    # adaptive-selection telemetry, stamped by _encode_with_recovery
+    pred_frac: Optional[float] = None         # selector's predicted dirty frac
+    hint_frac: Optional[float] = None         # raw state hint fed to predict()
+    fell_back: bool = False                   # primary failed, legacy landed
 
 
 # --------------------------------------------------------------------------
@@ -449,10 +477,22 @@ class _EncodeOutcome:
 class DeltaCR:
     """Coordinates the template pool and async delta dumps for one sandbox.
 
-    ``dump_mode`` selects the serialization strategy:
+    All dump behavior is configured by a single frozen :class:`DumpPolicy`
+    (``DeltaCR(store, policy=DumpPolicy.latency())``); the historical loose
+    keywords (``dump_mode=``, ``dump_retries=``, ...) still work through a
+    deprecation shim that folds them into a policy.
 
-    * ``"auto"``  — delta pipeline for :class:`DeltaEncodable` states
-      (on-device diff, O(delta) device→host), digest path otherwise.
+    ``policy.mode`` selects the serialization strategy:
+
+    * ``"auto"``  — **adaptive**: per dump, a :class:`ModeSelector` predicts
+      the dirty fraction from the state's dirty-key hint blended with an
+      EWMA of measured fractions for this sandbox lineage, then picks the
+      cheapest path — the kernel delta pipeline at low dirty fractions, a
+      straight full-grid copy (no diff kernel) past the measured crossover,
+      digest for non-:class:`DeltaEncodable` states.  Until the predictor
+      has calibration evidence it behaves exactly like ``"delta"``.
+    * ``"delta"`` — always the kernel pipeline for :class:`DeltaEncodable`
+      states (on-device diff, O(delta) device→host), digest otherwise.
     * ``"digest"`` — per-chunk digest delta (hash once, 16-byte parent
       compare); no kernels.
     * ``"legacy"`` — the original full-serialize path (``tobytes`` + full
@@ -463,24 +503,25 @@ class DeltaCR:
         self,
         store: Optional[ChunkStore] = None,
         *,
+        policy: Optional[DumpPolicy] = None,
         template_pool_size: int = 8,
         restore_fn: Optional[Callable[[Dict[str, np.ndarray]], ForkableState]] = None,
         async_warm: bool = True,
         chunk_bytes: int = 64 * 1024,
-        dump_mode: str = "auto",
         pipeline: Optional[DeltaDumpPipeline] = None,
-        capacity_frac: float = 0.5,
-        max_generations: int = 4,
-        stream: bool = True,
-        stream_config: Optional[StreamConfig] = None,
-        dump_retries: int = 2,
-        retry_backoff_s: float = 0.005,
-        dump_deadline_s: Optional[float] = None,
-        delta_fail_threshold: int = 3,
-        degraded_probe_every: int = 4,
+        **legacy_knobs: Any,
     ):
-        if dump_mode not in ("auto", "digest", "legacy"):
-            raise ValueError(f"unknown dump_mode {dump_mode!r}")
+        if legacy_knobs:
+            if policy is not None:
+                raise TypeError(
+                    "pass either policy= or the legacy dump keywords, not "
+                    f"both (got legacy: {sorted(legacy_knobs)})"
+                )
+            # Deprecated loose keywords (dump_mode=, dump_retries=, ...)
+            # fold into a DumpPolicy; unknown names raise TypeError exactly
+            # like a normal bad keyword would.
+            policy = DumpPolicy.from_legacy_kwargs(legacy_knobs)
+        self.policy = policy if policy is not None else DumpPolicy()
         # NOTE: explicit None check — an *empty* ChunkStore is falsy (len 0),
         # and `store or ChunkStore(...)` would silently split the caller off
         # onto a private store.
@@ -488,36 +529,30 @@ class DeltaCR:
         self.template_pool_size = int(template_pool_size)
         self.restore_fn = restore_fn
         self.async_warm = async_warm
-        self.dump_mode = dump_mode
         self.pipeline = pipeline
-        if self.pipeline is None and dump_mode == "auto":
+        if self.pipeline is None and self.policy.mode in ("auto", "delta"):
             engine = None
-            if stream:
+            if self.policy.stream:
                 # Default engine: adaptive windowing — window budgets track
                 # the measured bottleneck-stage throughput instead of a
                 # fixed byte count.  An explicit stream_config is honored
                 # verbatim (controlled A/B benchmarks pass fixed budgets).
                 engine = ChunkStreamEngine(
-                    stream_config
-                    if stream_config is not None
+                    self.policy.stream_config
+                    if self.policy.stream_config is not None
                     else StreamConfig(adaptive=True)
                 )
             self.pipeline = DeltaDumpPipeline(
                 self.store,
-                capacity_frac=capacity_frac,
-                max_generations=max_generations,
+                capacity_frac=self.policy.capacity_frac,
+                max_generations=self.policy.max_generations,
                 stream=engine,
+                fused=self.policy.fused_kernel,
+                fused_verify=self.policy.fused_verify,
             )
-        # Self-healing dump knobs: bounded retry with exponential backoff,
-        # optional per-dump wall deadline, and degraded mode (after
-        # `delta_fail_threshold` consecutive delta-path failures dumps go
-        # straight to the legacy full path, probing delta every
-        # `degraded_probe_every`-th dump until one succeeds).
-        self.dump_retries = max(0, int(dump_retries))
-        self.retry_backoff_s = float(retry_backoff_s)
-        self.dump_deadline_s = dump_deadline_s
-        self.delta_fail_threshold = max(1, int(delta_fail_threshold))
-        self.degraded_probe_every = max(1, int(degraded_probe_every))
+        # Per-dump adaptive mode selection (dump-worker thread only).
+        self.selector = ModeSelector(self.policy)
+        self._bind_policy_knobs(self.policy)
         # Degraded-mode state: touched only on the single dump-worker thread.
         self._delta_failures = 0
         self._degraded = False
@@ -541,6 +576,35 @@ class DeltaCR:
         # Verified-read repair: a corrupt stored chunk can be re-derived from
         # any anchored generation grid row that still maps to it.
         self.store.attach_repair_source(self._repair_from_generations)
+
+    # ------------------------------------------------------------- policy
+    def _bind_policy_knobs(self, policy: DumpPolicy) -> None:
+        """Mirror policy fields onto the historical attribute names — the
+        fault-domain machinery (and a lot of external code) reads these."""
+        self.dump_mode = policy.mode
+        self.dump_retries = policy.retries
+        self.retry_backoff_s = policy.retry_backoff_s
+        self.dump_deadline_s = policy.deadline_s
+        self.delta_fail_threshold = policy.delta_fail_threshold
+        self.degraded_probe_every = policy.degraded_probe_every
+
+    def apply_policy(self, policy: DumpPolicy) -> None:
+        """Re-point this DeltaCR at a new :class:`DumpPolicy`.
+
+        Selection, retry, deadline, degraded-mode, predictor, and fused-path
+        knobs take effect on the next dump (the selector restarts with empty
+        calibration).  Pipeline *topology* — stream engine, capacity,
+        generation budget — is fixed at construction; changing those fields
+        here only affects behavior if a pipeline exists for the new mode.
+        """
+        if not isinstance(policy, DumpPolicy):
+            raise TypeError(f"expected DumpPolicy, got {type(policy).__name__}")
+        self.policy = policy
+        self.selector = ModeSelector(policy)
+        self._bind_policy_knobs(policy)
+        if self.pipeline is not None:
+            self.pipeline.fused = policy.fused_kernel
+            self.pipeline.fused_verify = policy.fused_verify
 
     @property
     def _dump_executor(self) -> _SupervisedWorker:
@@ -712,6 +776,21 @@ class DeltaCR:
         clean, kernel, full = out.clean_keys, out.kernel_keys, out.full_keys
         res = out.res
         wall_ms = (time.perf_counter() - t0) * 1e3
+        # Measured dirty fraction: chunks actually written over total chunks
+        # in the image.  Only meaningful against a parent (a root image
+        # writes everything by construction) — the selector's calibration
+        # and the prediction-error stats are gated the same way.
+        total_chunks = sum(len(m.chunk_ids) for m in entries.values())
+        actual_frac = (
+            dirtied / total_chunks if (parent is not None and total_chunks) else None
+        )
+        self.selector.observe(
+            mode=mode,
+            hint=out.hint_frac,
+            actual=actual_frac,
+            wall_ms=wall_ms,
+            fell_back=out.fell_back,
+        )
         image_id = self.images.allocate_image_id()
         image = DumpImage(
             image_id=image_id,
@@ -721,6 +800,8 @@ class DeltaCR:
             dump_bytes=self.store.stats.bytes_written - bytes_before,
             wall_ms=wall_ms,
             mode=mode,
+            predicted_dirty_frac=out.pred_frac,
+            actual_dirty_frac=actual_frac,
             streamed=bool(res is not None and res.streamed),
             stream_windows=res.windows if res is not None else 0,
             stream_window_bytes=res.window_bytes if res is not None else 0,
@@ -748,8 +829,12 @@ class DeltaCR:
             self.stats.dumps += 1
             self.stats.dump_dirty_chunks += dirtied
             self.stats.dump_bytes += image.dump_bytes
-            if mode == "delta":
-                self.stats.delta_dumps += 1
+            if mode in ("delta", "copy"):
+                self.stats.delta_dumps += 1     # dumps through the pipeline
+            self.stats.mode_dumps[mode] = self.stats.mode_dumps.get(mode, 0) + 1
+            if actual_frac is not None and out.pred_frac is not None:
+                self.stats.pred_err_sum += abs(actual_frac - out.pred_frac)
+                self.stats.pred_err_n += 1
             self.stats.clean_keys += clean
             self.stats.kernel_keys += kernel
             self.stats.full_keys += full
@@ -768,35 +853,65 @@ class DeltaCR:
         cancel: Optional[threading.Event],
     ) -> _EncodeOutcome:
         """Encode with bounded retries, a per-dump deadline, and graceful
-        degradation: primary path (delta pipeline or digest) first, and after
-        it exhausts its retries the legacy full path — so a checkpoint lands
-        unless even full serialization fails, in which case the caller aborts
-        the ticket loudly.  Every failed attempt has rolled back its own
-        chunk references before the next one starts."""
+        degradation: primary path (delta pipeline, full-grid copy, or digest)
+        first, and after it exhausts its retries the legacy full path — so a
+        checkpoint lands unless even full serialization fails, in which case
+        the caller aborts the ticket loudly.  Every failed attempt has rolled
+        back its own chunk references before the next one starts.
+
+        Mode ``"auto"`` picks the primary *per dump*: the selector predicts
+        the dirty fraction (state hint × calibrated ratio, blended with the
+        lineage EWMA) and chooses delta below the crossover, the full-grid
+        copy path above it.  An uncalibrated predictor never overrides the
+        delta default — the first dumps of a lineage behave exactly like
+        forced ``"delta"``, and only observed evidence flips later dumps."""
         deadline = (
             time.monotonic() + self.dump_deadline_s
             if self.dump_deadline_s is not None
             else None
         )
         delta_capable = (
-            self.dump_mode == "auto"
+            self.dump_mode in ("auto", "delta")
             and self.pipeline is not None
             and hasattr(dump_src, "delta_generation")
         )
+        hint = dirty_fraction_hint(dump_src)
+        pred: Optional[float] = None
+        if self.dump_mode == "auto":
+            if self.policy.predictor and parent is not None:
+                # Parent-less dumps write everything regardless of mode —
+                # predicting for them would only poison the calibration.
+                pred = self.selector.predict(hint)
+                choice = self.selector.choose(
+                    delta_capable=delta_capable, hint=hint, pred=pred
+                )
+            else:
+                choice = "delta" if delta_capable else "digest"
+        elif self.dump_mode == "delta":
+            choice = "delta" if delta_capable else "digest"
+        elif self.dump_mode == "digest":
+            choice = "digest"
+        else:
+            choice = "legacy"
         primary: Optional[Tuple[str, Callable[[], _EncodeOutcome]]] = None
-        if delta_capable:
+        if choice in ("delta", "copy"):
             if not self._skip_delta_while_degraded():
+                use_base = choice == "delta"
                 primary = (
-                    "delta",
-                    lambda: self._delta_attempt(dump_src, parent, priority, cancel, deadline),
+                    choice,
+                    lambda: self._delta_attempt(
+                        dump_src, parent, priority, cancel, deadline,
+                        use_base=use_base,
+                    ),
                 )
             # else: degraded — go straight to the legacy full path below,
-            # probing the delta path again every degraded_probe_every dumps
-        elif self.dump_mode in ("auto", "digest"):
+            # probing the pipeline again every degraded_probe_every dumps
+        elif choice == "digest":
             primary = (
                 "digest",
                 lambda: self._digest_attempt(ckpt_id, dump_src, parent, cancel),
             )
+        fell_back = False
         if primary is not None:
             what, attempt = primary
             try:
@@ -804,14 +919,17 @@ class DeltaCR:
             except StreamCancelled:
                 raise
             except Exception as exc:
-                if what == "delta":
+                if what in ("delta", "copy"):
                     self._note_delta_failure(parent)
                 with self.stats.lock:
                     self.stats.fallback_dumps += 1
                 last_error = exc
+                fell_back = True
             else:
-                if what == "delta":
+                if what in ("delta", "copy"):
                     self._note_delta_ok()
+                out.pred_frac = pred
+                out.hint_frac = hint
                 return out
         else:
             last_error = None
@@ -820,7 +938,7 @@ class DeltaCR:
         # the (already blown) deadline: the goal now is to *land*.  If it
         # also fails, raise the legacy error chained on the primary one.
         try:
-            return self._retrying(
+            out = self._retrying(
                 lambda: self._legacy_attempt(ckpt_id, dump_src, parent, cancel),
                 what="legacy", deadline=None, cancel=cancel,
             )
@@ -830,6 +948,10 @@ class DeltaCR:
             if last_error is not None:
                 raise exc from last_error
             raise
+        out.pred_frac = pred
+        out.hint_frac = hint
+        out.fell_back = fell_back
+        return out
 
     def _retrying(
         self,
@@ -873,6 +995,8 @@ class DeltaCR:
         priority: str,
         cancel: Optional[threading.Event],
         deadline: Optional[float],
+        *,
+        use_base: bool = True,
     ) -> _EncodeOutcome:
         gen = dump_src.delta_generation(self.store.chunk_bytes)  # type: ignore[attr-defined]
         deadline_evt: Optional[threading.Event] = None
@@ -893,7 +1017,8 @@ class DeltaCR:
             eff_cancel = _EitherEvent(cancel, deadline_evt)
         try:
             res = self.pipeline.encode_generation(  # type: ignore[union-attr]
-                gen, parent, cancel=eff_cancel, priority=priority
+                gen, parent, cancel=eff_cancel, priority=priority,
+                use_base=use_base,
             )
         except StreamCancelled:
             if cancel is not None and cancel.is_set():
@@ -909,7 +1034,7 @@ class DeltaCR:
         return _EncodeOutcome(
             entries=res.entries,
             dirtied=res.dirtied,
-            mode="delta",
+            mode="delta" if use_base else "copy",
             anchor_views=gen.views,
             clean_keys=res.clean_keys,
             kernel_keys=res.kernel_keys,
@@ -1216,7 +1341,18 @@ class DeltaCR:
                 "degraded_dumps": self.stats.degraded_dumps,
                 "deadline_trips": self.stats.deadline_trips,
                 "cancelled_dumps": self.stats.cancelled_dumps,
+                # adaptive-mode observability
+                "mode_histogram": dict(self.stats.mode_dumps),
+                "dirty_pred_mae": (
+                    self.stats.pred_err_sum / self.stats.pred_err_n
+                    if self.stats.pred_err_n
+                    else None
+                ),
+                "dirty_pred_samples": self.stats.pred_err_n,
             }
+        h["selector"] = self.selector.snapshot()
+        if self.pipeline is not None:
+            h["fused_checksum_mismatches"] = self.pipeline.fused_checksum_mismatches
         h["degraded"] = self._degraded
         h["worker_deaths"] = self._dump_worker.deaths
         h["worker_restarts"] = self._dump_worker.restarts

@@ -73,6 +73,7 @@ FAULT_POINTS: Tuple[str, ...] = (
     "chunk_store.put",        # ChunkStore._put_locked, before any mutation
     "chunk_store.get",        # ChunkStore.get read path (supports "corrupt")
     "stream.drain",           # drain-pool window body (device fetch/hash)
+    "kernels.fused",          # fused-kernel drain, post-fetch / pre-verify
     "dump.worker",            # each dump encode attempt on the FIFO worker
     "template.fork",          # DeltaCR.checkpoint/restore template fork
     "persist.blob_write",     # persist._write_atomic, before the temp write

@@ -43,6 +43,7 @@ import numpy as np
 from . import faults
 from .chunk_store import ChunkStore
 from .deltacr import CowArrayState, DeltaCR, DumpImage
+from .policy import DumpPolicy
 from .deltafs import DeltaFS, LayerConfig, LayerStore, TensorMeta
 from .state_manager import Sandbox, StateManager
 
@@ -537,6 +538,7 @@ def recover(
     restore_fn=None,
     template_pool_size: int = 8,
     stream: bool = True,
+    policy=None,
     auto_restore: bool = True,
     action_applier=None,
 ) -> RecoveredState:
@@ -608,11 +610,13 @@ def recover(
         lid_map[int(layer_doc["id"])] = layer.layer_id
 
     # ---- DeltaCR + images ------------------------------------------------
+    if policy is None:
+        policy = DumpPolicy(stream=stream)
     cr = DeltaCR(
         store,
         template_pool_size=template_pool_size,
         restore_fn=restore_fn if restore_fn is not None else (lambda p: CowArrayState(p)),
-        stream=stream,
+        policy=policy,
     )
     for img_doc in doc["images"]:
         img_entries = {}

@@ -92,12 +92,17 @@ class SandboxTree:
     views over the same :class:`LayerStore`.
     """
 
-    def __init__(self, sm: StateManager):
+    def __init__(self, sm: StateManager, *, dump_policy=None):
         fs = sm.sandbox.fs
         if not isinstance(fs, NamespaceView):
             raise TypeError("SandboxTree requires a NamespaceView-backed sandbox fs")
         self.sm = sm
         self.cr = sm.deltacr
+        if dump_policy is not None:
+            # The tree is the lineage's dump-heavy consumer (fan-out forks,
+            # commit checkpoints): it may re-point the shared DeltaCR at a
+            # DumpPolicy tuned for that shape (e.g. DumpPolicy.latency()).
+            self.cr.apply_policy(dump_policy)
         self.layers: LayerStore = fs.layers
         self._lock = threading.RLock()
         self._children: Dict[int, _Child] = {}

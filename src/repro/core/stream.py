@@ -120,6 +120,12 @@ class StreamStats:
         """sum-of-stages over wall: 1.0 = no overlap, >1 = real overlap."""
         return self.stage_sum_ms / self.wall_ms if self.wall_ms > 0 else 1.0
 
+    @property
+    def overlap_ms(self) -> float:
+        """Wall time hidden by the ping-pong: stage work that ran while
+        another stage held the clock.  0 for a fully serial dump."""
+        return max(0.0, self.stage_sum_ms - self.wall_ms)
+
 
 @dataclass
 class GateStats:
@@ -258,6 +264,13 @@ class ChunkStreamEngine:
         self._drain = self._new_pool()
         self._shut = False
         self.pool_restarts = 0           # drain pools respawned by supervision
+        # Cumulative overlap accounting across completed streamed dumps —
+        # the double-buffer validation surface: the fused encode path starts
+        # its device→host fetches at encode time, so the drain stage's wall
+        # should hide behind encode/commit and push aggregate efficiency >1.
+        self.dumps_streamed = 0
+        self._stage_sum_ms = 0.0
+        self._wall_sum_ms = 0.0
         # EWMA of the bottleneck stage's ms-per-MiB over completed dumps;
         # None until the first successful streamed dump seeds it.  Touched
         # only by DeltaCR's single dump worker — no lock needed.
@@ -289,6 +302,14 @@ class ChunkStreamEngine:
         else:
             a = self.cfg.ewma_alpha
             self._ewma_ms_per_mib = a * ms_per_mib + (1 - a) * self._ewma_ms_per_mib
+
+    def overlap_efficiency(self) -> float:
+        """Aggregate sum-of-stages over wall across completed streamed dumps
+        (1.0 = serial, >1 = stages genuinely overlapped).  The fused-path
+        double-buffer test asserts on this; health endpoints may poll it."""
+        if self._wall_sum_ms <= 0:
+            return 1.0
+        return self._stage_sum_ms / self._wall_sum_ms
 
     # ------------------------------------------------------------------ api
     def should_stream(self, items: Sequence[WindowItem]) -> bool:
@@ -380,6 +401,9 @@ class ChunkStreamEngine:
             raise StreamCancelled(
                 f"dump stream cancelled after {len(results)}/{len(items)} tensors"
             )
+        self.dumps_streamed += 1
+        self._stage_sum_ms += stats.stage_sum_ms
+        self._wall_sum_ms += stats.wall_ms
         self._observe(stats, total_weight)
         return stats
 

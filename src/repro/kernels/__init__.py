@@ -10,15 +10,26 @@ Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec), with the
 jit'd wrappers in ``ops.py`` and pure-jnp oracles in ``ref.py``.
 """
 from . import ops, ref
-from .ops import delta_apply, delta_compact, delta_diff, delta_encode, page_copy, paged_attention
+from .ops import (
+    chunk_checksums_host,
+    delta_apply,
+    delta_compact,
+    delta_diff,
+    delta_encode,
+    fused_encode,
+    page_copy,
+    paged_attention,
+)
 
 __all__ = [
     "ops",
     "ref",
+    "chunk_checksums_host",
     "delta_apply",
     "delta_compact",
     "delta_diff",
     "delta_encode",
+    "fused_encode",
     "page_copy",
     "paged_attention",
 ]

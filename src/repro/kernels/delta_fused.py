@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused diff + compaction + checksum for delta dumps.
+
+The pre-fusion dump path touched every dirty byte three times: once in
+``delta_diff`` (dirty bitmap), once in the compaction gather, and once for
+the integrity digest.  This kernel does all three in a single pass over the
+generation grids, so dirty bytes cross the memory hierarchy exactly once:
+
+* per grid block, compare old vs new and reduce to a per-row dirty flag;
+* scatter each dirty row into the next free slot of a fixed-capacity
+  compaction buffer (ascending row order, deterministic — bit-identical to
+  ``ref.delta_compact_ref``);
+* emit 4-lane uint32 checksums of the row bytes in the same pass
+  (``ref.chunk_checksums_ref`` formulas) so the host can validate the
+  DMA'd bytes without re-reading the device grid.
+
+The grid walks blocks sequentially (TPU grid semantics), carrying the
+compaction cursor in the SMEM count output — revisited every step via a
+constant index_map, exactly the accumulation pattern the Pallas guide
+documents.  ``count`` totals ALL dirty rows, so ``count > max_changed``
+signals capacity overflow (the caller falls back to a full-grid dump).
+
+VMEM note: the compaction buffer lives in VMEM for the whole launch, so
+callers bound ``max_changed * chunk_bytes`` (the pipeline falls back to the
+unfused two-kernel path past its VMEM budget).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import CHECKSUM_LANES, chunk_checksums_ref
+
+__all__ = ["delta_fused"]
+
+
+def _fused_kernel(old_ref, new_ref, data_ref, idx_ref, cnt_ref, sums_ref, *, cap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # zero-filled unused slots / -1 idx padding: bit-identical layout to
+        # the jnp oracle, so parity tests compare whole buffers
+        data_ref[...] = jnp.zeros(data_ref.shape, data_ref.dtype)
+        idx_ref[...] = jnp.full(idx_ref.shape, -1, jnp.int32)
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.uint32)
+        cnt_ref[0, 0] = 0
+
+    old = old_ref[...]
+    new = new_ref[...]
+    B = old.shape[0]
+    # one read of old+new: dirty reduction and the checksum lanes share it
+    dirty = jnp.max((old != new).astype(jnp.int32), axis=1)      # (B,)
+    sums = chunk_checksums_ref(new)                              # (B, LANES)
+
+    def _row(j, cnt):
+        d = dirty[j]
+
+        @pl.when((d > 0) & (cnt < cap))
+        def _emit():
+            data_ref[pl.ds(cnt, 1), :] = jax.lax.dynamic_slice_in_dim(new, j, 1, axis=0)
+            idx_ref[pl.ds(cnt, 1), :] = jnp.full((1, 1), i * B + j, jnp.int32)
+            sums_ref[pl.ds(cnt, 1), :] = jax.lax.dynamic_slice_in_dim(sums, j, 1, axis=0)
+
+        return cnt + d                 # count every dirty row, past cap too
+
+    cnt_ref[0, 0] = jax.lax.fori_loop(0, B, _row, cnt_ref[0, 0])
+
+
+def delta_fused(
+    old: jax.Array,     # (N, C)
+    new: jax.Array,     # (N, C)
+    *,
+    max_changed: int,
+    chunk_block: int = 8,
+    interpret: bool = False,
+):
+    """Fused diff+compact+checksum: (data, idx, count, sums).
+
+    Same contract as ``ref.fused_encode_ref`` — data (max_changed, C) with
+    dirty rows in ascending order, idx (max_changed,) int32 (-1 padding),
+    count () int32 over all dirty rows, sums (max_changed, CHECKSUM_LANES)
+    uint32 zeroed on unused slots.
+    """
+    assert old.shape == new.shape and old.dtype == new.dtype
+    N, C = old.shape
+    cap = int(max_changed)
+    assert cap >= 1
+    block = min(chunk_block, N)
+    if N % block:
+        # pad with identical zero rows: never dirty, never emitted
+        pad = ((0, block - N % block), (0, 0))
+        old = jnp.pad(old, pad)
+        new = jnp.pad(new, pad)
+    grid = (pl.cdiv(old.shape[0], block),)
+    data, idx, count, sums = pl.pallas_call(
+        lambda *refs: _fused_kernel(*refs, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, C), lambda i: (i, 0)),
+            pl.BlockSpec((block, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap, C), lambda i: (0, 0)),
+            pl.BlockSpec((cap, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((cap, CHECKSUM_LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap, C), new.dtype),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap, CHECKSUM_LANES), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(old, new)
+    return data, idx[:, 0], count[0, 0], sums

@@ -29,9 +29,11 @@ import numpy as np
 from . import ref as _ref
 from .delta_apply import delta_apply as _delta_apply_kernel
 from .delta_diff import delta_diff as _delta_diff_kernel
+from .delta_fused import delta_fused as _delta_fused_kernel
 from .page_copy import page_copy as _page_copy_kernel
 from .page_copy import page_copy_stacked as _page_copy_stacked_kernel
 from .paged_attention import paged_attention as _paged_attention_kernel
+from .ref import CHECKSUM_LANES
 
 __all__ = [
     "paged_attention",
@@ -41,9 +43,12 @@ __all__ = [
     "delta_apply",
     "delta_compact",
     "delta_encode",
+    "fused_encode",
+    "chunk_checksums_host",
     "device_fetch",
     "start_host_fetch",
     "use_interpret",
+    "CHECKSUM_LANES",
 ]
 
 
@@ -141,6 +146,51 @@ def delta_encode(old, new, max_changed: int):
         else _ref.delta_diff_ref(old, new)
     )
     return _ref.delta_compact_ref(new, dirty, max_changed)
+
+
+@functools.partial(jax.jit, static_argnames=("max_changed",))
+def fused_encode(old, new, max_changed: int):
+    """diff + compact + checksum in ONE kernel pass: (data, idx, count, sums).
+
+    The adaptive dump pipeline's fused hot path — dirty bytes are read once
+    on device and come back with 4-lane uint32 integrity checksums
+    (``ref.chunk_checksums_ref`` lanes) that the drain stage can verify
+    against the DMA'd bytes on host.  Contract (shapes, slot order, -1 idx
+    padding, count-over-capacity overflow signal) is identical to
+    ``delta_encode`` plus the sums output; ``ref.fused_encode_ref`` is the
+    bit-exact oracle.
+    """
+    if not _use_kernel():
+        return _ref.fused_encode_ref(old, new, max_changed)
+    return _delta_fused_kernel(
+        old, new, max_changed=max_changed, interpret=use_interpret()
+    )
+
+
+# numpy mirror constants of ref.chunk_checksums_ref — kept in lockstep
+_CS_MULT = np.uint32(2654435761)
+_CS_ADD = np.uint32(40503)
+_CS_XOR = np.uint32(2246822519)
+
+
+def chunk_checksums_host(chunks: np.ndarray) -> np.ndarray:
+    """Numpy mirror of ``ref.chunk_checksums_ref``: (N, C) → (N, 4) uint32.
+
+    Used by the dump drain stage to validate fetched fused-kernel rows
+    against the device-computed lanes without a jax round-trip — one
+    vectorized pass at host memory bandwidth.
+    """
+    x = np.ascontiguousarray(chunks).astype(np.uint32)
+    if x.ndim == 1:
+        x = x[None, :]
+    C = x.shape[-1]
+    pos = np.arange(C, dtype=np.uint32)[None, :]
+    w = pos * _CS_MULT + _CS_ADD
+    s0 = np.sum(x, axis=-1, dtype=np.uint32)
+    s1 = np.sum(x * (pos + np.uint32(1)), axis=-1, dtype=np.uint32)
+    s2 = np.sum(x * w, axis=-1, dtype=np.uint32)
+    s3 = np.sum((x + np.uint32(1)) * (w ^ _CS_XOR), axis=-1, dtype=np.uint32)
+    return np.stack([s0, s1, s2, s3], axis=-1)
 
 
 def start_host_fetch(*arrays) -> None:

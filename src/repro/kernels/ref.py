@@ -21,7 +21,22 @@ __all__ = [
     "delta_diff_ref",
     "delta_apply_ref",
     "delta_compact_ref",
+    "chunk_checksums_ref",
+    "fused_encode_ref",
+    "CHECKSUM_LANES",
 ]
+
+# 4-lane vectorized integrity checksum over chunk bytes (uint32 wraparound).
+# NOT a content-address: the chunk store's dedupe/verify key stays blake2b
+# (see chunk_store.chunk_digest).  These lanes exist so the fused dump
+# kernel can emit a digest of every dirty chunk in the same pass that diffs
+# and compacts it — the host then validates the DMA'd bytes against the
+# device-computed lanes (bitrot/truncation on the device→host path), and
+# the kernel-vs-oracle parity suite asserts them bit-exactly.
+CHECKSUM_LANES = 4
+_CS_MULT = 2654435761        # Knuth multiplicative-hash constant
+_CS_ADD = 40503
+_CS_XOR = 2246822519
 
 
 def paged_attention_ref(
@@ -110,6 +125,47 @@ def delta_compact_ref(
         jnp.arange(N, dtype=jnp.int32), mode="drop"
     )
     return data[:max_changed], idx[:max_changed], count
+
+
+def chunk_checksums_ref(chunks: jax.Array) -> jax.Array:
+    """Per-row 4-lane uint32 checksums of an (N, C) chunk grid.
+
+    Pure elementwise-multiply + row-sum in uint32 (wraparound) — the exact
+    formulas the fused Pallas kernel evaluates per block, and mirrored in
+    numpy by ``ops.chunk_checksums_host``.  Lane 0 is order-insensitive;
+    lanes 1-3 weight by byte position so transpositions and shifts change
+    the value.  Returns (N, CHECKSUM_LANES) uint32.
+    """
+    x = chunks.astype(jnp.uint32)
+    C = x.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (1, C), 1)
+    w = pos * jnp.uint32(_CS_MULT) + jnp.uint32(_CS_ADD)
+    s0 = jnp.sum(x, axis=-1, dtype=jnp.uint32)
+    s1 = jnp.sum(x * (pos + jnp.uint32(1)), axis=-1, dtype=jnp.uint32)
+    s2 = jnp.sum(x * w, axis=-1, dtype=jnp.uint32)
+    s3 = jnp.sum((x + jnp.uint32(1)) * (w ^ jnp.uint32(_CS_XOR)), axis=-1, dtype=jnp.uint32)
+    return jnp.stack([s0, s1, s2, s3], axis=-1)
+
+
+def fused_encode_ref(
+    old: jax.Array,          # (N, C)
+    new: jax.Array,          # (N, C)
+    max_changed: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused dump kernel: diff + compact + checksum.
+
+    Returns (data (max_changed, C), idx (max_changed,) int32 with -1
+    padding, count () int32 of ALL dirty rows — count > max_changed means
+    capacity overflow — and sums (max_changed, CHECKSUM_LANES) uint32,
+    zeroed on unused slots).  Identical slot contents and ordering to
+    ``delta_compact_ref``; the checksum of each valid slot is over the
+    compacted row bytes.
+    """
+    dirty = delta_diff_ref(old, new)
+    data, idx, count = delta_compact_ref(new, dirty, max_changed)
+    sums = chunk_checksums_ref(data)
+    sums = jnp.where((idx >= 0)[:, None], sums, jnp.uint32(0))
+    return data, idx, count, sums
 
 
 def delta_apply_ref(

@@ -432,6 +432,19 @@ class PagedSession:
     def dirty_tracking_base(self):
         return self._dirty_base if self._dirty_pages is not None else None
 
+    def dirty_fraction_hint(self) -> Optional[float]:
+        """Fraction of active page positions written since the last
+        mark-clean; None when tracking is invalid.  An upper bound on the
+        per-grid dirty fraction (the adaptive selector's ratio calibration
+        absorbs the scale), used to pick the dump mode per checkpoint."""
+        if self._dirty_pages is None:
+            return None
+        n = self.n_pages
+        if n == 0:
+            return 0.0
+        dirty = sum(1 for pos in self._dirty_pages if pos < n)
+        return min(dirty / n, 1.0)
+
     # ------------------------------------------------------- ForkableState
     def fork(self) -> "PagedSession":
         self.pool.incref(self.active_pages())

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.deltacr import DeltaCR
 from repro.core.persist import PersistencePlane
+from repro.core.policy import DumpPolicy
 from repro.core.stream import DumpGate
 
 from .engine import Engine, SamplingParams
@@ -77,6 +78,12 @@ class SchedulerConfig:
     #   "raise" — count it and re-raise to the caller (strict deployments)
     dump_timeout_s: float = 120.0
     dump_timeout_policy: str = "defer"   # "defer" | "raise"
+    # -- dump policy -----------------------------------------------------
+    # When set, the scheduler re-points its DeltaCR at this DumpPolicy on
+    # construction (Scheduler owns the dump QoS surface; the selection /
+    # retry / deadline / fused knobs ride along the same way).  None keeps
+    # whatever policy the DeltaCR was built with.
+    dump_policy: Optional[DumpPolicy] = None
     # -- persistence plane -----------------------------------------------
     # When set, the scheduler commits a crash-consistent manifest snapshot
     # (suspended-session map + DeltaCR image store) every time a coalesced
@@ -122,6 +129,8 @@ class Scheduler:
             raise ValueError(
                 f"unknown dump_timeout_policy {self.cfg.dump_timeout_policy!r}"
             )
+        if self.cfg.dump_policy is not None:
+            self.cr.apply_policy(self.cfg.dump_policy)
         self.step_count = 0
         self.suspensions = 0
         self.resumes = 0

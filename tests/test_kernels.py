@@ -119,3 +119,80 @@ def test_delta_roundtrip_property(n_chunks, c_scale, dirty_frac):
     rebuilt = ops.delta_apply(old, data, idx)
     np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(new))
     assert int(count) == int(mask.sum())
+
+
+# ------------------------------------------------------------- fused encode
+@pytest.mark.parametrize("N,C,block", [(8, 128, 8), (37, 256, 8), (5, 64, 8), (64, 512, 16)])
+def test_fused_encode_sweep(N, C, block):
+    """Fused diff+compact+checksum kernel vs the jnp oracle, bit for bit."""
+    from repro.kernels.delta_fused import delta_fused
+
+    old = _rand((N, C), jnp.float32)
+    n_dirty = max(1, N // 3)
+    rows = jnp.asarray(RNG.choice(N, size=n_dirty, replace=False), jnp.int32)
+    new = old.at[rows].add(jnp.ones((n_dirty, C), jnp.float32))
+    cap = n_dirty + 2
+    data, idx, count, sums = delta_fused(
+        old, new, max_changed=cap, chunk_block=block, interpret=True
+    )
+    rdata, ridx, rcount, rsums = ref.fused_encode_ref(old, new, cap)
+    assert int(count) == int(rcount) == n_dirty
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(data), np.asarray(rdata))
+    np.testing.assert_array_equal(np.asarray(sums), np.asarray(rsums))
+    # and the delta still applies back to new
+    rebuilt = ops.delta_apply(old, data, idx)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(new))
+
+
+def test_fused_encode_overflow_signals_count():
+    old = jnp.zeros((16, 64), jnp.float32)
+    new = old + 1.0                       # all dirty
+    data, idx, count, sums = ops.fused_encode(old, new, 4)
+    assert int(count) == 16               # true count: caller detects overflow
+    assert int((np.asarray(idx) >= 0).sum()) == 4
+
+
+def test_fused_checksums_match_host_mirror():
+    """Device checksum lanes == numpy mirror over the fetched bytes.
+
+    The checksum contract is over uint8 byte-grids — exactly what the dump
+    pipeline feeds the fused kernel (ChunkedView grids are always uint8)."""
+    rng = np.random.default_rng(7)
+    old = jnp.asarray(rng.integers(0, 256, (12, 256), dtype=np.uint8))
+    new_np = np.asarray(old).copy()
+    new_np[[1, 4, 7]] ^= 0xA5
+    new = jnp.asarray(new_np)
+    data, idx, count, sums = ops.fused_encode(old, new, 6)
+    valid = np.asarray(idx) >= 0
+    want = ops.chunk_checksums_host(np.asarray(data)[valid])
+    np.testing.assert_array_equal(want, np.asarray(sums)[valid])
+    # corrupting one byte breaks at least one lane
+    tampered = np.asarray(data)[valid].copy()
+    tampered[0, 0] ^= 0x01
+    assert (ops.chunk_checksums_host(tampered) != want).any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 6), st.floats(0.0, 1.0))
+def test_fused_encode_property(n_chunks, c_scale, dirty_frac):
+    """fused_encode == delta_encode + checksums for random dirt patterns
+    over uint8 byte-grids (the pipeline's actual input shape)."""
+    C = 64 * c_scale
+    rng = np.random.default_rng(n_chunks * 7919 + c_scale)
+    old_np = rng.integers(0, 256, (n_chunks, C), dtype=np.uint8)
+    mask = rng.random(n_chunks) < dirty_frac
+    new_np = old_np.copy()
+    new_np[mask] ^= 0x5A
+    old, new = jnp.asarray(old_np), jnp.asarray(new_np)
+    fdata, fidx, fcount, fsums = ops.fused_encode(old, new, n_chunks)
+    udata, uidx, ucount = ops.delta_encode(old, new, max_changed=n_chunks)
+    assert int(fcount) == int(ucount) == int(mask.sum())
+    np.testing.assert_array_equal(np.asarray(fidx), np.asarray(uidx))
+    np.testing.assert_array_equal(np.asarray(fdata), np.asarray(udata))
+    valid = np.asarray(fidx) >= 0
+    if valid.any():
+        np.testing.assert_array_equal(
+            np.asarray(fsums)[valid],
+            ops.chunk_checksums_host(np.asarray(fdata)[valid]),
+        )
