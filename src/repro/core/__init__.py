@@ -26,6 +26,16 @@ from .chunk_store import (
     ChunkStoreStats,
     RepairStats,
 )
+from .chunk_backend import (
+    ChunkBackend,
+    ColdBackend,
+    DirObjectClient,
+    TierManager,
+    TierStats,
+    WarmBackend,
+    make_local_tiers,
+    tier_key,
+)
 from .faults import FaultError, FaultPlan, FaultSpec, WorkerKilled
 from .delta_pipeline import (
     ChunkedView,
@@ -50,9 +60,11 @@ from .gc import reachability_gc, recency_gc
 from .image_store import ImageRef, ImageStore, ImageStoreStats
 from .npd import InferenceProxy, ProxyRequest
 from .persist import (
+    DigestIndex,
     PersistencePlane,
     RecoveredState,
     RecoverError,
+    compact_state,
     find_chunk_by_digest,
     load_store,
     recover,
@@ -67,6 +79,14 @@ __all__ = [
     "ChunkStore",
     "ChunkStoreStats",
     "RepairStats",
+    "ChunkBackend",
+    "ColdBackend",
+    "DirObjectClient",
+    "TierManager",
+    "TierStats",
+    "WarmBackend",
+    "make_local_tiers",
+    "tier_key",
     "FaultError",
     "FaultPlan",
     "FaultSpec",
@@ -103,9 +123,11 @@ __all__ = [
     "ImageStore",
     "ImageStoreStats",
     "InferenceProxy",
+    "DigestIndex",
     "PersistencePlane",
     "RecoverError",
     "RecoveredState",
+    "compact_state",
     "load_store",
     "recover",
     "save_state",

@@ -46,11 +46,15 @@ from __future__ import annotations
 import hashlib
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import numpy as np
 
 from . import faults
+from .chunk_backend import tier_key
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .chunk_backend import TierManager
 
 __all__ = [
     "ChunkCorruptionError",
@@ -144,11 +148,16 @@ RepairSource = Callable[[int, bytes, int], Optional[bytes]]
 
 @dataclass
 class _Chunk:
-    data: bytes
+    # ``data is None`` means the payload is demoted: resident on ``tier``
+    # (warm/cold) under its content address, faulted back on the next get.
+    data: Optional[bytes]
     refs: int = 1
     digest: Optional[bytes] = None
     pad: int = 0  # trailing zero-pad bytes (last chunk of a tensor)
     quarantined: bool = False
+    size: int = 0                # payload length (stable across demotion)
+    tier: str = "hot"            # "hot" | "warm" | "cold"
+    last_use: int = 0            # recency tick (LRU demotion signal)
 
 
 class ChunkStore:
@@ -165,6 +174,7 @@ class ChunkStore:
         chunk_bytes: int = 64 * 1024,
         dedupe: bool = True,
         verify_reads: bool = False,
+        tiers: Optional["TierManager"] = None,
     ):
         if chunk_bytes <= 0:
             raise ValueError("chunk_bytes must be positive")
@@ -178,6 +188,13 @@ class ChunkStore:
         self._repair_sources: List[RepairSource] = []
         self.stats = ChunkStoreStats()
         self.repair_stats = RepairStats()
+        # -- tiering ------------------------------------------------------
+        # Only digest-carrying chunks are demotable: the content address is
+        # the tier key AND the promotion verifier (a corrupt warm/cold blob
+        # is caught before its bytes are trusted).
+        self._tiers = tiers
+        self._hot_bytes = 0
+        self._tick = 0
 
     # ------------------------------------------------------------------ put
     def put(self, data: bytes, *, pad: int = 0) -> int:
@@ -211,8 +228,10 @@ class ChunkStore:
             return None
         chunk = self._chunks[hit]
         chunk.refs += 1
+        self._tick += 1
+        chunk.last_use = self._tick
         self.stats.dedup_hits += 1
-        self.stats.logical_bytes += len(chunk.data)
+        self.stats.logical_bytes += chunk.size
         return hit
 
     def _put_locked(self, data, digest: Optional[bytes], pad: int) -> int:
@@ -236,7 +255,10 @@ class ChunkStore:
                 return hit
             cid = self._next_id
             self._next_id += 1
-            self._chunks[cid] = _Chunk(data=data, digest=digest, pad=pad)
+            self._tick += 1
+            self._chunks[cid] = _Chunk(
+                data=data, digest=digest, pad=pad, size=len(data), last_use=self._tick
+            )
             if digest is not None and self.dedupe:
                 self._by_digest[(digest, pad)] = cid
             self.stats.chunks_alive += 1
@@ -246,6 +268,9 @@ class ChunkStore:
             self.stats.peak_physical_bytes = max(
                 self.stats.peak_physical_bytes, self.stats.physical_bytes
             )
+            self._hot_bytes += len(data)
+            if self._tiers is not None and self._hot_bytes > self._tiers.hot_capacity_bytes:
+                self._demote_over_capacity_locked()
             return cid
 
     # ------------------------------------------------------------------ get
@@ -256,7 +281,15 @@ class ChunkStore:
                 raise ChunkCorruptionError(
                     cid, f"chunk {cid} is quarantined (digest mismatch, unrepaired)"
                 )
-            data, digest, pad = chunk.data, chunk.digest, chunk.pad
+            self._tick += 1
+            chunk.last_use = self._tick
+            data, digest, pad, tier = chunk.data, chunk.digest, chunk.pad, chunk.tier
+        if data is None:
+            # demoted payload: fault it back from its tier.  Promotion always
+            # digest-verifies (a corrupt cold object must never be trusted),
+            # falling through to the repair sources on a mismatch.
+            assert digest is not None
+            data = self._promote(cid, digest, pad, tier)
         # read seam: a "corrupt" spec models bitrot/transient read errors
         data = faults.fire("chunk_store.get", data)
         if not self.verify_reads or digest is None:
@@ -266,12 +299,157 @@ class ChunkStore:
             return data
         return self._repair_or_quarantine(cid, digest, pad)
 
+    # -------------------------------------------------------------- tiering
+    def _promote(self, cid: int, digest: bytes, pad: int, tier: str) -> bytes:
+        """Fault a demoted payload back to hot, digest-verified."""
+        assert self._tiers is not None
+        key = tier_key(digest, pad)
+        payload = self._tiers.load(key, tier)
+        if (
+            payload is not None
+            and hashlib.blake2b(payload, digest_size=DIGEST_BYTES).digest() == digest
+        ):
+            payload = bytes(payload)
+            with self._lock:
+                chunk = self._chunks.get(cid)
+                if chunk is not None and chunk.data is None:
+                    chunk.data = payload
+                    chunk.tier = "hot"
+                    self._hot_bytes += chunk.size
+            self._tiers.evict(key, tier)
+            self._tiers.stats.promotions += 1
+            with self._lock:
+                if self._hot_bytes > self._tiers.hot_capacity_bytes:
+                    self._demote_over_capacity_locked(exclude=cid)
+            return payload
+        if payload is not None:
+            self._tiers.stats.promote_verify_failures += 1
+        # the tier copy is gone or rotten: retire it and walk repair sources
+        self._tiers.evict(key, tier)
+        self.repair_stats.mismatches += 1
+        healed = self._heal_from_sources(cid, digest, pad)
+        if healed is not None:
+            return healed
+        self._quarantine(cid, digest, pad)
+        raise ChunkCorruptionError(
+            cid,
+            f"chunk {cid}: demoted payload unreadable/corrupt on tier "
+            f"{tier!r} and no repair source could heal it",
+        )
+
+    def _demote_over_capacity_locked(self, exclude: Optional[int] = None) -> None:
+        """Spill LRU hot payloads until hot residency fits the budget.
+
+        Victims are chosen by recency (LRU) with lower-refcount chunks going
+        first among equals — a widely shared base-image chunk stays resident
+        longer than a one-off delta.  Only digest-carrying chunks demote
+        (the content address is the tier key + promotion verifier).
+        Caller holds the store lock; I/O here is the explicit slow path.
+        """
+        tiers = self._tiers
+        if tiers is None or self._hot_bytes <= tiers.hot_capacity_bytes:
+            return
+        victims = sorted(
+            (
+                (c.last_use, c.refs, cid)
+                for cid, c in self._chunks.items()
+                if c.tier == "hot"
+                and c.data is not None
+                and c.digest is not None
+                and not c.quarantined
+                and c.size > 0
+                and cid != exclude
+            ),
+        )
+        for _, _, cid in victims:
+            if self._hot_bytes <= tiers.hot_capacity_bytes:
+                break
+            self._spill_locked(cid)
+        # warm overflow cascades to cold, coldest-LRU first
+        while tiers.warm_over_capacity() > 0:
+            warm = sorted(
+                (c.last_use, cid)
+                for cid, c in self._chunks.items()
+                if c.tier == "warm" and c.digest is not None
+            )
+            if not warm:
+                break
+            sunk_any = False
+            for _, cid in warm:
+                if tiers.warm_over_capacity() <= 0:
+                    break
+                chunk = self._chunks[cid]
+                assert chunk.digest is not None
+                new_tier = tiers.sink(tier_key(chunk.digest, chunk.pad), chunk.tier)
+                if new_tier is not None:
+                    chunk.tier = new_tier
+                    sunk_any = True
+            if not sunk_any:
+                break
+
+    def _spill_locked(self, cid: int) -> bool:
+        chunk = self._chunks[cid]
+        if chunk.data is None or chunk.digest is None or self._tiers is None:
+            return False
+        landed = self._tiers.spill(tier_key(chunk.digest, chunk.pad), chunk.data)
+        if landed is None:
+            return False
+        chunk.tier = landed
+        chunk.data = None
+        self._hot_bytes -= chunk.size
+        return True
+
+    def demote(self, cid: int, *, tier: str = "warm") -> bool:
+        """Explicitly spill one chunk's payload (``tier`` = "warm" | "cold").
+
+        Returns False when the chunk has no digest (not content-addressable)
+        or no tier backend exists.  Policy callers (suspend paths, tests)
+        use this; organic pressure goes through the capacity check."""
+        if self._tiers is None:
+            return False
+        with self._lock:
+            chunk = self._chunks.get(cid)
+            if chunk is None or chunk.quarantined or chunk.digest is None:
+                return False
+            if chunk.data is not None and not self._spill_locked(cid):
+                return False
+            if tier == "cold" and chunk.tier == "warm":
+                sunk = self._tiers.sink(tier_key(chunk.digest, chunk.pad), chunk.tier)
+                if sunk is not None:
+                    chunk.tier = sunk
+            return True
+
+    def tier_of(self, cid: int) -> str:
+        with self._lock:
+            return self._chunks[cid].tier
+
+    def tier_bytes(self) -> Dict[str, int]:
+        """Resident bytes by tier (hot always reported; warm/cold when
+        a TierManager is attached)."""
+        out = {"hot": self._hot_bytes}
+        if self._tiers is not None:
+            out.update(self._tiers.bytes_by_tier())
+        return out
+
+    @property
+    def tiers(self) -> Optional["TierManager"]:
+        return self._tiers
+
     def _repair_or_quarantine(self, cid: int, digest: bytes, pad: int) -> bytes:
         """Digest mismatch on a verified read: heal from a repair source or
         quarantine and fail loudly.  Runs outside the store lock — repair
         sources walk other subsystems (persistence blobs, generation grids).
         """
         self.repair_stats.mismatches += 1
+        healed = self._heal_from_sources(cid, digest, pad)
+        if healed is not None:
+            return healed
+        self._quarantine(cid, digest, pad)
+        raise ChunkCorruptionError(
+            cid, f"chunk {cid}: digest mismatch and no repair source could heal it"
+        )
+
+    def _heal_from_sources(self, cid: int, digest: bytes, pad: int) -> Optional[bytes]:
         for source in list(self._repair_sources):
             try:
                 candidate = source(cid, digest, pad)
@@ -285,14 +463,24 @@ class ChunkStore:
                 with self._lock:
                     chunk = self._chunks.get(cid)
                     if chunk is not None:
-                        delta = len(healed) - len(chunk.data)
+                        old_size = chunk.size
+                        was_resident = chunk.data is not None
+                        delta = len(healed) - old_size
                         if delta:
                             self.stats.physical_bytes += delta
                             self.stats.logical_bytes += delta * chunk.refs
                         chunk.data = healed
+                        chunk.size = len(healed)
                         chunk.quarantined = False
+                        # healed bytes land hot; a stale tier copy was already
+                        # evicted by the promotion path that got us here
+                        chunk.tier = "hot"
+                        self._hot_bytes += len(healed) - (old_size if was_resident else 0)
                 self.repair_stats.repaired += 1
                 return healed
+        return None
+
+    def _quarantine(self, cid: int, digest: bytes, pad: int) -> None:
         with self._lock:
             chunk = self._chunks.get(cid)
             if chunk is not None and not chunk.quarantined:
@@ -300,9 +488,6 @@ class ChunkStore:
                 # retire the dedupe key: never hand the bad bytes to a new put
                 self._by_digest.pop((digest, pad), None)
                 self.repair_stats.quarantined += 1
-        raise ChunkCorruptionError(
-            cid, f"chunk {cid}: digest mismatch and no repair source could heal it"
-        )
 
     # -------------------------------------------------------- repair plumbing
     def attach_repair_source(self, source: RepairSource) -> None:
@@ -320,10 +505,31 @@ class ChunkStore:
         a verified read detects the damage)."""
         with self._lock:
             chunk = self._chunks[cid]
-            if not chunk.data:
+            if chunk.data is not None:
+                if not chunk.data:
+                    return
+                i = byte % len(chunk.data)
+                chunk.data = (
+                    chunk.data[:i] + bytes([chunk.data[i] ^ 0x01]) + chunk.data[i + 1 :]
+                )
                 return
-            i = byte % len(chunk.data)
-            chunk.data = chunk.data[:i] + bytes([chunk.data[i] ^ 0x01]) + chunk.data[i + 1 :]
+            tiers, digest, pad, tier = self._tiers, chunk.digest, chunk.pad, chunk.tier
+        # demoted payload: mangle the tier copy in place so the next
+        # promotion sees rotten bytes (models cold/warm media corruption)
+        if tiers is None or digest is None:
+            return
+        key = tier_key(digest, pad)
+        payload = tiers.load(key, tier)
+        if not payload:
+            return
+        i = byte % len(payload)
+        rotten = payload[:i] + bytes([payload[i] ^ 0x01]) + payload[i + 1 :]
+        tiers.evict(key, tier)
+        tiers.store_for_test(key, rotten, tier)
+
+    def size_of(self, cid: int) -> int:
+        with self._lock:
+            return self._chunks[cid].size
 
     def pad_of(self, cid: int) -> int:
         with self._lock:
@@ -338,7 +544,7 @@ class ChunkStore:
         with self._lock:
             chunk = self._chunks[cid]
             chunk.refs += n
-            self.stats.logical_bytes += n * len(chunk.data)
+            self.stats.logical_bytes += n * chunk.size
 
     def incref_many(self, cids) -> None:
         """Batch incref under one lock acquisition (metadata-reuse hot path)."""
@@ -348,7 +554,7 @@ class ChunkStore:
             for cid in cids:
                 chunk = chunks[cid]
                 chunk.refs += 1
-                logical += len(chunk.data)
+                logical += chunk.size
             self.stats.logical_bytes += logical
 
     def decref(self, cid: int, n: int = 1) -> None:
@@ -369,12 +575,17 @@ class ChunkStore:
         if chunk.refs < n:
             raise RuntimeError(f"chunk {cid}: decref below zero")
         chunk.refs -= n
-        self.stats.logical_bytes -= n * len(chunk.data)
+        self.stats.logical_bytes -= n * chunk.size
         if chunk.refs == 0:
             if chunk.digest is not None:
                 self._by_digest.pop((chunk.digest, chunk.pad), None)
             self.stats.chunks_alive -= 1
-            self.stats.physical_bytes -= len(chunk.data)
+            self.stats.physical_bytes -= chunk.size
+            if chunk.data is not None:
+                self._hot_bytes -= chunk.size
+            elif self._tiers is not None and chunk.digest is not None:
+                # free the demoted copy too: the tier must not leak dead bytes
+                self._tiers.evict(tier_key(chunk.digest, chunk.pad), chunk.tier)
             del self._chunks[cid]
 
     def refs(self, cid: int) -> int:
@@ -418,14 +629,24 @@ class ChunkStore:
                 out.append(data[: len(data) - pad] if pad else data)
             return b"".join(out)
         out = []
+        demoted: List[int] = []
         with self._lock:
-            for cid in ids:
+            for i, cid in enumerate(ids):
                 chunk = self._chunks[cid]
                 if chunk.quarantined:
                     raise ChunkCorruptionError(
                         cid, f"chunk {cid} is quarantined (digest mismatch, unrepaired)"
                     )
+                if chunk.data is None:
+                    out.append(b"")         # placeholder; faulted in below
+                    demoted.append(i)
+                    continue
                 out.append(chunk.data[: len(chunk.data) - chunk.pad] if chunk.pad else chunk.data)
+        for i in demoted:
+            cid = ids[i]
+            data = self.get(cid)            # promotion path: verified fault-in
+            pad = self.pad_of(cid)
+            out[i] = data[: len(data) - pad] if pad else data
         return b"".join(out)
 
     def get_array(

@@ -162,9 +162,17 @@ class LayerStore:
     releases it.
     """
 
-    def __init__(self, store: Optional[ChunkStore] = None, *, chunk_bytes: int = 64 * 1024):
+    def __init__(
+        self,
+        store: Optional[ChunkStore] = None,
+        *,
+        chunk_bytes: int = 64 * 1024,
+        tiers=None,
+    ):
         # explicit None check: an empty ChunkStore is falsy (len 0)
-        self.chunks = store if store is not None else ChunkStore(chunk_bytes=chunk_bytes)
+        self.chunks = (
+            store if store is not None else ChunkStore(chunk_bytes=chunk_bytes, tiers=tiers)
+        )
         self.lock = threading.RLock()
         self._layers: Dict[int, _Layer] = {}
         self._next_layer_id = 1
@@ -553,7 +561,8 @@ class DeltaFS(NamespaceView):
         chunk_bytes: int = 64 * 1024,
         layers: Optional[LayerStore] = None,
         base_config: LayerConfig = (),
+        tiers=None,
     ):
         if layers is None:
-            layers = LayerStore(store, chunk_bytes=chunk_bytes)
+            layers = LayerStore(store, chunk_bytes=chunk_bytes, tiers=tiers)
         super().__init__(layers, base_config=base_config)

@@ -78,6 +78,10 @@ FAULT_POINTS: Tuple[str, ...] = (
     "template.fork",          # DeltaCR.checkpoint/restore template fork
     "persist.blob_write",     # persist._write_atomic, before the temp write
     "persist.manifest_append",  # persist._append_manifest, before the append
+    "persist.pack_write",     # persist chunk-pack writer, before the temp write
+    "persist.index_write",    # persist digest-index append/rewrite
+    "persist.compact",        # persist.compact_state, before any mutation
+    "tier.io",                # chunk_backend tier spill/load (supports "corrupt")
     "kvcache.cow_copy",       # PagePool.materialize CoW batch (supports "corrupt")
     "trainer.step",           # Trainer.run per-step seam (fail_at shim)
 )

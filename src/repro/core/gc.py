@@ -45,6 +45,9 @@ def _fill_stats(sm: StateManager, reclaimed: List[int], stats_out: Optional[Dict
     # in-flight dependent dump — the refcounting plane's deferred frees
     stats_out["deferred_images"] = images.deferred_count()
     stats_out["live_images"] = images.live_count()
+    # resident bytes by storage tier (hot always; warm/cold when the chunk
+    # store has a TierManager attached) — GC pressure feeds demotion policy
+    stats_out["tier_bytes"] = sm.deltacr.store.tier_bytes()
 
 
 def reachability_gc(

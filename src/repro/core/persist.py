@@ -34,6 +34,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import struct
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -48,9 +49,11 @@ from .deltafs import DeltaFS, LayerConfig, LayerStore, TensorMeta
 from .state_manager import Sandbox, StateManager
 
 __all__ = [
+    "DigestIndex",
     "PersistencePlane",
     "RecoveredState",
     "RecoverError",
+    "compact_state",
     "find_chunk_by_digest",
     "recover",
     "save_state",
@@ -60,7 +63,20 @@ __all__ = [
 
 _MAGIC = b"DBOXSNAP1\n"
 _MANIFEST = "MANIFEST"
-_SNAP_VERSION = 1
+_SNAP_VERSION = 1                 # legacy: doc + inline chunk blob per snapshot
+_SNAP_VERSION_V2 = 2              # O(delta): doc-only snaps + shared chunk packs
+_PACK_MAGIC = b"DBOXPACK1\n"
+_CHUNKS_DIR = "chunks"
+_INDEX_NAME = "INDEX"
+_CHUNK_DIGEST_BYTES = 16          # matches ChunkStore.DIGEST_BYTES
+_SAVE_TAIL_BYTES = 256 << 10
+_RECOVER_TAIL_BYTES = 256 << 10
+
+# Observability for the bounded-manifest-read contract: bytes the most
+# recent manifest parse actually read.  Regression tests assert recover()
+# on a multi-MB manifest stays at the tail bound instead of re-reading the
+# whole append-only history.
+LAST_MANIFEST_BYTES_READ = 0
 
 
 class RecoverError(RuntimeError):
@@ -157,24 +173,16 @@ def _write_atomic(path: str, data: bytes) -> None:
 # --------------------------------------------------------------------------
 # snapshot construction
 # --------------------------------------------------------------------------
-def _meta_doc(meta: TensorMeta, chunk_index: Dict[int, int]) -> Dict[str, Any]:
+def _meta_doc(meta: TensorMeta, ref) -> Dict[str, Any]:
+    """``ref(cid)`` maps a live chunk id to its persistent reference —
+    dense blob index (v1) or persistent chunk id (v2)."""
     return {
         "shape": list(meta.shape),
         "dtype": meta.dtype,
-        "chunks": [chunk_index[cid] for cid in meta.chunk_ids],
+        "chunks": [ref(cid) for cid in meta.chunk_ids],
         "digests": [d.hex() for d in meta.digests],
         "trailing_pad": meta.trailing_pad,
     }
-
-
-def _collect_chunks(
-    store: ChunkStore, metas: List[TensorMeta], chunk_index: Dict[int, int], order: List[int]
-) -> None:
-    for meta in metas:
-        for cid in meta.chunk_ids:
-            if cid not in chunk_index:
-                chunk_index[cid] = len(order)
-                order.append(cid)
 
 
 def _durable_nodes(tree: Dict[str, Any], deltacr: DeltaCR) -> Dict[int, Dict[str, Any]]:
@@ -199,15 +207,15 @@ def _durable_nodes(tree: Dict[str, Any], deltacr: DeltaCR) -> Dict[int, Dict[str
     return kept
 
 
-def _snapshot_doc(
+def _build_doc_core(
     sm: Optional[StateManager],
     deltacr: DeltaCR,
     extra: Optional[Dict[str, Any]],
-) -> Tuple[Dict[str, Any], bytes]:
-    """Build the canonical snapshot document + chunk blob."""
+    ref,
+) -> Dict[str, Any]:
+    """Build the format-independent snapshot body (layers/images/tree/
+    anchors); chunk references are produced by ``ref(cid)``."""
     store = deltacr.store
-    chunk_index: Dict[int, int] = {}
-    chunk_order: List[int] = []
 
     # ---- tree + layers (trunk StateManager, when present) ----------------
     tree_doc: Optional[Dict[str, Any]] = None
@@ -237,9 +245,7 @@ def _snapshot_doc(
             assert layer is not None, f"snapshot references dead layer {lid}"
             entries = {}
             for key in sorted(layer.entries):
-                meta = layer.entries[key]
-                _collect_chunks(store, [meta], chunk_index, chunk_order)
-                entries[key] = _meta_doc(meta, chunk_index)
+                entries[key] = _meta_doc(layer.entries[key], ref)
             layers_doc.append(
                 {
                     "id": layer_dense[lid],
@@ -295,9 +301,7 @@ def _snapshot_doc(
             continue
         entries = {}
         for key in sorted(image.entries):
-            meta = image.entries[key]
-            _collect_chunks(store, [meta], chunk_index, chunk_order)
-            entries[key] = _meta_doc(meta, chunk_index)
+            entries[key] = _meta_doc(image.entries[key], ref)
         saved_image_ids.add(image.image_id)
         images_doc.append(
             {
@@ -323,7 +327,36 @@ def _snapshot_doc(
     if deltacr.pipeline is not None:
         anchors = [i for i in deltacr.pipeline.anchored_ids() if i in saved_image_ids]
 
-    # ---- chunk blob ------------------------------------------------------
+    return {
+        "chunk_bytes": store.chunk_bytes,
+        "dedupe": store.dedupe,
+        "layers": layers_doc,
+        "images": images_doc,
+        "next_image_id": deltacr.images.next_image_id(),
+        "tree": tree_doc,
+        "anchors": anchors,
+        "extra": _encode_obj(extra if extra is not None else {}),
+    }
+
+
+def _snapshot_doc(
+    sm: Optional[StateManager],
+    deltacr: DeltaCR,
+    extra: Optional[Dict[str, Any]],
+) -> Tuple[Dict[str, Any], bytes]:
+    """Build the legacy (v1) snapshot document + inline chunk blob."""
+    store = deltacr.store
+    chunk_index: Dict[int, int] = {}
+    chunk_order: List[int] = []
+
+    def ref(cid: int) -> int:
+        dense = chunk_index.get(cid)
+        if dense is None:
+            dense = chunk_index[cid] = len(chunk_order)
+            chunk_order.append(cid)
+        return dense
+
+    core = _build_doc_core(sm, deltacr, extra, ref)
     blobs = [store.get(cid) for cid in chunk_order]
     offsets = [0]
     for b in blobs:
@@ -333,23 +366,408 @@ def _snapshot_doc(
     doc = {
         "version": _SNAP_VERSION,
         "kind": "deltastate",
-        "chunk_bytes": store.chunk_bytes,
-        "dedupe": store.dedupe,
         "chunk_offsets": offsets,
         "chunk_pads": [store.pad_of(cid) for cid in chunk_order],
-        "layers": layers_doc,
-        "images": images_doc,
-        "next_image_id": deltacr.images.next_image_id(),
-        "tree": tree_doc,
-        "anchors": anchors,
-        "extra": _encode_obj(extra if extra is not None else {}),
+        **core,
     }
     return doc, blob
+
+
+def _snapshot_doc_v2(
+    sm: Optional[StateManager],
+    deltacr: DeltaCR,
+    extra: Optional[Dict[str, Any]],
+    index: "DigestIndex",
+) -> Tuple[Dict[str, Any], List[Dict[str, Any]], List[bytes]]:
+    """Build the v2 (pack-backed) full snapshot document.
+
+    Chunk references are *persistent chunk ids* (pcids) assigned by the
+    root's digest index: a chunk whose (digest, pad) is already durable
+    reuses its pcid and writes zero bytes; only genuinely-new chunks are
+    staged for the save's pack.  Returns ``(doc, staged_index_entries,
+    staged_payloads)`` — the caller writes the pack, fills the entries'
+    pack/offset fields, and commits them to the index."""
+    store = deltacr.store
+    assigned: Dict[int, int] = {}            # live cid -> pcid
+    pending: Dict[Tuple[str, int], Dict[str, Any]] = {}
+    staged_entries: List[Dict[str, Any]] = []
+    staged_payloads: List[bytes] = []
+    table: Dict[int, List[Any]] = {}         # pcid -> [pcid, digest_hex, pad, size]
+    offset = 0
+
+    def ref(cid: int) -> int:
+        pcid = assigned.get(cid)
+        if pcid is not None:
+            return pcid
+        data = store.get(cid)
+        digest = store.digest_of(cid)
+        if digest is None:
+            digest = hashlib.blake2b(data, digest_size=_CHUNK_DIGEST_BYTES).digest()
+        pad = store.pad_of(cid)
+        key = (digest.hex(), pad)
+        ent = index.lookup(*key) or pending.get(key)
+        if ent is None:
+            nonlocal offset
+            ent = {
+                "p": index.next_pcid + len(staged_entries),
+                "d": key[0],
+                "pad": pad,
+                "s": len(data),
+                "f": None,                   # filled in once the pack is named
+                "o": offset,
+            }
+            offset += len(data)
+            pending[key] = ent
+            staged_entries.append(ent)
+            staged_payloads.append(data)
+        pcid = int(ent["p"])
+        assigned[cid] = pcid
+        table[pcid] = [pcid, ent["d"], int(ent["pad"]), int(ent["s"])]
+        return pcid
+
+    core = _build_doc_core(sm, deltacr, extra, ref)
+    doc = {
+        "version": _SNAP_VERSION_V2,
+        "kind": "deltastate-full",
+        "chunks": [table[p] for p in sorted(table)],
+        **core,
+    }
+    return doc, staged_entries, staged_payloads
 
 
 def _snapshot_bytes(doc: Dict[str, Any], blob: bytes) -> bytes:
     payload = _canon_json(doc)
     return _MAGIC + struct.pack("<Q", len(payload)) + payload + blob
+
+
+# --------------------------------------------------------------------------
+# chunk packs + digest index (v2 durable chunk storage)
+# --------------------------------------------------------------------------
+_PACK_RE = re.compile(r"^pack-(\d{8})\.blob$")
+
+
+def _chunks_dir(root: str) -> str:
+    return os.path.join(root, _CHUNKS_DIR)
+
+
+def _list_packs(root: str) -> List[str]:
+    d = _chunks_dir(root)
+    if not os.path.isdir(d):
+        return []
+    return sorted(f for f in os.listdir(d) if _PACK_RE.match(f))
+
+
+def _next_pack_name(root: str) -> str:
+    """Never reuse a pack name: a save whose manifest append failed leaves
+    an orphan pack the index may already reference — overwriting it would
+    silently corrupt every deduped reference into it."""
+    existing = _list_packs(root)
+    seq = 1 + max((int(_PACK_RE.match(f).group(1)) for f in existing), default=0)
+    while os.path.exists(os.path.join(_chunks_dir(root), f"pack-{seq:08d}.blob")):
+        seq += 1
+    return f"pack-{seq:08d}.blob"
+
+
+def _write_pack(
+    root: str, entries: List[Dict[str, Any]], payloads: List[bytes]
+) -> Tuple[str, int, str]:
+    """Write one chunk pack (payloads + self-describing footer), durable-or-
+    absent.  The footer lets the digest index be rebuilt from packs alone.
+    Returns (pack filename, pack bytes, pack blake2b)."""
+    faults.fire("persist.pack_write")
+    fname = _next_pack_name(root)
+    for ent in entries:
+        ent["f"] = fname
+    footer = _canon_json(
+        {"chunks": [[int(e["p"]), e["d"], int(e["pad"]), int(e["s"])] for e in entries]}
+    )
+    data = b"".join(payloads) + footer + struct.pack("<Q", len(footer)) + _PACK_MAGIC
+    _write_atomic(os.path.join(_chunks_dir(root), fname), data)
+    return fname, len(data), hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def _read_pack_footer(path: str) -> Optional[List[List[Any]]]:
+    """Parse a pack's footer; None if the file is torn/corrupt."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            tail_len = len(_PACK_MAGIC) + 8
+            if size < tail_len:
+                return None
+            f.seek(size - tail_len)
+            tail = f.read(tail_len)
+            if tail[8:] != _PACK_MAGIC:
+                return None
+            (flen,) = struct.unpack("<Q", tail[:8])
+            if flen > size - tail_len:
+                return None
+            f.seek(size - tail_len - flen)
+            footer = json.loads(f.read(flen).decode())
+        rows = footer.get("chunks")
+        if not isinstance(rows, list):
+            return None
+        return rows
+    except (OSError, ValueError, struct.error):
+        return None
+
+
+def _read_pack_chunk(root: str, fname: str, offset: int, size: int) -> Optional[bytes]:
+    try:
+        with open(os.path.join(_chunks_dir(root), fname), "rb") as f:
+            f.seek(offset)
+            data = f.read(size)
+        return data if len(data) == size else None
+    except OSError:
+        return None
+
+
+class DigestIndex:
+    """Persistent digest → (pack, offset) sidecar index for a root.
+
+    One checksummed line per durable chunk (same framing as the MANIFEST,
+    torn tails drop harmlessly) plus ``{"n": next_pcid}`` watermark records
+    keeping pcid assignment monotonic across retention rewrites.  The index
+    is a cache over the packs' self-describing footers: if it is missing or
+    doesn't cover a referenced pcid, it is rebuilt from the packs."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.path = os.path.join(_chunks_dir(root), _INDEX_NAME)
+        self.by_key: Dict[Tuple[str, int], Dict[str, Any]] = {}
+        self.by_pcid: Dict[int, Dict[str, Any]] = {}
+        self.next_pcid = 0
+
+    @classmethod
+    def load(cls, root: str) -> "DigestIndex":
+        idx = cls(root)
+        if os.path.exists(idx.path):
+            try:
+                with open(idx.path, "rb") as f:
+                    raw = f.read()
+            except OSError:
+                raw = b""
+            for rec in _parse_manifest(raw):
+                idx._ingest(rec)
+        return idx
+
+    def _ingest(self, rec: Dict[str, Any]) -> None:
+        if "n" in rec:
+            self.next_pcid = max(self.next_pcid, int(rec["n"]))
+            return
+        try:
+            ent = {
+                "p": int(rec["p"]),
+                "d": str(rec["d"]),
+                "pad": int(rec["pad"]),
+                "s": int(rec["s"]),
+                "f": str(rec["f"]),
+                "o": int(rec["o"]),
+            }
+        except (KeyError, TypeError, ValueError):
+            return
+        self.by_pcid[ent["p"]] = ent
+        self.by_key[(ent["d"], ent["pad"])] = ent
+        self.next_pcid = max(self.next_pcid, ent["p"] + 1)
+
+    def lookup(self, digest_hex: str, pad: int) -> Optional[Dict[str, Any]]:
+        return self.by_key.get((digest_hex, pad))
+
+    def covers(self, pcids) -> bool:
+        return all(p in self.by_pcid for p in pcids)
+
+    def append(self, entries: List[Dict[str, Any]]) -> None:
+        """Durably append new chunk records (+ the advanced watermark).
+        Runs *after* the pack rename and *before* the manifest append: every
+        index entry points at real bytes, and a crash here leaves at worst
+        dedupe-able orphans the next GC sweeps."""
+        if not entries:
+            return
+        faults.fire("persist.index_write")
+        os.makedirs(_chunks_dir(self.root), exist_ok=True)
+        lines = []
+        for ent in entries:
+            payload = _canon_json(ent)
+            lines.append(payload + b"\t" + _line_digest(payload).encode() + b"\n")
+        watermark = max(int(e["p"]) for e in entries) + 1
+        payload = _canon_json({"n": watermark})
+        lines.append(payload + b"\t" + _line_digest(payload).encode() + b"\n")
+        with open(self.path, "ab") as f:
+            if f.tell() > 0:
+                with open(self.path, "rb") as r:
+                    r.seek(-1, os.SEEK_END)
+                    if r.read(1) != b"\n":
+                        f.write(b"\n")
+            f.write(b"".join(lines))
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(_chunks_dir(self.root))
+        for ent in entries:
+            self._ingest(ent)
+        self.next_pcid = max(self.next_pcid, watermark)
+
+    def rewrite(self) -> None:
+        """Atomically rewrite the whole index (retention / compaction /
+        rebuild); the old file stays valid until the rename."""
+        faults.fire("persist.index_write")
+        os.makedirs(_chunks_dir(self.root), exist_ok=True)
+        lines = []
+        for pcid in sorted(self.by_pcid):
+            payload = _canon_json(self.by_pcid[pcid])
+            lines.append(payload + b"\t" + _line_digest(payload).encode() + b"\n")
+        payload = _canon_json({"n": self.next_pcid})
+        lines.append(payload + b"\t" + _line_digest(payload).encode() + b"\n")
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(b"".join(lines))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        _fsync_dir(_chunks_dir(self.root))
+
+    def rebuild_from_packs(self) -> None:
+        """Reconstruct from pack footers (newest pack wins a duplicate key,
+        matching sweep semantics where live chunks move to newer packs)."""
+        self.by_key.clear()
+        self.by_pcid.clear()
+        watermark = self.next_pcid
+        for fname in _list_packs(self.root):
+            rows = _read_pack_footer(os.path.join(_chunks_dir(self.root), fname))
+            if rows is None:
+                continue
+            offset = 0
+            for row in rows:
+                try:
+                    pcid, digest_hex, pad, size = int(row[0]), str(row[1]), int(row[2]), int(row[3])
+                except (TypeError, ValueError, IndexError):
+                    break
+                self._ingest(
+                    {"p": pcid, "d": digest_hex, "pad": pad, "s": size, "f": fname, "o": offset}
+                )
+                offset += size
+        self.next_pcid = max(self.next_pcid, watermark)
+        self.rewrite()
+
+    def drop_packs(self, dead: set) -> None:
+        for pcid in [p for p, e in self.by_pcid.items() if e["f"] in dead]:
+            ent = self.by_pcid.pop(pcid)
+            cur = self.by_key.get((ent["d"], ent["pad"]))
+            if cur is ent:
+                del self.by_key[(ent["d"], ent["pad"])]
+
+
+# --------------------------------------------------------------------------
+# delta-chain documents: diff + fold
+# --------------------------------------------------------------------------
+def _diff_docs(prev: Dict[str, Any], full: Dict[str, Any]) -> Dict[str, Any]:
+    """Diff two folded v2 full docs into a delta doc.
+
+    Sections are keyed (layers by dense id, images by ckpt, tree nodes by
+    ckpt_id); an unchanged value contributes nothing.  The chunk table
+    carries every pcid row absent from the previous folded table — newly
+    packed or re-surfacing from an older snapshot — so a fold never needs
+    any doc outside its own chain."""
+    delta: Dict[str, Any] = {
+        "version": _SNAP_VERSION_V2,
+        "kind": "deltastate-delta",
+        "chunk_bytes": full["chunk_bytes"],
+        "dedupe": full["dedupe"],
+        "next_image_id": full["next_image_id"],
+        "anchors": full["anchors"],
+        "extra": full["extra"],
+    }
+    prev_layers = {int(l["id"]): l for l in prev["layers"]}
+    new_layers = {int(l["id"]): l for l in full["layers"]}
+    delta["layers_upsert"] = [
+        new_layers[i] for i in sorted(new_layers) if prev_layers.get(i) != new_layers[i]
+    ]
+    delta["layers_drop"] = sorted(i for i in prev_layers if i not in new_layers)
+    prev_images = {int(im["ckpt"]): im for im in prev["images"]}
+    new_images = {int(im["ckpt"]): im for im in full["images"]}
+    delta["images_upsert"] = [
+        new_images[c] for c in sorted(new_images) if prev_images.get(c) != new_images[c]
+    ]
+    delta["images_drop"] = sorted(c for c in prev_images if c not in new_images)
+    if full["tree"] is None:
+        delta["tree"] = None
+    else:
+        prev_nodes = (
+            {int(n["ckpt_id"]): n for n in prev["tree"]["nodes"]}
+            if prev.get("tree") is not None
+            else {}
+        )
+        new_nodes = {int(n["ckpt_id"]): n for n in full["tree"]["nodes"]}
+        delta["tree"] = {
+            "nodes_upsert": [
+                new_nodes[i] for i in sorted(new_nodes) if prev_nodes.get(i) != new_nodes[i]
+            ],
+            "nodes_drop": sorted(i for i in prev_nodes if i not in new_nodes),
+            "current": full["tree"]["current"],
+            "root": full["tree"]["root"],
+            "next_ckpt": full["tree"]["next_ckpt"],
+            "pins": full["tree"]["pins"],
+        }
+    prev_pcids = {int(row[0]) for row in prev["chunks"]}
+    delta["chunks"] = [row for row in full["chunks"] if int(row[0]) not in prev_pcids]
+    return delta
+
+
+def _fold_delta(base: Dict[str, Any], delta: Dict[str, Any]) -> Dict[str, Any]:
+    """Fold one delta doc onto a folded full doc, reproducing *exactly* the
+    full doc `_snapshot_doc_v2` would have built for the same state (section
+    orderings included) — diffing and byte-identity both depend on it."""
+    layers = {int(l["id"]): l for l in base["layers"]}
+    for l in delta["layers_upsert"]:
+        layers[int(l["id"])] = l
+    for i in delta["layers_drop"]:
+        layers.pop(int(i), None)
+    images = {int(im["ckpt"]): im for im in base["images"]}
+    for im in delta["images_upsert"]:
+        images[int(im["ckpt"])] = im
+    for c in delta["images_drop"]:
+        images.pop(int(c), None)
+    if delta["tree"] is None:
+        tree = None
+    else:
+        nodes = (
+            {int(n["ckpt_id"]): n for n in base["tree"]["nodes"]}
+            if base.get("tree") is not None
+            else {}
+        )
+        for n in delta["tree"]["nodes_upsert"]:
+            nodes[int(n["ckpt_id"])] = n
+        for i in delta["tree"]["nodes_drop"]:
+            nodes.pop(int(i), None)
+        tree = {
+            "nodes": [nodes[i] for i in sorted(nodes)],
+            "current": delta["tree"]["current"],
+            "root": delta["tree"]["root"],
+            "next_ckpt": delta["tree"]["next_ckpt"],
+            "pins": delta["tree"]["pins"],
+        }
+    table = {int(row[0]): row for row in base["chunks"]}
+    for row in delta["chunks"]:
+        table[int(row[0])] = row
+    referenced: set = set()
+    for layer in layers.values():
+        for ent in layer["entries"].values():
+            referenced.update(int(p) for p in ent["chunks"])
+    for image in images.values():
+        for ent in image["entries"].values():
+            referenced.update(int(p) for p in ent["chunks"])
+    return {
+        "version": _SNAP_VERSION_V2,
+        "kind": "deltastate-full",
+        "chunks": [table[p] for p in sorted(referenced)],
+        "chunk_bytes": delta["chunk_bytes"],
+        "dedupe": delta["dedupe"],
+        "layers": [layers[i] for i in sorted(layers)],
+        "images": sorted(images.values(), key=lambda im: int(im["image_id"])),
+        "next_image_id": delta["next_image_id"],
+        "tree": tree,
+        "anchors": delta["anchors"],
+        "extra": delta["extra"],
+    }
 
 
 # --------------------------------------------------------------------------
@@ -378,26 +796,44 @@ def _parse_manifest(raw: bytes) -> List[Dict[str, Any]]:
 
 
 def _read_manifest(root: str) -> List[Dict[str, Any]]:
+    global LAST_MANIFEST_BYTES_READ
     path = _manifest_path(root)
     if not os.path.exists(path):
+        LAST_MANIFEST_BYTES_READ = 0
         return []
     with open(path, "rb") as f:
-        return _parse_manifest(f.read())
+        raw = f.read()
+    LAST_MANIFEST_BYTES_READ = len(raw)
+    return _parse_manifest(raw)
 
 
 def _read_manifest_tail(root: str, max_bytes: int = 256 << 10) -> List[Dict[str, Any]]:
-    """Recent manifest entries only: the save path needs the last seq and
-    the recent prune window, so it reads a bounded tail instead of
-    re-checksumming the whole append-only history every save.  A partial
+    """Recent manifest entries only: the save and recover paths need the
+    newest entries (last seq / newest chain), so they read a bounded tail
+    instead of re-checksumming the whole append-only history.  A partial
     first line (mid-record seek) fails its checksum and is dropped."""
+    global LAST_MANIFEST_BYTES_READ
     path = _manifest_path(root)
     if not os.path.exists(path):
+        LAST_MANIFEST_BYTES_READ = 0
         return []
     with open(path, "rb") as f:
         f.seek(0, os.SEEK_END)
         size = f.tell()
         f.seek(max(0, size - max_bytes))
-        return _parse_manifest(f.read())
+        raw = f.read()
+    LAST_MANIFEST_BYTES_READ = len(raw)
+    return _parse_manifest(raw)
+
+
+def _manifest_tail_was_complete(root: str) -> bool:
+    """Whether the last tail read covered the whole manifest file (so a
+    full re-read could not surface anything new)."""
+    path = _manifest_path(root)
+    try:
+        return os.path.getsize(path) <= LAST_MANIFEST_BYTES_READ
+    except OSError:
+        return True
 
 
 def _append_manifest(root: str, record: Dict[str, Any]) -> None:
@@ -436,6 +872,88 @@ def _verify_entry(root: str, entry: Dict[str, Any]) -> bool:
 
 
 # --------------------------------------------------------------------------
+# delta chains over the manifest
+# --------------------------------------------------------------------------
+def _entry_base(entry: Dict[str, Any]) -> int:
+    return int(entry.get("base", entry["seq"]))
+
+
+def _chain_entries(
+    entries: List[Dict[str, Any]], head: Dict[str, Any]
+) -> Optional[List[Dict[str, Any]]]:
+    """The manifest entries whose docs fold to ``head``: its base full
+    snapshot plus every delta between, in seq order.  None if the base or
+    an intermediate link is missing from ``entries`` (e.g. a bounded tail
+    read cut the chain — the caller re-reads the full manifest)."""
+    if entry_fmt(head) < 2:
+        return [head]
+    if head.get("kind", "full") == "full":
+        return [head]
+    base_seq = _entry_base(head)
+    by_seq = {int(e["seq"]): e for e in entries}
+    chain: List[Dict[str, Any]] = []
+    base = by_seq.get(base_seq)
+    if base is None or base.get("kind", "full") != "full" or entry_fmt(base) < 2:
+        return None
+    chain.append(base)
+    for seq in range(base_seq + 1, int(head["seq"]) + 1):
+        link = by_seq.get(seq)
+        if link is None or link.get("kind") != "delta" or _entry_base(link) != base_seq:
+            return None
+        chain.append(link)
+    return chain
+
+
+def entry_fmt(entry: Dict[str, Any]) -> int:
+    return int(entry.get("fmt", 1))
+
+
+def _load_doc(root: str, entry: Dict[str, Any]) -> Tuple[Dict[str, Any], bytes]:
+    return _load_snapshot(os.path.join(root, entry["file"]))
+
+
+def _fold_chain(
+    root: str, entries: List[Dict[str, Any]], head: Dict[str, Any]
+) -> Optional[Dict[str, Any]]:
+    """Verify + load + fold ``head``'s chain into one full v2 doc.
+    None when any link fails verification (torn/corrupt/missing)."""
+    chain = _chain_entries(entries, head)
+    if chain is None:
+        return None
+    folded: Optional[Dict[str, Any]] = None
+    for link in chain:
+        if not _verify_entry(root, link):
+            return None
+        try:
+            doc, _ = _load_doc(root, link)
+        except (OSError, RecoverError, ValueError):
+            return None
+        if link is chain[0]:
+            if doc.get("kind") != "deltastate-full":
+                return None
+            folded = doc
+        else:
+            if doc.get("kind") != "deltastate-delta" or folded is None:
+                return None
+            folded = _fold_delta(folded, doc)
+    return folded
+
+
+def _chain_closure(
+    entries: List[Dict[str, Any]], heads: List[Dict[str, Any]]
+) -> List[Dict[str, Any]]:
+    """All entries any of ``heads`` needs to fold (bases + intermediate
+    deltas), deduped, in seq order.  Unresolvable chains contribute the
+    head alone."""
+    out: Dict[int, Dict[str, Any]] = {}
+    for head in heads:
+        chain = _chain_entries(entries, head) or [head]
+        for link in chain:
+            out[int(link["seq"])] = link
+    return [out[s] for s in sorted(out)]
+
+
+# --------------------------------------------------------------------------
 # save
 # --------------------------------------------------------------------------
 def save_state(
@@ -445,6 +963,11 @@ def save_state(
     deltacr: Optional[DeltaCR] = None,
     extra: Optional[Dict[str, Any]] = None,
     keep_snapshots: int = 4,
+    mode: str = "auto",
+    full_every: int = 8,
+    fmt: int = 2,
+    stats_out: Optional[Dict[str, Any]] = None,
+    _cache: Optional[Dict[str, Any]] = None,
 ) -> int:
     """Commit one crash-consistent snapshot of the DeltaState; returns seq.
 
@@ -453,39 +976,217 @@ def save_state(
     scheduler's warm-pool case).  ``extra`` rides along verbatim (JSON-able
     plus tuples/bytes/ndarrays).  Uncommitted live-upper writes and
     in-flight dumps are *not* captured — crash semantics are "back to the
-    last durable checkpoint", never a partial tree."""
+    last durable checkpoint", never a partial tree.
+
+    Saves are **O(delta)**: chunk bytes dedupe against the root's digest
+    index (only never-before-seen chunks land in this save's pack), and
+    with ``mode="auto"`` the snapshot document itself is a delta against
+    the previous save, with a full anchor every ``full_every`` saves so
+    recovery folds a bounded chain.  ``mode="full"`` forces a full-doc
+    anchor; ``mode="delta"`` forces a delta when a foldable predecessor
+    exists.  ``fmt=1`` writes the legacy self-contained v1 snapshot (for
+    migration tests and old readers).
+
+    Durability ordering: pack (atomic rename) → digest index (fsync'd
+    append) → snapshot doc (atomic rename) → manifest append (the commit
+    point).  A kill between any two steps leaves at worst orphans the next
+    full save / compaction garbage-collects; the previous durable snapshot
+    stays recoverable throughout.
+
+    ``stats_out`` (when given) is filled with what the save actually wrote;
+    ``_cache`` is the :class:`PersistencePlane` accelerator (previous folded
+    doc + digest index) — callers without one pay a bounded chain re-read."""
     if sm is None and deltacr is None:
         raise ValueError("save_state needs sm= or deltacr=")
     cr = deltacr if deltacr is not None else sm.deltacr  # type: ignore[union-attr]
     os.makedirs(root, exist_ok=True)
-    entries = _read_manifest_tail(root)
+    entries = _read_manifest_tail(root, max_bytes=_SAVE_TAIL_BYTES)
     seq = (max((int(e["seq"]) for e in entries), default=0)) + 1
-    doc, blob = _snapshot_doc(sm, cr, extra)
-    data = _snapshot_bytes(doc, blob)
     fname = f"snap-{seq:08d}.dbox"
-    _write_atomic(os.path.join(root, fname), data)
-    _append_manifest(
-        root,
-        {
-            "seq": seq,
-            "file": fname,
-            "bytes": len(data),
-            "blake2b": hashlib.blake2b(data, digest_size=16).hexdigest(),
-        },
+
+    if fmt == 1:
+        doc, blob = _snapshot_doc(sm, cr, extra)
+        data = _snapshot_bytes(doc, blob)
+        _write_atomic(os.path.join(root, fname), data)
+        _append_manifest(
+            root,
+            {
+                "seq": seq,
+                "file": fname,
+                "bytes": len(data),
+                "blake2b": hashlib.blake2b(data, digest_size=16).hexdigest(),
+            },
+        )
+        live_v1 = (
+            {e["file"] for e in entries[-(keep_snapshots - 1):]}
+            if keep_snapshots > 1
+            else set()
+        )
+        live_v1.add(fname)
+        _prune_snapshots(root, entries, live_v1, keep_snapshots)
+        if stats_out is not None:
+            stats_out.update(
+                {"seq": seq, "kind": "full", "fmt": 1, "chain": 0,
+                 "doc_bytes": len(data), "pack_bytes": 0, "new_chunks": 0,
+                 "bytes_written": len(data)}
+            )
+        return seq
+
+    os.makedirs(_chunks_dir(root), exist_ok=True)
+    cache_ok = (
+        _cache is not None
+        and _cache.get("root") == root
+        and _cache.get("index") is not None
     )
-    # prune superseded snapshot blobs (the manifest itself is append-only);
-    # the latest `keep_snapshots` stay for corruption fallback.  Only the
-    # recent window is scanned — older entries' blobs were unlinked by
-    # previous saves, so per-save work stays O(keep), not O(history).
-    live = {e["file"] for e in entries[-(keep_snapshots - 1) :]} if keep_snapshots > 1 else set()
-    live.add(fname)
-    for e in entries[-(2 * keep_snapshots + 4) :]:
+    index: DigestIndex = _cache["index"] if cache_ok else DigestIndex.load(root)
+    full_doc, staged_entries, staged_payloads = _snapshot_doc_v2(sm, cr, extra, index)
+
+    # ---- kind decision: delta against the previous save, full anchor
+    # every `full_every` saves (or when no foldable v2 predecessor exists)
+    kind, chain, base_seq = "full", 0, seq
+    prev_doc: Optional[Dict[str, Any]] = None
+    prev_entry = entries[-1] if entries else None
+    if (
+        mode != "full"
+        and full_every > 1
+        and prev_entry is not None
+        and entry_fmt(prev_entry) >= 2
+    ):
+        prev_chain = int(prev_entry.get("chain", 0))
+        if mode == "delta" or prev_chain + 1 < full_every:
+            if cache_ok and _cache.get("seq") == int(prev_entry["seq"]):
+                prev_doc = _cache.get("doc")
+            if prev_doc is None:
+                prev_doc = _fold_chain(root, entries, prev_entry)
+            if prev_doc is not None:
+                kind = "delta"
+                chain = prev_chain + 1
+                base_seq = _entry_base(prev_entry)
+    doc_to_write = full_doc if kind == "full" else _diff_docs(prev_doc, full_doc)
+
+    # ---- commit sequence: pack → index → doc → manifest ------------------
+    pack_name: Optional[str] = None
+    pack_bytes = 0
+    pack_digest = ""
+    if staged_payloads:
+        pack_name, pack_bytes, pack_digest = _write_pack(root, staged_entries, staged_payloads)
+        index.append(staged_entries)
+    data = _snapshot_bytes(doc_to_write, b"")
+    _write_atomic(os.path.join(root, fname), data)
+    record = {
+        "seq": seq,
+        "file": fname,
+        "bytes": len(data),
+        "blake2b": hashlib.blake2b(data, digest_size=16).hexdigest(),
+        "fmt": _SNAP_VERSION_V2,
+        "kind": kind,
+        "base": base_seq,
+        "chain": chain,
+        "pack": pack_name,
+        "pack_bytes": pack_bytes,
+        "pack_blake2b": pack_digest,
+    }
+    _append_manifest(root, record)
+
+    # ---- retention: prune snap docs beyond keep + chain closure ----------
+    all_entries = entries + [record]
+    keep_files = _retained_files(all_entries, keep_snapshots)
+    _prune_snapshots(root, entries, keep_files, keep_snapshots)
+    # pack GC only on full anchors: delta saves stay strictly O(delta)
+    if kind == "full":
+        _gc_packs(root, index)
+
+    if _cache is not None:
+        _cache.update({"root": root, "seq": seq, "doc": full_doc, "index": index})
+    if stats_out is not None:
+        stats_out.update(
+            {
+                "seq": seq,
+                "kind": kind,
+                "fmt": 2,
+                "chain": chain,
+                "doc_bytes": len(data),
+                "pack_bytes": pack_bytes,
+                "new_chunks": len(staged_payloads),
+                "bytes_written": len(data) + pack_bytes,
+            }
+        )
+    return seq
+
+
+def _retained_files(entries: List[Dict[str, Any]], keep_snapshots: int) -> set:
+    """Snapshot files retention must keep: the newest ``keep_snapshots``
+    entries plus everything their delta chains fold from."""
+    keep = max(1, int(keep_snapshots))
+    heads = entries[-keep:]
+    return {e["file"] for e in _chain_closure(entries, heads)}
+
+
+def _prune_snapshots(
+    root: str,
+    prior_entries: List[Dict[str, Any]],
+    keep_files,
+    keep_snapshots: int,
+) -> None:
+    """Unlink superseded snapshot files (the manifest itself stays
+    append-only between compactions).  Only a bounded recent window is
+    scanned — older files were unlinked by previous saves — so per-save
+    work stays O(keep + chain), not O(history)."""
+    live = set(keep_files)
+    window = prior_entries[-(2 * (int(keep_snapshots) + 16) + 8):]
+    for e in window:
         if e["file"] not in live:
             try:
                 os.unlink(os.path.join(root, e["file"]))
             except OSError:
                 pass
-    return seq
+
+
+def _gc_packs(root: str, index: DigestIndex) -> None:
+    """Reclaim unreferenced chunk bytes: a pack none of whose pcids is
+    referenced by any on-disk snapshot doc is deleted and dropped from the
+    index.  Liveness is the union of the chunk tables of every retained v2
+    doc — delta docs re-list any pcid their fold introduces, so the union
+    over a chain covers exactly its folded reference set."""
+    live_pcids = _live_pcids(root)
+    by_pack: Dict[str, int] = {}
+    for ent in index.by_pcid.values():
+        by_pack.setdefault(ent["f"], 0)
+    for pcid in live_pcids:
+        ent = index.by_pcid.get(pcid)
+        if ent is not None:
+            by_pack[ent["f"]] = by_pack.get(ent["f"], 0) + 1
+    dead = {f for f, live in by_pack.items() if live == 0}
+    # packs the index doesn't know at all (sweep leftovers) are dead too
+    for fname in _list_packs(root):
+        if fname not in by_pack:
+            dead.add(fname)
+    if not dead:
+        return
+    index.drop_packs(dead)
+    index.rewrite()
+    for fname in dead:
+        try:
+            os.unlink(os.path.join(_chunks_dir(root), fname))
+        except OSError:
+            pass
+
+
+def _live_pcids(root: str) -> set:
+    """Union of every on-disk v2 snapshot doc's chunk table."""
+    live: set = set()
+    for fname in sorted(os.listdir(root)):
+        if not (fname.startswith("snap-") and fname.endswith(".dbox")):
+            continue
+        try:
+            doc, _ = _load_snapshot(os.path.join(root, fname))
+        except (OSError, RecoverError, ValueError):
+            continue
+        if int(doc.get("version", 1)) < _SNAP_VERSION_V2:
+            continue
+        for row in doc.get("chunks", []):
+            live.add(int(row[0]))
+    return live
 
 
 # --------------------------------------------------------------------------
@@ -563,28 +1264,143 @@ def recover(
     StateManager either way) replays lightweight chains; when ``current``
     needs an LW replay and no applier was given, the restore is *skipped*
     (``trunk_restore_mode == "skipped-needs-applier"``) rather than raising
-    — the tree is intact, the caller restores manually after wiring one."""
-    entries = _read_manifest(root)
-    chosen: Optional[Dict[str, Any]] = None
-    for entry in reversed(entries):
-        if _verify_entry(root, entry):
-            chosen = entry
-            break
-    if chosen is None:
-        raise RecoverError(f"{root}: no durable snapshot in manifest")
-    snap_path = os.path.join(root, chosen["file"])
-    doc, blob = _load_snapshot(snap_path)
-    if doc.get("kind") != "deltastate" or int(doc.get("version", -1)) != _SNAP_VERSION:
-        raise RecoverError(f"{snap_path}: unsupported snapshot format")
+    — the tree is intact, the caller restores manually after wiring one.
 
+    v2 snapshots (delta chains over shared chunk packs) and legacy v1
+    snapshots (self-contained blob per save) recover through the same door:
+    a v2 candidate's chain is folded onto its full anchor and its chunks
+    are read digest-verified out of the packs via the persistent digest
+    index (rebuilt from pack footers when missing or stale).  Any failure
+    — corrupt doc, truncated chain, rotten pack bytes — falls back to the
+    next older durable candidate.  The manifest is read as a bounded tail;
+    the full history is parsed only if the tail holds no recoverable
+    candidate."""
+    entries = _read_manifest_tail(root, max_bytes=_RECOVER_TAIL_BYTES)
+    tail_complete = _manifest_tail_was_complete(root)
+    build_kw = dict(
+        restore_fn=restore_fn,
+        template_pool_size=template_pool_size,
+        stream=stream,
+        policy=policy,
+        auto_restore=auto_restore,
+        action_applier=action_applier,
+    )
+    result = _recover_from_entries(root, entries, **build_kw)
+    if result is None and not tail_complete:
+        entries = _read_manifest(root)
+        result = _recover_from_entries(root, entries, **build_kw)
+    if result is None:
+        raise RecoverError(f"{root}: no durable snapshot in manifest")
+    return result
+
+
+def _recover_from_entries(
+    root: str,
+    entries: List[Dict[str, Any]],
+    **build_kw,
+) -> Optional[RecoveredState]:
+    index: Optional[DigestIndex] = None
+    for entry in reversed(entries):
+        if not _verify_entry(root, entry):
+            continue
+        snap_path = os.path.join(root, entry["file"])
+        try:
+            if entry_fmt(entry) < 2:
+                doc, blob = _load_snapshot(snap_path)
+                if (
+                    doc.get("kind") != "deltastate"
+                    or int(doc.get("version", -1)) != _SNAP_VERSION
+                ):
+                    continue
+                offsets = doc["chunk_offsets"]
+                pads = doc["chunk_pads"]
+                pieces = [
+                    (i, blob[int(offsets[i]) : int(offsets[i + 1])], int(pads[i]))
+                    for i in range(len(offsets) - 1)
+                ]
+            else:
+                doc = _fold_chain(root, entries, entry)
+                if doc is None:
+                    continue
+                if index is None:
+                    index = DigestIndex.load(root)
+                pieces, index = _load_chunks_v2(root, doc, index)
+        except (RecoverError, OSError, ValueError, KeyError):
+            continue
+        return _materialize_state(
+            doc, pieces, seq=int(entry["seq"]), snap_path=snap_path, **build_kw
+        )
+    return None
+
+
+def _load_chunks_v2(
+    root: str, doc: Dict[str, Any], index: DigestIndex, _rebuilt: bool = False
+) -> Tuple[List[Tuple[int, bytes, int]], DigestIndex]:
+    """Materialize a folded doc's chunk table out of the packs,
+    digest-verifying every read.  A stale/missing index entry triggers one
+    rebuild from pack footers (persisted, so the repair sticks); anything
+    still unreadable raises RecoverError and the caller falls back to an
+    older candidate."""
+    table = [(int(r[0]), str(r[1]), int(r[2]), int(r[3])) for r in doc.get("chunks", [])]
+    rebuilt = _rebuilt
+
+    def _covered() -> bool:
+        for pcid, digest_hex, _, _ in table:
+            ent = index.by_pcid.get(pcid)
+            if ent is None or ent["d"] != digest_hex:
+                return False
+        return True
+
+    if not _covered():
+        index = DigestIndex.load(root)           # in-memory copy may be stale
+        if not _covered():
+            index.rebuild_from_packs()
+            rebuilt = True
+        if not _covered():
+            raise RecoverError(f"{root}: digest index cannot resolve referenced chunks")
+    pieces: List[Tuple[int, bytes, int]] = []
+    for pcid, digest_hex, pad, size in table:
+        ent = index.by_pcid[pcid]
+        data = _read_pack_chunk(root, ent["f"], int(ent["o"]), size)
+        if (
+            data is None
+            or hashlib.blake2b(data, digest_size=_CHUNK_DIGEST_BYTES).hexdigest()
+            != digest_hex
+        ):
+            if not rebuilt:
+                # the index may point at swept/stale offsets: rebuild once
+                # from the packs themselves and retry the whole table
+                index.rebuild_from_packs()
+                return _load_chunks_v2(root, doc, index, _rebuilt=True)
+            raise RecoverError(
+                f"{root}: chunk pcid={pcid} unreadable or digest-mismatched in pack"
+            )
+        pieces.append((pcid, data, pad))
+    return pieces, index
+
+
+def _materialize_state(
+    doc: Dict[str, Any],
+    pieces: List[Tuple[int, bytes, int]],
+    *,
+    seq: int,
+    snap_path: str,
+    restore_fn=None,
+    template_pool_size: int = 8,
+    stream: bool = True,
+    policy=None,
+    auto_restore: bool = True,
+    action_applier=None,
+) -> RecoveredState:
+    """Rebuild the live DeltaState from a (folded) snapshot doc + its chunk
+    bytes.  ``pieces`` are ``(ref, padded bytes, pad)`` in put order; every
+    meta doc's ``chunks`` list resolves through the resulting map, so the
+    v1 (dense index) and v2 (pcid) formats share this entire path."""
     # ---- chunks ----------------------------------------------------------
     store = ChunkStore(chunk_bytes=int(doc["chunk_bytes"]), dedupe=bool(doc["dedupe"]))
-    offsets = doc["chunk_offsets"]
-    pads = doc["chunk_pads"]
     cid_map: Dict[int, int] = {}
-    for i in range(len(offsets) - 1):
-        piece = blob[int(offsets[i]) : int(offsets[i + 1])]
-        cid_map[i] = store.put(piece, pad=int(pads[i]))
+    for ref, piece, pad in pieces:
+        cid_map[ref] = store.put(piece, pad=pad)
 
     # ---- layers ----------------------------------------------------------
     layer_store = LayerStore(store)
@@ -695,7 +1511,7 @@ def recover(
             trunk_restore_mode = sm.restore(int(current))
 
     return RecoveredState(
-        seq=int(chosen["seq"]),
+        seq=seq,
         fs=fs,
         layer_store=layer_store,
         deltacr=cr,
@@ -724,14 +1540,40 @@ def _needs_lw_replay(sm: StateManager, ckpt_id: int) -> bool:
 
 
 def find_chunk_by_digest(root: str, digest: bytes) -> Optional[bytes]:
-    """Locate a chunk's durable bytes by digest in the newest verified
-    snapshots (newest-first, so the healthiest copy wins).
+    """Locate a chunk's durable bytes by digest: O(1) through the
+    persistent digest index over the chunk packs, falling back to a linear
+    scan of legacy v1 snapshot blobs for pre-pack roots.
 
     The self-healing read path uses this as a repair source: a chunk whose
-    in-memory bytes rotted can be re-read from the fsync'd snapshot blob.
+    in-memory bytes rotted can be re-read from the fsync'd durable copy.
     Returns the exact stored bytes (padded layout) or None.  Cold path —
     runs only on a verified-read digest mismatch."""
     want = digest.hex()
+
+    # ---- fast path: digest index over the packs --------------------------
+    try:
+        index = DigestIndex.load(root)
+        for attempt in range(2):
+            for (digest_hex, _pad), ent in index.by_key.items():
+                if digest_hex != want:
+                    continue
+                data = _read_pack_chunk(root, ent["f"], int(ent["o"]), int(ent["s"]))
+                if (
+                    data is not None
+                    and hashlib.blake2b(data, digest_size=_CHUNK_DIGEST_BYTES).hexdigest()
+                    == want
+                ):
+                    return data
+            # empty index but packs on disk (lost/corrupt sidecar): rebuild
+            # once from the pack footers and retry
+            if attempt == 0 and not index.by_key and _list_packs(root):
+                index.rebuild_from_packs()
+            else:
+                break
+    except OSError:
+        pass
+
+    # ---- legacy path: scan self-contained v1 snapshot blobs --------------
     try:
         entries = _read_manifest(root)
     except OSError:
@@ -769,18 +1611,278 @@ def find_chunk_by_digest(root: str, digest: bytes) -> Optional[bytes]:
     return None
 
 
+# --------------------------------------------------------------------------
+# manifest compaction
+# --------------------------------------------------------------------------
+def _rewrite_manifest(root: str, records: List[Dict[str, Any]]) -> None:
+    """Atomically replace the MANIFEST with ``records`` (compaction's
+    commit point): temp + fsync + rename, the old manifest stays the
+    source of truth until the switch."""
+    faults.fire("persist.manifest_append")
+    lines = []
+    for rec in records:
+        payload = _canon_json(rec)
+        lines.append(payload + b"\t" + _line_digest(payload).encode() + b"\n")
+    tmp = _manifest_path(root) + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(b"".join(lines))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, _manifest_path(root))
+    _fsync_dir(root)
+
+
+def _v1_doc_to_v2(
+    root: str, doc: Dict[str, Any], blob: bytes, index: DigestIndex
+) -> Dict[str, Any]:
+    """Convert a legacy self-contained v1 doc into a v2 full doc, packing
+    its inline chunk blob into the root's shared chunk storage."""
+    offsets = doc["chunk_offsets"]
+    pads = doc["chunk_pads"]
+    pending: Dict[Tuple[str, int], Dict[str, Any]] = {}
+    staged_entries: List[Dict[str, Any]] = []
+    staged_payloads: List[bytes] = []
+    table: Dict[int, List[Any]] = {}
+    dense_to_pcid: Dict[int, int] = {}
+    offset = 0
+    for i in range(len(offsets) - 1):
+        data = blob[int(offsets[i]) : int(offsets[i + 1])]
+        pad = int(pads[i])
+        digest = hashlib.blake2b(data, digest_size=_CHUNK_DIGEST_BYTES).digest()
+        key = (digest.hex(), pad)
+        ent = index.lookup(*key) or pending.get(key)
+        if ent is None:
+            ent = {
+                "p": index.next_pcid + len(staged_entries),
+                "d": key[0],
+                "pad": pad,
+                "s": len(data),
+                "f": None,
+                "o": offset,
+            }
+            offset += len(data)
+            pending[key] = ent
+            staged_entries.append(ent)
+            staged_payloads.append(data)
+        pcid = int(ent["p"])
+        dense_to_pcid[i] = pcid
+        table[pcid] = [pcid, ent["d"], int(ent["pad"]), int(ent["s"])]
+    if staged_payloads:
+        _write_pack(root, staged_entries, staged_payloads)
+        index.append(staged_entries)
+
+    def remap(meta_doc: Dict[str, Any]) -> Dict[str, Any]:
+        out = dict(meta_doc)
+        out["chunks"] = [dense_to_pcid[int(i)] for i in meta_doc["chunks"]]
+        return out
+
+    v2 = {
+        "version": _SNAP_VERSION_V2,
+        "kind": "deltastate-full",
+        "chunks": [table[p] for p in sorted(table)],
+        "chunk_bytes": doc["chunk_bytes"],
+        "dedupe": doc["dedupe"],
+        "layers": [
+            {**layer, "entries": {k: remap(v) for k, v in layer["entries"].items()}}
+            for layer in doc["layers"]
+        ],
+        "images": [
+            {**img, "entries": {k: remap(v) for k, v in img["entries"].items()}}
+            for img in doc["images"]
+        ],
+        "next_image_id": doc["next_image_id"],
+        "tree": doc["tree"],
+        "anchors": doc["anchors"],
+        "extra": doc["extra"],
+    }
+    return v2
+
+
+def compact_state(
+    root: str,
+    *,
+    keep_snapshots: int = 4,
+    sweep_threshold: float = 0.5,
+    stats_out: Optional[Dict[str, Any]] = None,
+) -> int:
+    """Rewrite the newest durable delta chain as a fresh full snapshot and
+    truncate the manifest history, under the same crash-consistency
+    guarantees as a save: the new full doc lands atomically, the old
+    manifest stays valid until its atomic replacement, and a kill anywhere
+    in between recovers exactly the pre-compaction state.
+
+    After the switch: superseded snapshot docs (and any orphans from
+    crashed saves) are unlinked, packs with no referenced chunks are
+    deleted, and surviving packs whose live fraction dropped below
+    ``sweep_threshold`` are rewritten so dead chunk bytes are actually
+    reclaimed.  Legacy v1 roots are converted to v2 in the process.
+    Returns the new full snapshot's seq."""
+    faults.fire("persist.compact")
+    entries = _read_manifest(root)
+    os.makedirs(_chunks_dir(root), exist_ok=True)
+    index = DigestIndex.load(root)
+
+    chosen: Optional[Dict[str, Any]] = None
+    folded: Optional[Dict[str, Any]] = None
+    for entry in reversed(entries):
+        if not _verify_entry(root, entry):
+            continue
+        if entry_fmt(entry) < 2:
+            try:
+                doc, blob = _load_doc(root, entry)
+            except (OSError, RecoverError, ValueError):
+                continue
+            if doc.get("kind") != "deltastate":
+                continue
+            folded = _v1_doc_to_v2(root, doc, blob, index)
+        else:
+            folded = _fold_chain(root, entries, entry)
+            if folded is None:
+                continue
+        chosen = entry
+        break
+    if chosen is None or folded is None:
+        raise RecoverError(f"{root}: nothing durable to compact")
+
+    seq = (max((int(e["seq"]) for e in entries), default=0)) + 1
+    fname = f"snap-{seq:08d}.dbox"
+    data = _snapshot_bytes(folded, b"")
+    _write_atomic(os.path.join(root, fname), data)
+    record = {
+        "seq": seq,
+        "file": fname,
+        "bytes": len(data),
+        "blake2b": hashlib.blake2b(data, digest_size=16).hexdigest(),
+        "fmt": _SNAP_VERSION_V2,
+        "kind": "full",
+        "base": seq,
+        "chain": 0,
+        "pack": None,
+        "pack_bytes": 0,
+        "pack_blake2b": "",
+    }
+
+    # retention across the switch: the new full + the newest keep-1 old
+    # heads (and whatever their chains still need)
+    heads = [e for e in entries if _verify_entry(root, e)][-(max(1, int(keep_snapshots)) - 1):] \
+        if int(keep_snapshots) > 1 else []
+    kept = _chain_closure(entries, heads) if heads else []
+    new_manifest = kept + [record]
+    _rewrite_manifest(root, new_manifest)    # ---- the atomic switch ----
+
+    # ---- reclaim: snap docs, dead packs, underfilled packs ---------------
+    live_files = {e["file"] for e in new_manifest}
+    for f in sorted(os.listdir(root)):
+        if f.startswith("snap-") and (f.endswith(".dbox") or f.endswith(".tmp")) \
+                and f not in live_files:
+            try:
+                os.unlink(os.path.join(root, f))
+            except OSError:
+                pass
+    _gc_packs(root, index)
+    swept = _sweep_packs(root, index, threshold=sweep_threshold)
+    if stats_out is not None:
+        stats_out.update(
+            {"seq": seq, "kept_entries": len(new_manifest), "swept_packs": swept}
+        )
+    return seq
+
+
+def _sweep_packs(root: str, index: DigestIndex, *, threshold: float = 0.5) -> int:
+    """Rewrite packs whose live payload fraction fell below ``threshold``:
+    their still-referenced chunks move to a fresh pack, the index is
+    atomically rewritten, the old packs are unlinked.  Crash-safe: the new
+    pack lands before the index switch, and an old pack outliving a crash
+    is garbage-collected by the next sweep (the rebuilt index prefers the
+    newest pack for a duplicated key).  Returns the number of packs
+    swept."""
+    live_pcids = _live_pcids(root)
+    by_pack: Dict[str, List[Dict[str, Any]]] = {}
+    for pcid, ent in index.by_pcid.items():
+        if pcid in live_pcids:
+            by_pack.setdefault(ent["f"], []).append(ent)
+    victims: List[str] = []
+    moved: List[Dict[str, Any]] = []
+    payloads: List[bytes] = []
+    for fname in _list_packs(root):
+        ents = by_pack.get(fname, [])
+        if not ents:
+            continue                      # fully dead packs are _gc_packs' job
+        try:
+            total = os.path.getsize(os.path.join(_chunks_dir(root), fname))
+        except OSError:
+            continue
+        live_bytes = sum(int(e["s"]) for e in ents)
+        if total <= 0 or live_bytes / total >= threshold:
+            continue
+        ok = True
+        datas = []
+        for ent in sorted(ents, key=lambda e: int(e["o"])):
+            data = _read_pack_chunk(root, fname, int(ent["o"]), int(ent["s"]))
+            if data is None:
+                ok = False
+                break
+            datas.append((ent, data))
+        if not ok:
+            continue
+        victims.append(fname)
+        for ent, data in datas:
+            moved.append(ent)
+            payloads.append(data)
+    if not victims:
+        return 0
+    offset = 0
+    new_entries = []
+    for ent, data in zip(moved, payloads):
+        new_entries.append(
+            {"p": int(ent["p"]), "d": ent["d"], "pad": int(ent["pad"]),
+             "s": int(ent["s"]), "f": None, "o": offset}
+        )
+        offset += len(data)
+    new_fname, _, _ = _write_pack(root, new_entries, payloads)
+    for ent in new_entries:
+        index._ingest(ent)
+    index.rewrite()
+    for fname in victims:
+        try:
+            os.unlink(os.path.join(_chunks_dir(root), fname))
+        except OSError:
+            pass
+    return len(victims)
+
+
 class PersistencePlane:
     """Handle on one persistence root: repeated saves + recovery.
 
     The serving scheduler owns one of these when configured with
     ``persist_path``: every coalesced-suspend drain commits a manifest
-    snapshot, so a warm pool of suspended sessions survives process death."""
+    snapshot, so a warm pool of suspended sessions survives process death.
 
-    def __init__(self, root: str, *, keep_snapshots: int = 4):
+    Saves are O(delta): doc deltas against the previous save with a full
+    anchor every ``full_every`` saves, chunk bytes deduped against the
+    root's digest index.  With ``compact_every`` > 0 the plane compacts
+    the manifest (fresh full snapshot + history truncation + pack sweep)
+    every that many saves."""
+
+    def __init__(
+        self,
+        root: str,
+        *,
+        keep_snapshots: int = 4,
+        full_every: int = 8,
+        compact_every: int = 0,
+    ):
         self.root = root
         self.keep_snapshots = int(keep_snapshots)
+        self.full_every = int(full_every)
+        self.compact_every = int(compact_every)
         os.makedirs(root, exist_ok=True)
         self.saves = 0
+        self.compactions = 0
+        self.last_save_stats: Dict[str, Any] = {}
+        # save accelerator: previous folded doc + digest index, so steady-
+        # state saves never re-read the chain from disk
+        self._cache: Dict[str, Any] = {}
 
     def save(
         self,
@@ -788,18 +1890,39 @@ class PersistencePlane:
         sm: Optional[StateManager] = None,
         deltacr: Optional[DeltaCR] = None,
         extra: Optional[Dict[str, Any]] = None,
+        mode: str = "auto",
     ) -> int:
+        stats: Dict[str, Any] = {}
         seq = save_state(
-            self.root, sm=sm, deltacr=deltacr, extra=extra, keep_snapshots=self.keep_snapshots
+            self.root,
+            sm=sm,
+            deltacr=deltacr,
+            extra=extra,
+            keep_snapshots=self.keep_snapshots,
+            mode=mode,
+            full_every=self.full_every,
+            stats_out=stats,
+            _cache=self._cache,
         )
         self.saves += 1
+        self.last_save_stats = stats
+        if self.compact_every > 0 and self.saves % self.compact_every == 0:
+            self.compact()
+        return seq
+
+    def compact(self) -> int:
+        seq = compact_state(self.root, keep_snapshots=self.keep_snapshots)
+        self.compactions += 1
+        self._cache.clear()       # chain layout changed; next save re-reads
         return seq
 
     def recover(self, **kw) -> RecoveredState:
         return recover(self.root, **kw)
 
     def last_seq(self) -> Optional[int]:
-        entries = _read_manifest(self.root)
+        entries = _read_manifest_tail(self.root)
+        if not entries and not _manifest_tail_was_complete(self.root):
+            entries = _read_manifest(self.root)
         return int(entries[-1]["seq"]) if entries else None
 
     # --------------------------------------------------------------- repair

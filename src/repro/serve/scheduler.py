@@ -91,6 +91,12 @@ class SchedulerConfig:
     # process death and is re-admitted via Scheduler.recover().
     persist_path: Optional[str] = None
     keep_snapshots: int = 4
+    # Full-snapshot anchor cadence: saves in between are O(delta) docs
+    # folded onto the last anchor at recovery (1 = every save is full).
+    persist_full_every: int = 8
+    # When > 0, compact the manifest (fresh full snapshot + history
+    # truncation + pack sweep) every this many saves.
+    persist_compact_every: int = 0
 
 
 @dataclasses.dataclass
@@ -151,7 +157,10 @@ class Scheduler:
         self.plane: Optional[PersistencePlane] = None
         if self.cfg.persist_path is not None:
             self.plane = PersistencePlane(
-                self.cfg.persist_path, keep_snapshots=self.cfg.keep_snapshots
+                self.cfg.persist_path,
+                keep_snapshots=self.cfg.keep_snapshots,
+                full_every=self.cfg.persist_full_every,
+                compact_every=self.cfg.persist_compact_every,
             )
 
     # --------------------------------------------------------------- admit
@@ -498,6 +507,12 @@ class Scheduler:
         if self.gate is not None:
             h["gate_acquires"] = self.gate.stats.acquires
             h["gate_demotions"] = self.gate.stats.demotions
+        if self.plane is not None:
+            h["persist_saves"] = self.plane.saves
+            h["persist_compactions"] = self.plane.compactions
+            if self.plane.last_save_stats:
+                h["persist_last_kind"] = self.plane.last_save_stats.get("kind")
+                h["persist_last_bytes"] = self.plane.last_save_stats.get("bytes_written")
         # a single boolean for monitors: anything degraded/broken right now?
         h["ok"] = (
             not h.get("degraded", False)

@@ -381,10 +381,12 @@ def test_restore_after_corruption_heals_from_durable_blobs(tmp_path):
     assert rs.mismatches == 1 and rs.repaired == 1 and rs.quarantined == 0
     cr2.shutdown()
 
-    # Now rot the durable blob itself: recovery must refuse the snapshot
-    # (checksummed manifest entries), not silently serve flipped bytes.
-    blobs = sorted(tmp_path.glob("state/*"), key=lambda p: p.stat().st_size)
-    blob = blobs[-1]                                 # largest file holds chunks
+    # Now rot the durable bytes themselves: recovery must refuse the
+    # snapshot (digest-verified pack reads), not silently serve flipped
+    # bytes.  v2 layout: chunk payloads live in the content-addressed packs.
+    blobs = sorted(tmp_path.glob("state/chunks/pack-*.blob"),
+                   key=lambda p: p.stat().st_size)
+    blob = blobs[-1]                                 # largest pack holds chunks
     raw = bytearray(blob.read_bytes())
     raw[len(raw) // 2] ^= 0x01
     blob.write_bytes(bytes(raw))

@@ -279,7 +279,9 @@ def test_save_recover_resave_byte_equality(seed, n_ckpts, dirty_elems):
 def test_persistence_plane_wrapper(tmp_path):
     sm, fs, cr = _mk_sm()
     _grow_tree(sm, fs, cr)
-    plane = PersistencePlane(str(tmp_path / "p"), keep_snapshots=2)
+    # full_every=1: every save is a self-standing full anchor, so retention
+    # reduces to the v1 contract — exactly keep_snapshots snap docs on disk
+    plane = PersistencePlane(str(tmp_path / "p"), keep_snapshots=2, full_every=1)
     assert plane.last_seq() is None
     s1 = plane.save(sm=sm)
     s2 = plane.save(sm=sm)
@@ -291,6 +293,25 @@ def test_persistence_plane_wrapper(tmp_path):
     assert len(blobs) == 2
     rec = plane.recover()
     assert rec.seq == 3
+    cr.shutdown()
+    rec.deltacr.shutdown()
+
+
+def test_persistence_plane_delta_chain_retention(tmp_path):
+    """With delta docs on, retention keeps the newest heads plus whatever
+    their chains fold from — and nothing older."""
+    sm, fs, cr = _mk_sm()
+    _grow_tree(sm, fs, cr)
+    plane = PersistencePlane(str(tmp_path / "p"), keep_snapshots=2, full_every=4)
+    for _ in range(6):
+        plane.save(sm=sm)
+    assert plane.last_save_stats["kind"] == "delta"
+    blobs = sorted(p for p in os.listdir(plane.root) if p.startswith("snap-"))
+    # seq 5 is the second full anchor (chain of 4 exhausted at seq 4);
+    # retained: heads {5, 6} + base closure {5} = exactly 2 docs
+    assert blobs == ["snap-00000005.dbox", "snap-00000006.dbox"]
+    rec = plane.recover()
+    assert rec.seq == 6
     cr.shutdown()
     rec.deltacr.shutdown()
 
@@ -407,5 +428,37 @@ def test_save_after_torn_manifest_tail_is_durable(tmp_path):
     rec = recover(root)
     assert rec.seq == seq                        # not an older snapshot
     assert c_new in rec.state_manager.nodes
+    cr.shutdown()
+    rec.deltacr.shutdown()
+
+
+def test_kill_at_pack_or_index_write_keeps_previous_durable(tmp_path):
+    """v2 fault points: a kill while writing the chunk pack or the digest
+    index leaves the previous snapshot authoritative (the manifest append
+    is the commit point), and the plane heals on the next save."""
+    from repro.core import faults
+    from repro.core.faults import FaultError
+
+    sm, fs, cr = _mk_sm()
+    _grow_tree(sm, fs, cr)
+    plane = PersistencePlane(str(tmp_path / "p"), keep_snapshots=4, full_every=4)
+    assert plane.save(sm=sm) == 1
+
+    sm.sandbox.proc.mutate("heap", lambda h: h.__setitem__(0, 41.0))
+    sm.checkpoint()
+    cr.wait_dumps()
+    for point in ("persist.pack_write", "persist.index_write"):
+        with faults.inject(faults.FaultPlan().add(point)):
+            with pytest.raises(FaultError):
+                plane.save(sm=sm)
+        assert plane.last_seq() == 1
+        rec = recover(plane.root)
+        assert rec.seq == 1                      # previous durable snapshot
+        rec.deltacr.shutdown()
+    seq = plane.save(sm=sm)                      # plane heals: save lands
+    assert seq == 2
+    rec = recover(plane.root)
+    assert rec.seq == 2
+    assert rec.state_manager.sandbox.proc.get("heap")[0] == 41.0
     cr.shutdown()
     rec.deltacr.shutdown()
