@@ -14,6 +14,7 @@ import time
 
 def main() -> None:
     from . import (
+        fig6_decode_fanout,
         fig6_e2e_mcts,
         fig7_rl_fanout,
         fig8_async_warm,
@@ -22,6 +23,8 @@ def main() -> None:
         fig11_dump_pipeline,
         fig12_stream_overlap,
         fig13_persist_recover,
+        fig13b_incremental_persist,
+        fig14_sharded_dump,
         roofline,
         table2_cr_latency,
         table3_fork_fanout,
@@ -33,6 +36,7 @@ def main() -> None:
         "table3": table3_fork_fanout.run,
         "table4": table4_breakdown.run,
         "fig6": fig6_e2e_mcts.run,
+        "fig6_decode": fig6_decode_fanout.run,
         "fig7": fig7_rl_fanout.run,
         "fig8": fig8_async_warm.run,
         "fig9": fig9_write_amp.run,
@@ -40,6 +44,8 @@ def main() -> None:
         "fig11": fig11_dump_pipeline.run,
         "fig12": fig12_stream_overlap.run,
         "fig13": fig13_persist_recover.run,
+        "fig13b": fig13b_incremental_persist.run,
+        "fig14": fig14_sharded_dump.run,
         "roofline": roofline.run,
     }
     selected = sys.argv[1:] or list(benches)

@@ -131,6 +131,11 @@ class ChunkedView:
     trailing_pad: int
     grid_fn: Callable[[], Any] = field(repr=False)
     _grid: Any = field(default=None, repr=False)
+    # Non-empty when grid rows are the tiles of a shard-native TilePlan
+    # (dist.shard_dump) instead of a flat row-major byte split.  Kernel
+    # diff/apply bases only pair with views of the *same* layout; metadata
+    # digest compares are layout-independent and need no guard.
+    tile_grid: Tuple[int, ...] = ()
 
     @property
     def grid(self) -> Any:
@@ -265,6 +270,37 @@ class EncodeResult:
     drain_ms: float = 0.0
     commit_ms: float = 0.0
     stream_wall_ms: float = 0.0
+    shard_parts: int = 0             # per-shard tasks run (sharded views only)
+
+
+@dataclass
+class _ShardRows:
+    """One shard part's drained rows, keyed by *global* chunk id.
+
+    Produced by the per-shard tasks of a sharded view; holds raw
+    ``(payload, digest)`` pairs only — store folding is deferred to
+    :meth:`DeltaDumpPipeline._commit_sharded_key`, which assembles every
+    part's rows in global chunk order so the resulting metadata is
+    chunk-for-chunk identical to a single-device dump.  ``chunk_ids`` stays
+    empty: a part holds no store references, so the transactional rollback
+    walk sees nothing to decref here."""
+
+    plan_key: str                    # the owning tensor key (task key adds #shardK)
+    rows: Dict[int, Tuple[bytes, Optional[bytes]]]
+    kind: str                        # "kernel" | "full"
+    chunk_ids: Tuple[int, ...] = ()
+
+
+@dataclass
+class _ShardedPlan:
+    """Bookkeeping for one sharded view's fan-out: the per-part tasks plus
+    the commit-time context (usable parent meta, whether any part diffed
+    against a base)."""
+
+    view: Any                        # dist.shard_dump.ShardedView (duck-typed)
+    pm: Optional[TensorMeta]
+    tasks: List["_KeyTask"]
+    used_base: bool
 
 
 @dataclass
@@ -416,6 +452,7 @@ class DeltaDumpPipeline:
                 n_chunks=n,
                 trailing_pad=meta.trailing_pad,
                 grid_fn=lambda g=grid: g,
+                tile_grid=tuple(meta.tile_grid),
             )
         if not views:
             return False
@@ -505,6 +542,7 @@ class DeltaDumpPipeline:
     ) -> "EncodeResult":
         store = self.store
         tasks: List[_KeyTask] = []
+        sharded: "OrderedDict[str, _ShardedPlan]" = OrderedDict()
         for key, view in gen.views.items():
             pm = parent_entries.get(key)
             # NOTE: the kernel path does not require parent digests — its
@@ -512,21 +550,32 @@ class DeltaDumpPipeline:
             # detects dirty chunks by id inequality.
             pm_ok = pm is not None and pm.dtype == view.dtype
             # --- clean key: metadata-level re-reference, zero bytes moved
-            if pm_ok and pm.shape == view.shape and not gen.is_dirty(key):
+            if pm_ok and pm.shape == tuple(view.shape) and not gen.is_dirty(key):
                 store.incref_many(pm.chunk_ids)
                 res.entries[key] = pm
                 res.clean_keys += 1
                 continue
             base = parent_rec.views.get(key) if parent_rec is not None else None
-            tasks.append(self._plan_key(key, view, pm if pm_ok else None, base))
+            if hasattr(view, "parts"):   # dist.shard_dump.ShardedView
+                splan = self._plan_sharded_key(key, view, pm if pm_ok else None, base)
+                sharded[key] = splan
+                tasks.extend(splan.tasks)
+            else:
+                tasks.append(self._plan_key(key, view, pm if pm_ok else None, base))
 
         items = [t.as_window_item() for t in tasks]
         streamed = self.stream is not None and self.stream.should_stream(items)
+        shard_out: Dict[str, List[_ShardRows]] = {}
         try:
             if streamed:
-                self._run_streamed(tasks, items, res, cancel, priority)
+                self._run_streamed(tasks, items, res, cancel, priority, shard_out)
             else:
-                self._run_sync(tasks, res, cancel)
+                self._run_sync(tasks, res, cancel, shard_out)
+            # assemble each sharded key's parts in global chunk order — the
+            # store folds run on this (single) thread, so ids and digests
+            # come out exactly as a single-device dump would produce them
+            for key, splan in sharded.items():
+                self._commit_sharded_key(key, splan, shard_out.get(key, []), res)
             # extras stay inside the transaction: a failure here must also
             # roll back every reference the tasks/clean keys acquired
             for key, arr in gen.extras.items():
@@ -563,6 +612,11 @@ class DeltaDumpPipeline:
         if (
             pm is not None
             and base is not None
+            # kernel bases must share the flat row layout; tiled metadata or
+            # a sharded/tiled base pairs only with the sharded planner
+            and not pm.tile_grid
+            and not getattr(base, "tile_grid", ())
+            and not hasattr(base, "parts")
             and base.chunk_bytes == view.chunk_bytes
             and len(pm.chunk_ids) == base.n_chunks
         ):
@@ -755,6 +809,305 @@ class DeltaDumpPipeline:
 
         return _KeyTask(key=key, weight=weight, encode=encode, drain=drain, commit=commit)
 
+    # ----------------------------------------------- encode: sharded views
+    #
+    # A dist.shard_dump.ShardedView fans out into one task per shard part:
+    # the diff/compact kernel runs on the part's own device against that
+    # part's slice of the base, and the drain fetches exactly the compacted
+    # dirty rows (front-packed by the kernel) with explicit jax.device_get —
+    # no full-array gather ever happens, and the per-device bytes land in
+    # the shard_dump.FETCH ledger.  Store folding is deferred: parts return
+    # _ShardRows and _commit_sharded_key assembles global chunk order.
+    def _plan_sharded_key(
+        self, key: str, view: Any, pm: Optional[TensorMeta], base: Optional[Any]
+    ) -> _ShardedPlan:
+        pm_use = (
+            pm
+            if (
+                pm is not None
+                and pm.shape == tuple(view.shape)
+                and tuple(pm.tile_grid) == tuple(view.plan.grid)
+                and len(pm.chunk_ids) == view.n_chunks
+            )
+            else None
+        )
+        # a usable diff base is either the parent's ShardedView under the
+        # identical plan (per-part device diff) or a host tile-layout grid
+        # from rebuild/decode (rows upload to each part's device — h2d,
+        # which the transfer guard permits)
+        base_map = None
+        host_base = None
+        if pm_use is not None and base is not None:
+            if hasattr(base, "parts"):
+                if tuple(base.plan.grid) == tuple(view.plan.grid):
+                    base_map = base.part_map()
+            elif (
+                tuple(getattr(base, "tile_grid", ())) == tuple(view.plan.grid)
+                and base.chunk_bytes == view.chunk_bytes
+                and base.n_chunks == view.n_chunks
+            ):
+                g = base.grid
+                if isinstance(g, np.ndarray):
+                    host_base = g
+        tasks: List[_KeyTask] = []
+        used_base = False
+        for k, part in enumerate(view.parts):
+            tkey = f"{key}#shard{k}"
+            weight = part.n_local * view.chunk_bytes
+            bpart = (
+                base_map.get(part.tile_ids.tobytes()) if base_map is not None else None
+            )
+            if (
+                bpart is not None
+                and part.device is not None
+                and bpart.device == part.device
+            ):
+                used_base = True
+                tasks.append(
+                    self._plan_shard_kernel(
+                        tkey,
+                        key,
+                        view,
+                        part,
+                        (lambda bp=bpart: bp.grid),
+                        weight,
+                        base_block_fn=bpart.block_fn,
+                    )
+                )
+            elif host_base is not None and part.device is not None:
+                used_base = True
+                tasks.append(
+                    self._plan_shard_kernel(
+                        tkey,
+                        key,
+                        view,
+                        part,
+                        (lambda g=host_base, p=part: g[p.tile_ids]),
+                        weight,
+                    )
+                )
+            else:
+                tasks.append(self._plan_shard_full(tkey, key, part, weight))
+        return _ShardedPlan(view=view, pm=pm_use, tasks=tasks, used_base=used_base)
+
+    def _plan_shard_kernel(
+        self, tkey: str, plan_key: str, view: Any, part: Any, base_fn, weight: int,
+        *, base_block_fn=None
+    ) -> _KeyTask:
+        from repro.kernels import ops as kops
+        import jax
+        import jax.numpy as jnp
+
+        K = part.n_local
+        K2 = 1 << (K - 1).bit_length()
+        cap = self._capacity(K2)
+        use_fused = self.fused and cap * view.chunk_bytes <= self.FUSED_VMEM_BYTES
+        block_path = base_block_fn is not None and part.block_fn is not None
+
+        def encode():
+            if block_path:
+                # block-native fast path: diff directly on the shards' native
+                # layouts (one compare+reduce pass) and extract only the
+                # dirty tiles — neither side pays the O(state) tile-grid
+                # byte-transpose.  Row bytes are bit-identical to the grid
+                # path, so digests and the drain contract are unchanged.
+                # Checksum lanes are deferred to drain, where they run over
+                # the power-of-two fetch slice instead of the full capacity
+                # buffer.
+                data, idx, count = kops.shard_block_encode(
+                    base_block_fn(),
+                    part.block_fn(),
+                    tuple(part.counts),
+                    tuple(view.plan.tile),
+                    cap,
+                )
+                kops.start_host_fetch(idx, count)
+                return data, idx, count, None
+            old = base_fn()
+            if isinstance(old, np.ndarray):
+                old = jax.device_put(old, part.device)
+            new = part.grid
+            if K2 != K:
+                pad_rows = ((0, K2 - K), (0, 0))
+                old = jnp.pad(old, pad_rows)
+                new = jnp.pad(new, pad_rows)
+            if use_fused:
+                data, idx, count, sums = kops.fused_encode(old, new, cap)
+            else:
+                data, idx, count = kops.delta_encode(old, new, cap)
+                sums = None
+            # prestart only the control DMAs; the bulk rows are fetched as an
+            # exact [:count] slice in drain so moved bytes stay ∝ the delta
+            kops.start_host_fetch(idx, count)
+            return data, idx, count, sums
+
+        def drain(enc):
+            from repro.dist import shard_dump as sd
+
+            data, idx, count, sums = enc
+            n = int(jax.device_get(count))
+            if n > cap:
+                # capacity overflow: this part drains in full — still only
+                # its own shard's bytes, never a gather
+                grid_np = jax.device_get(part.grid)
+                sd.FETCH.note_fetch(part.device, grid_np.nbytes)
+                rows = self._drain_rows(grid_np, range(K), keys=part.tile_ids)
+                return _ShardRows(plan_key, rows, "full")
+            if n == 0:
+                return _ShardRows(plan_key, {}, "kernel")
+            # compacted rows are front-packed in ascending order: fetch the
+            # dirty rows, mapped to global ids via tile_ids.  The fetch
+            # length rounds up to a power of two so the device-side slice
+            # compiles O(log cap) distinct programs per device instead of
+            # one per observed dirty count — fetched bytes stay within 2x
+            # the exact delta
+            n2 = min(cap, 1 << (n - 1).bit_length())
+            data_np = jax.device_get(data[:n2])
+            idx_np = jax.device_get(idx[:n2])
+            sd.FETCH.note_fetch(part.device, data_np.nbytes + idx_np.nbytes)
+            data_np = data_np[:n]
+            idx_np = idx_np[:n]
+            if use_fused and (sums is not None or block_path):
+                faults.fire("kernels.fused")
+                if self.fused_verify:
+                    got = kops.chunk_checksums_host(data_np)
+                    if sums is not None:
+                        want = jax.device_get(sums[:n2])[:n]
+                    else:
+                        # block path: device lanes over only the fetched
+                        # slice — O(fetched) integrity instead of O(capacity)
+                        want = jax.device_get(
+                            kops.chunk_checksums_device(data[:n2])
+                        )[:n]
+                    if not np.array_equal(got, want):
+                        bad = np.flatnonzero(np.any(got != want, axis=1))
+                        self.fused_checksum_mismatches += len(bad)
+                        raise FaultError(
+                            f"fused dump checksum mismatch on {tkey!r}: "
+                            f"{len(bad)}/{n} fetched rows fail the "
+                            f"device-computed lanes (attempt rolls back)"
+                        )
+            gids = part.tile_ids[np.asarray(idx_np, dtype=np.int64)]
+            rows = self._drain_rows(data_np, range(n), keys=gids)
+            return _ShardRows(plan_key, rows, "kernel")
+
+        def commit(sr: _ShardRows) -> _ShardRows:
+            return sr
+
+        return _KeyTask(key=tkey, weight=weight, encode=encode, drain=drain, commit=commit)
+
+    def _plan_shard_full(
+        self, tkey: str, plan_key: str, part: Any, weight: int
+    ) -> _KeyTask:
+        from repro.kernels import ops as kops
+
+        def encode():
+            g = part.grid
+            if not isinstance(g, np.ndarray):
+                kops.start_host_fetch(g)
+            return g
+
+        def drain(g):
+            import jax
+
+            from repro.dist import shard_dump as sd
+
+            if not isinstance(g, np.ndarray):
+                g = jax.device_get(g)
+                if part.device is not None:
+                    sd.FETCH.note_fetch(part.device, g.nbytes)
+                # device None = whole-array fallback part whose grid_fn
+                # already recorded the gather in the ledger
+            rows = self._drain_rows(g, range(part.n_local), keys=part.tile_ids)
+            return _ShardRows(plan_key, rows, "full")
+
+        def commit(sr: _ShardRows) -> _ShardRows:
+            return sr
+
+        return _KeyTask(key=tkey, weight=weight, encode=encode, drain=drain, commit=commit)
+
+    def _commit_sharded_key(
+        self,
+        key: str,
+        splan: _ShardedPlan,
+        shard_rows: List[_ShardRows],
+        res: EncodeResult,
+    ) -> None:
+        """Fold one sharded view's drained parts into the store.
+
+        Walks global chunk ids 0..n-1 in order on the caller thread —
+        store mutation stays single-threaded and the resulting metadata
+        (ids, digests, tile layout) is bit-identical to what a
+        single-device dump of the same tensor under the same TilePlan
+        produces, which is the cross-mesh determinism invariant the
+        differential tests pin."""
+        view = splan.view
+        pm = splan.pm
+        store = self.store
+        rows: Dict[int, Tuple[bytes, Optional[bytes]]] = {}
+        kinds = set()
+        for sr in shard_rows:
+            rows.update(sr.rows)
+            kinds.add(sr.kind)
+        pm_digests_ok = pm is not None and len(pm.digests) == len(pm.chunk_ids)
+        with_digests = store.dedupe and (pm is None or pm_digests_ok)
+        ids: List[int] = []
+        digests: List[bytes] = []
+        dirtied = 0
+        try:
+            for i in range(view.n_chunks):
+                pr = rows.get(i)
+                if pr is None:  # clean under the per-part diff
+                    if pm is None:
+                        raise FaultError(
+                            f"sharded dump of {key!r} missing chunk {i} "
+                            f"with no parent metadata"
+                        )
+                    store.incref(pm.chunk_ids[i])
+                    ids.append(pm.chunk_ids[i])
+                    if with_digests:
+                        digests.append(pm.digests[i])
+                    continue
+                payload, digest = pr
+                same = False
+                if pm is not None:
+                    if digest is not None and pm_digests_ok:
+                        same = pm.digests[i] == digest
+                    elif digest is None:  # digest-less store: byte compare
+                        same = store.get(pm.chunk_ids[i]) == payload
+                if same:
+                    store.incref(pm.chunk_ids[i])
+                    ids.append(pm.chunk_ids[i])
+                    if with_digests:
+                        digests.append(digest)
+                    continue
+                if digest is not None:
+                    ids.append(store.put_digested(payload, digest=digest, pad=0))
+                else:
+                    ids.append(store.put(payload, pad=0))
+                if with_digests:
+                    digests.append(digest)
+                dirtied += 1
+        except BaseException:
+            # partial fold: refs taken so far belong to no entry yet —
+            # return them so the dump's rollback leaves the store balanced
+            store.decref_many(ids)
+            raise
+        res.entries[key] = TensorMeta(
+            shape=tuple(view.shape),
+            dtype=view.dtype,
+            chunk_ids=tuple(ids),
+            digests=tuple(digests) if with_digests else (),
+            trailing_pad=0,
+            tile_grid=tuple(view.plan.grid),
+        )
+        res.dirtied += dirtied
+        res.shard_parts += len(splan.tasks)
+        if splan.used_base and "full" not in kinds:
+            res.kernel_keys += 1
+        else:
+            res.full_keys += 1
+
     # ---------------------------------------------------- encode: execution
     def _merge_task_result(
         self, res: EncodeResult, key: str, out: Tuple[TensorMeta, int, str]
@@ -768,14 +1121,22 @@ class DeltaDumpPipeline:
             res.full_keys += 1
 
     def _run_sync(
-        self, tasks: List[_KeyTask], res: EncodeResult, cancel: Optional[threading.Event]
+        self,
+        tasks: List[_KeyTask],
+        res: EncodeResult,
+        cancel: Optional[threading.Event],
+        shard_out: Dict[str, List[_ShardRows]],
     ) -> None:
         for task in tasks:
             if cancel is not None and cancel.is_set():
                 raise StreamCancelled(
                     f"dump cancelled after {len(res.entries)} tensors (sync path)"
                 )
-            self._merge_task_result(res, task.key, task.run_sync())
+            out = task.run_sync()
+            if isinstance(out, _ShardRows):
+                shard_out.setdefault(out.plan_key, []).append(out)
+            else:
+                self._merge_task_result(res, task.key, out)
 
     def _run_streamed(
         self,
@@ -784,9 +1145,10 @@ class DeltaDumpPipeline:
         res: EncodeResult,
         cancel: Optional[threading.Event],
         priority: str,
+        shard_out: Dict[str, List[_ShardRows]],
     ) -> None:
         assert self.stream is not None
-        out: Dict[str, Tuple[TensorMeta, int, str]] = {}
+        out: Dict[str, Any] = {}
         try:
             stats = self.stream.stream(items, out, cancel=cancel, priority=priority)
         except BaseException:
@@ -795,7 +1157,11 @@ class DeltaDumpPipeline:
             self._rollback(out)
             raise
         for task in tasks:                      # deterministic merge order
-            self._merge_task_result(res, task.key, out[task.key])
+            o = out[task.key]
+            if isinstance(o, _ShardRows):
+                shard_out.setdefault(o.plan_key, []).append(o)
+            else:
+                self._merge_task_result(res, task.key, o)
         res.streamed = True
         res.windows = stats.windows
         res.window_bytes = stats.window_bytes
@@ -960,9 +1326,20 @@ class DeltaDumpPipeline:
             grid_np: Optional[np.ndarray] = None
             base = parent_rec.views.get(name) if parent_rec is not None else None
             pm = parent_image.entries.get(name) if parent_image is not None else None
+            if meta.tile_grid:
+                # shard-native image: per-shard delta_apply when the base is
+                # still sharded under the same plan, host tile scatter else
+                val, view = self._decode_tiled(meta, pm, base)
+                payload[name] = val
+                if view is not None:
+                    new_views[name] = view
+                continue
             if (
                 base is not None
                 and pm is not None
+                and not hasattr(base, "parts")
+                and not getattr(base, "tile_grid", ())
+                and not pm.tile_grid
                 and len(pm.chunk_ids) == base.n_chunks
                 and meta.dtype == pm.dtype
                 and self._rows_match(meta, base.chunk_bytes)
@@ -1032,6 +1409,133 @@ class DeltaDumpPipeline:
                 if view is not None:
                     new_views[name] = view
         return payload, new_views
+
+    # ------------------------------------------------------- decode: tiled
+    def _decode_tiled(
+        self, meta: TensorMeta, pm: Optional[TensorMeta], base: Optional[Any]
+    ) -> Tuple[Any, Optional[ChunkedView]]:
+        """Rebuild a shard-native (tiled) tensor.
+
+        Preferred path: the parent base is a ShardedView under the same
+        TilePlan — each part scatters only its own dirty tiles with
+        ``delta_apply`` on its own device and the global array reassembles
+        via per-device blocks (no host round-trip of clean bytes).  Any
+        asymmetry falls back to the host tile path, which is always
+        correct: copy clean tiles from a host base (or fetch everything),
+        then invert the tile layout."""
+        from repro.dist import shard_dump as sd
+
+        store = self.store
+        plan = sd.TilePlan.from_meta(meta)
+        pm_ok = (
+            pm is not None
+            and tuple(pm.tile_grid) == tuple(meta.tile_grid)
+            and pm.dtype == meta.dtype
+            and pm.shape == meta.shape
+            and len(pm.chunk_ids) == len(meta.chunk_ids)
+        )
+        if (
+            pm_ok
+            and base is not None
+            and hasattr(base, "parts")
+            and tuple(base.plan.grid) == tuple(plan.grid)
+            and base.sharding is not None
+        ):
+            try:
+                return self._decode_tiled_sharded(meta, pm, base, plan)
+            except Exception:
+                pass   # device-path trouble: the host path below is always correct
+        n = plan.n_tiles
+        grid = np.empty((n, plan.tile_bytes), np.uint8)
+        host_base = None
+        if (
+            pm_ok
+            and base is not None
+            and not hasattr(base, "parts")
+            and tuple(getattr(base, "tile_grid", ())) == tuple(plan.grid)
+            and base.chunk_bytes == plan.tile_bytes
+            and isinstance(base.grid, np.ndarray)
+        ):
+            host_base = base.grid
+        for i in range(n):
+            if host_base is not None and meta.chunk_ids[i] == pm.chunk_ids[i]:
+                grid[i] = host_base[i]
+            else:
+                grid[i] = np.frombuffer(store.get(meta.chunk_ids[i]), np.uint8)
+        arr = sd.grid_to_array(grid, plan)
+        view = ChunkedView(
+            shape=tuple(meta.shape),
+            dtype=meta.dtype,
+            nbytes=int(arr.nbytes),
+            chunk_bytes=plan.tile_bytes,
+            n_chunks=n,
+            trailing_pad=0,
+            grid_fn=lambda g=grid: g,
+            tile_grid=tuple(plan.grid),
+        )
+        return arr, view
+
+    def _decode_tiled_sharded(
+        self, meta: TensorMeta, pm: TensorMeta, base: Any, plan: Any
+    ) -> Tuple[Any, Any]:
+        import jax
+
+        from repro.dist import shard_dump as sd
+        from repro.kernels import ops as kops
+
+        store = self.store
+        tile_bytes = plan.tile_bytes
+        out_parts = []
+        block_by_off = {}
+        for part in base.parts:
+            if part.device is None:
+                raise RuntimeError("gather-fallback base part: no device decode")
+            gids = part.tile_ids
+            dirty = [
+                j
+                for j in range(part.n_local)
+                if meta.chunk_ids[int(gids[j])] != pm.chunk_ids[int(gids[j])]
+            ]
+            bgrid = part.grid
+            if dirty:
+                # pow2-pad the scatter rows (idx -1 = kernel no-op) so
+                # delta_apply compiles per geometry, not per dirty count
+                M = 1 << (len(dirty) - 1).bit_length()
+                rows = np.zeros((M, tile_bytes), np.uint8)
+                idx = np.full((M,), -1, np.int32)
+                for j, lj in enumerate(dirty):
+                    rows[j] = np.frombuffer(
+                        store.get(meta.chunk_ids[int(gids[lj])]), np.uint8
+                    )
+                    idx[j] = lj
+                new_grid = kops.delta_apply(
+                    bgrid,
+                    jax.device_put(rows, part.device),
+                    jax.device_put(idx, part.device),
+                )
+            else:
+                new_grid = bgrid
+            block = sd.device_grid_to_block(
+                new_grid, part.counts, plan.tile, meta.dtype
+            )
+            out_parts.append((part, new_grid))
+            block_by_off[part.offsets] = block
+        # scatter blocks onto every addressable device of the target
+        # sharding — replicated axes receive the same block on each replica
+        tile = plan.tile
+        arrays = []
+        imap = base.sharding.addressable_devices_indices_map(tuple(meta.shape))
+        for dev, index in imap.items():
+            offs = tuple((sl.start or 0) // t for sl, t in zip(index, tile))
+            block = block_by_off[offs]
+            if block.devices() != {dev}:
+                block = jax.device_put(block, dev)
+            arrays.append(block)
+        arr = jax.make_array_from_single_device_arrays(
+            tuple(meta.shape), base.sharding, arrays
+        )
+        new_view = sd.view_from_part_grids(plan, out_parts, base.sharding)
+        return arr, new_view
 
     @staticmethod
     def _rows_match(meta: TensorMeta, row_bytes: int) -> bool:

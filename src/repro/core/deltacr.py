@@ -421,6 +421,7 @@ class DumpImage:
     encode_ms: float = 0.0   # diff dispatch / host compare stage
     drain_ms: float = 0.0    # device→host fetch + copy + hash stage (pool)
     commit_ms: float = 0.0   # store folds + metadata stage (caller)
+    shard_parts: int = 0     # per-shard tasks run (0 = no sharded tensors)
 
 
 class DeltaCRStats:
@@ -440,6 +441,9 @@ class DeltaCRStats:
         self.streamed_dumps = 0       # dumps that went through the stream engine
         self.stream_windows = 0       # total windows streamed
         self.cancelled_dumps = 0      # dumps rolled back mid-stream
+        # shard-native accounting (gather-free dumps of mesh-sharded state)
+        self.sharded_dumps = 0        # dumps containing >=1 sharded tensor
+        self.shard_parts = 0          # per-shard encode/drain tasks run
         # fault-domain accounting (self-healing dump path)
         self.dump_retries = 0         # encode attempts retried after rollback
         self.dump_failures = 0        # dumps that failed loudly (ticket aborted)
@@ -808,6 +812,7 @@ class DeltaCR:
             encode_ms=res.encode_ms if res is not None else 0.0,
             drain_ms=res.drain_ms if res is not None else 0.0,
             commit_ms=res.commit_ms if res is not None else 0.0,
+            shard_parts=res.shard_parts if res is not None else 0,
         )
         # Ownership transfers to the ImageStore.  When the checkpoint was
         # dropped mid-dump, commit() resolves it transactionally: the image
@@ -841,6 +846,9 @@ class DeltaCR:
             if image.streamed:
                 self.stats.streamed_dumps += 1
                 self.stats.stream_windows += image.stream_windows
+            if image.shard_parts:
+                self.stats.sharded_dumps += 1
+                self.stats.shard_parts += image.shard_parts
         return image
 
     # ---------------------------------------------------- self-healing encode
@@ -1319,7 +1327,13 @@ class DeltaCR:
                 view = rec.views.get(name)
                 if view is None or idx >= view.n_chunks:
                     continue
-                row = np.ascontiguousarray(np.asarray(view.grid)[idx]).tobytes()
+                row_fn = getattr(view, "row_bytes", None)
+                if row_fn is not None:   # sharded view: single-row shard fetch
+                    row = row_fn(idx)
+                    if row is None:
+                        continue
+                else:
+                    row = np.ascontiguousarray(np.asarray(view.grid)[idx]).tobytes()
             except Exception:
                 continue        # anchor unreadable: try the next location
             finally:
@@ -1349,7 +1363,16 @@ class DeltaCR:
                     else None
                 ),
                 "dirty_pred_samples": self.stats.pred_err_n,
+                # shard-native dump observability
+                "sharded_dumps": self.stats.sharded_dumps,
+                "shard_parts": self.stats.shard_parts,
             }
+        if self.stats.sharded_dumps:
+            # per-device fetch accounting (process-wide; only meaningful —
+            # and only reported — once this engine has run a sharded dump)
+            from repro.dist import shard_dump as _sd
+
+            h["shards"] = _sd.fetch_stats()
         h["selector"] = self.selector.snapshot()
         if self.pipeline is not None:
             h["fused_checksum_mismatches"] = self.pipeline.fused_checksum_mismatches

@@ -70,6 +70,11 @@ class TensorMeta:
     # fallback).
     digests: Tuple[bytes, ...] = ()
     trailing_pad: int = 0
+    # Non-empty for shard-native dumps: per-dim tile counts of the canonical
+    # TilePlan (dist.shard_dump) whose row-major tile ids are this meta's
+    # chunk coordinates.  ``()`` keeps the flat row layout — the chunk bytes
+    # are a row-major split of the tensor — so old images read unchanged.
+    tile_grid: Tuple[int, ...] = ()
 
     @property
     def nbytes(self) -> int:

@@ -176,13 +176,18 @@ def _write_atomic(path: str, data: bytes) -> None:
 def _meta_doc(meta: TensorMeta, ref) -> Dict[str, Any]:
     """``ref(cid)`` maps a live chunk id to its persistent reference —
     dense blob index (v1) or persistent chunk id (v2)."""
-    return {
+    doc = {
         "shape": list(meta.shape),
         "dtype": meta.dtype,
         "chunks": [ref(cid) for cid in meta.chunk_ids],
         "digests": [d.hex() for d in meta.digests],
         "trailing_pad": meta.trailing_pad,
     }
+    # Emitted only for shard-native (tiled) metadata so flat-layout
+    # manifests stay byte-identical to what older readers expect.
+    if meta.tile_grid:
+        doc["tile_grid"] = list(meta.tile_grid)
+    return doc
 
 
 def _durable_nodes(tree: Dict[str, Any], deltacr: DeltaCR) -> Dict[int, Dict[str, Any]]:
@@ -1421,6 +1426,7 @@ def _materialize_state(
                 chunk_ids=tuple(ids),
                 digests=tuple(bytes.fromhex(d) for d in ent["digests"]),
                 trailing_pad=int(ent["trailing_pad"]),
+                tile_grid=tuple(int(g) for g in ent.get("tile_grid", ())),
             )
         layer.tombstones.update(layer_doc["tombstones"])
         lid_map[int(layer_doc["id"])] = layer.layer_id
@@ -1449,6 +1455,7 @@ def _materialize_state(
                 chunk_ids=tuple(ids),
                 digests=tuple(bytes.fromhex(d) for d in ent["digests"]),
                 trailing_pad=int(ent["trailing_pad"]),
+                tile_grid=tuple(int(g) for g in ent.get("tile_grid", ())),
             )
         image = DumpImage(
             image_id=int(img_doc["image_id"]),
@@ -1971,6 +1978,8 @@ def save_store(fs: DeltaFS, configs: Dict[str, LayerConfig], path: str) -> int:
                 "digests": [d.hex() for d in meta.digests],
                 "trailing_pad": meta.trailing_pad,
             }
+            if meta.tile_grid:
+                entries[key]["tile_grid"] = list(meta.tile_grid)
             for cid in meta.chunk_ids:
                 if cid not in seen:
                     seen.add(cid)
@@ -2039,6 +2048,7 @@ def load_store(path: str) -> Tuple[DeltaFS, Dict[str, LayerConfig]]:
                 chunk_ids=tuple(ids),
                 digests=tuple(bytes.fromhex(d) for d in ent.get("digests", [])),
                 trailing_pad=int(ent.get("trailing_pad", 0)),
+                tile_grid=tuple(int(g) for g in ent.get("tile_grid", ())),
             )
         layer.tombstones.update(meta["tombstones"])
         lid_map[int(old_lid_s)] = layer.layer_id

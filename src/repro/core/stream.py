@@ -110,6 +110,7 @@ class StreamStats:
     wall_ms: float = 0.0
     demoted_windows: int = 0
     window_bytes: int = 0            # the budget this dump's windows used
+    shard_items: int = 0             # per-shard part items (sharded dumps)
 
     @property
     def stage_sum_ms(self) -> float:
@@ -352,7 +353,12 @@ class ChunkStreamEngine:
             budget = max(budget, self.cfg.min_window_bytes)
             budget = min(budget, max(1, total_weight // max(self.cfg.min_windows, 1)))
         windows = pack_windows(items, budget)
-        stats = StreamStats(windows=len(windows), items=len(items), window_bytes=budget)
+        stats = StreamStats(
+            windows=len(windows),
+            items=len(items),
+            window_bytes=budget,
+            shard_items=sum(1 for it in items if "#shard" in it.key),
+        )
         gate = self.gate
         # never dispatch more windows than the gate can admit, or the commit
         # loop could wait on a slot the caller itself is holding

@@ -1,4 +1,5 @@
-"""Distribution: logical-axis sharding rules for the production meshes."""
-from . import sharding
+"""Distribution: logical-axis sharding rules for the production meshes and
+the shard-native (gather-free) dump/restore plumbing."""
+from . import shard_dump, sharding
 
-__all__ = ["sharding"]
+__all__ = ["shard_dump", "sharding"]

@@ -1,0 +1,680 @@
+"""Shard-native dump plans: gather-free O(delta) checkpoints under a mesh.
+
+The dump pipeline's chunk grids were flat ``(n_chunks, chunk_bytes)`` views
+over the *global* tensor — correct, but for an array laid out by
+``dist.sharding`` (FSDP×TP ``param_specs``, sequence-sharded ``cache_specs``)
+materializing that grid is a full cross-device gather before the diff even
+runs.  This module replaces the flat layout with a **canonical tile plan**:
+
+* :class:`TilePlan` tiles a tensor into N-d blocks; one tile = one store
+  chunk, with a *global* chunk id = the row-major index of its tile
+  coordinate.  The plan is a pure function of ``(shape, dtype, chunk_bytes)``
+  — it never looks at a mesh — so chunk ids and digests are bit-identical
+  whether the tensor lives on one device or sixty-four, and stay stable
+  across mesh re-layouts.
+* :class:`ShardedView` carries one :class:`ShardPart` per addressable shard:
+  the part's local tile grid is built *on its own device* (reshape +
+  transpose + bitcast — no cross-device traffic), and its ``tile_ids`` map
+  local grid rows to global chunk coordinates.  A shard whose block is not
+  tile-aligned degrades to a single gather part (counted, never silent).
+* :class:`ShardedArrayState` is the device-side ``ForkableState`` /
+  ``DeltaEncodable`` over a dict of (possibly sharded) ``jax.Array``s —
+  the sharded analogue of ``CowArrayState``.
+
+Restore is symmetric: :func:`grid_to_array` inverts the tile layout on host,
+and :meth:`ShardedArrayState.restore_from_payload` scatters per shard with
+``jax.device_put`` onto the *target* sharding — a checkpoint taken under one
+mesh layout restores under another.
+
+The module-level :class:`FetchStats` ledger records every device→host byte
+the sharded dump path moves, split per device, plus any full-array gather a
+fallback path performed — the fig14 benchmark and the CI multi-device lane
+gate ``gather_bytes == 0`` (with an additional ``jax.transfer_guard``
+assertion: the sharded path only ever uses *explicit* ``jax.device_get``).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.delta_pipeline import ChunkedView, DeltaGeneration, dtype_str
+
+__all__ = [
+    "FetchStats",
+    "ShardPart",
+    "ShardedArrayState",
+    "ShardedView",
+    "TilePlan",
+    "array_to_grid",
+    "fetch_stats",
+    "grid_to_array",
+    "is_partitioned",
+    "no_implicit_transfers",
+    "reset_fetch_stats",
+    "sharded_view",
+]
+
+#: Per-dim tile-count cap.  32 tiles per dim × the pow2-divisor rule keeps
+#: plans nesting-friendly for every production mesh axis (≤16-way) while
+#: bounding n_tiles for high-rank tensors.
+MAX_TILES_PER_DIM = 32
+
+
+# --------------------------------------------------------------------------
+# fetch accounting (the gather-free evidence ledger)
+# --------------------------------------------------------------------------
+class FetchStats:
+    """Byte ledger for the sharded dump path (process-global, thread-safe).
+
+    ``fetched_bytes`` counts explicit per-shard device→host fetches (the
+    O(delta) traffic); ``by_device`` splits them per source device so the
+    fig14 gate can assert bytes ∝ each shard's own delta.  ``gather_bytes``
+    counts full-array materializations of multi-device arrays — the thing
+    the sharded path exists to eliminate; any fallback that still gathers
+    (non-tile-aligned layout, digest/legacy dump of sharded state) lands
+    here instead of passing silently."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.fetched_bytes = 0
+        self.gather_bytes = 0
+        self.gathers = 0
+        self.by_device: Dict[str, int] = {}
+
+    def note_fetch(self, device: Any, nbytes: int) -> None:
+        key = str(device)
+        with self._lock:
+            self.fetched_bytes += int(nbytes)
+            self.by_device[key] = self.by_device.get(key, 0) + int(nbytes)
+
+    def note_gather(self, nbytes: int) -> None:
+        with self._lock:
+            self.gather_bytes += int(nbytes)
+            self.gathers += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "fetched_bytes": self.fetched_bytes,
+                "gather_bytes": self.gather_bytes,
+                "gathers": self.gathers,
+                "by_device": dict(self.by_device),
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.fetched_bytes = 0
+            self.gather_bytes = 0
+            self.gathers = 0
+            self.by_device.clear()
+
+
+FETCH = FetchStats()
+
+
+def fetch_stats() -> Dict[str, Any]:
+    return FETCH.snapshot()
+
+
+def reset_fetch_stats() -> None:
+    FETCH.reset()
+
+
+@contextlib.contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Assert no *implicit* device→host copy happens in the body.
+
+    The sharded dump path moves bytes only through explicit
+    ``jax.device_get`` calls, which the guard permits; any accidental
+    ``np.asarray(sharded_array)`` / ``int(device_scalar)`` — i.e. a gather
+    or an unaccounted fetch — raises immediately.  This is the
+    transfer-guard assertion the fig14 benchmark and the CI multi-device
+    differential tests run dumps under."""
+    import jax
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+# --------------------------------------------------------------------------
+# canonical tile plan
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TilePlan:
+    """Mesh-independent tiling of one tensor into chunk-sized N-d tiles.
+
+    ``grid[d]`` tiles along dim ``d`` (a power of two capped at
+    :data:`MAX_TILES_PER_DIM`, always dividing ``shape[d]``); the tile shape
+    is ``shape[d] // grid[d]`` per dim.  Chunk id of a tile = row-major
+    linear index of its tile coordinate — a *global* coordinate, identical
+    on every mesh layout.  Construction: start from the largest allowed
+    per-dim tile counts, then greedily halve the dim with the most tiles
+    (ties → lowest index) until one tile holds at least ``chunk_bytes`` —
+    deterministic, so two processes always agree on the plan."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+    grid: Tuple[int, ...]
+
+    @property
+    def tile(self) -> Tuple[int, ...]:
+        return tuple(s // g for s, g in zip(self.shape, self.grid))
+
+    @property
+    def n_tiles(self) -> int:
+        return int(np.prod(self.grid, dtype=np.int64))
+
+    @property
+    def tile_bytes(self) -> int:
+        itemsize = np.dtype(self.dtype).itemsize
+        return int(np.prod(self.tile, dtype=np.int64)) * itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.tile_bytes * self.n_tiles
+
+    @staticmethod
+    def for_array(shape: Tuple[int, ...], dtype: Any, chunk_bytes: int) -> "TilePlan":
+        shape = tuple(int(s) for s in shape)
+        assert shape and all(s > 0 for s in shape), "tile plans need rank>=1, non-empty"
+        dt = dtype_str(np.dtype(dtype))
+        itemsize = np.dtype(dt).itemsize
+        grid = [min(s & -s, MAX_TILES_PER_DIM) for s in shape]  # pow2 divisor cap
+
+        def tile_bytes() -> int:
+            return int(np.prod([s // g for s, g in zip(shape, grid)], dtype=np.int64)) * itemsize
+
+        while tile_bytes() < chunk_bytes and any(g > 1 for g in grid):
+            d = int(np.argmax(grid))             # most tiles; ties → lowest dim
+            grid[d] //= 2
+        return TilePlan(shape=shape, dtype=dt, grid=tuple(grid))
+
+    @staticmethod
+    def from_meta(meta: Any) -> "TilePlan":
+        """Rebuild the plan a persisted :class:`TensorMeta` was dumped with."""
+        return TilePlan(
+            shape=tuple(meta.shape), dtype=meta.dtype, grid=tuple(meta.tile_grid)
+        )
+
+
+def _interleave(plan_shape: Tuple[int, ...], grid: Tuple[int, ...]) -> Tuple[List[int], List[int]]:
+    """(reshape dims, transpose perm) taking an array to (g0..gk, t0..tk)."""
+    tile = [s // g for s, g in zip(plan_shape, grid)]
+    dims: List[int] = []
+    for g, t in zip(grid, tile):
+        dims.extend((g, t))
+    nd = len(plan_shape)
+    perm = [2 * i for i in range(nd)] + [2 * i + 1 for i in range(nd)]
+    return dims, perm
+
+
+def array_to_grid(arr: np.ndarray, plan: TilePlan) -> np.ndarray:
+    """Host tile grid: ``(n_tiles, tile_bytes)`` uint8, rows in global-id order."""
+    arr = np.ascontiguousarray(arr).reshape(plan.shape)
+    dims, perm = _interleave(plan.shape, plan.grid)
+    tiles = np.ascontiguousarray(arr.reshape(dims).transpose(perm))
+    return tiles.reshape(plan.n_tiles, -1).view(np.uint8)
+
+
+def grid_to_array(grid: np.ndarray, plan: TilePlan) -> np.ndarray:
+    """Inverse of :func:`array_to_grid` (host)."""
+    dt = np.dtype(plan.dtype)
+    tile = plan.tile
+    vals = np.ascontiguousarray(grid).view(dt).reshape(tuple(plan.grid) + tuple(tile))
+    nd = len(plan.shape)
+    perm = [0] * (2 * nd)
+    for i in range(nd):
+        perm[2 * i] = i
+        perm[2 * i + 1] = nd + i
+    return np.ascontiguousarray(vals.transpose(perm)).reshape(plan.shape)
+
+
+def _tile_grid_impl(block: Any, counts: Tuple[int, ...], tile: Tuple[int, ...]) -> Any:
+    import jax
+    import jax.numpy as jnp
+
+    dims: List[int] = []
+    for c, t in zip(counts, tile):
+        dims.extend((c, t))
+    nd = len(counts)
+    perm = [2 * i for i in range(nd)] + [2 * i + 1 for i in range(nd)]
+    n_local = int(np.prod(counts, dtype=np.int64))
+    flat = jnp.transpose(block.reshape(dims), perm).reshape(n_local, -1)
+    u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+    return u8.reshape(n_local, -1)
+
+
+@functools.lru_cache(maxsize=None)
+def _tile_grid_jit():
+    import jax
+
+    return jax.jit(_tile_grid_impl, static_argnames=("counts", "tile"))
+
+
+def _device_tile_grid(block: Any, counts: Tuple[int, ...], tile: Tuple[int, ...]) -> Any:
+    """Device-local tile grid of one shard block: ``(n_local, tile_bytes)``
+    uint8, built entirely on the block's own device (reshape + transpose +
+    bitcast — zero cross-device traffic).  Jitted: the dump hot path runs
+    this once per shard per dump, so eager per-op dispatch would dominate
+    the per-part encode wall."""
+    return _tile_grid_jit()(block, tuple(counts), tuple(tile))
+
+
+def _grid_to_block_impl(
+    grid: Any, counts: Tuple[int, ...], tile: Tuple[int, ...], dtype: str
+) -> Any:
+    import jax
+    import jax.numpy as jnp
+
+    dt = np.dtype(dtype)
+    n_local = int(np.prod(counts, dtype=np.int64))
+    x = grid.reshape(n_local, -1)
+    if dt.itemsize > 1:
+        x = x.reshape(n_local, -1, dt.itemsize)
+    x = jax.lax.bitcast_convert_type(x, jnp.dtype(dt))
+    nd = len(counts)
+    perm = [0] * (2 * nd)
+    for i in range(nd):
+        perm[2 * i] = i
+        perm[2 * i + 1] = nd + i
+    block_shape = tuple(c * t for c, t in zip(counts, tile))
+    return jnp.transpose(x.reshape(tuple(counts) + tuple(tile)), perm).reshape(block_shape)
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_to_block_jit():
+    import jax
+
+    return jax.jit(_grid_to_block_impl, static_argnames=("counts", "tile", "dtype"))
+
+
+def device_grid_to_block(
+    grid: Any, counts: Tuple[int, ...], tile: Tuple[int, ...], dtype: Any
+) -> Any:
+    """Inverse of :func:`_device_tile_grid` on device (restore scatter)."""
+    return _grid_to_block_jit()(grid, tuple(counts), tuple(tile), str(np.dtype(dtype)))
+
+
+# --------------------------------------------------------------------------
+# sharded views
+# --------------------------------------------------------------------------
+@dataclass
+class ShardPart:
+    """One addressable shard's slice of a tile plan.
+
+    ``tile_ids[j]`` is the *global* chunk id of local grid row ``j``;
+    ``grid_fn`` builds the local ``(n_local, tile_bytes)`` uint8 grid on the
+    part's own device.  Parts from a live array rebuild lazily and drop
+    their cached grid after the dump (``owns_grid=False``); decode products
+    own a concrete grid and keep it (they *are* the base)."""
+
+    device: Any
+    offsets: Tuple[int, ...]          # tile-coordinate offset of this block
+    counts: Tuple[int, ...]           # tiles per dim in this block
+    tile_ids: np.ndarray = field(repr=False)
+    grid_fn: Callable[[], Any] = field(repr=False)
+    owns_grid: bool = False
+    _grid: Any = field(default=None, repr=False)
+    # native device block, when the part wraps a live array shard: lets the
+    # dump diff run block-native (compare + reduce, no tile-grid transpose)
+    block_fn: Optional[Callable[[], Any]] = field(default=None, repr=False)
+
+    @property
+    def n_local(self) -> int:
+        return int(self.tile_ids.shape[0])
+
+    @property
+    def grid(self) -> Any:
+        if self._grid is None:
+            self._grid = self.grid_fn()
+        return self._grid
+
+    def drop_cached_grid(self) -> None:
+        if not self.owns_grid:
+            self._grid = None
+
+
+@dataclass
+class ShardedView:
+    """A tensor as per-shard tile grids with global chunk coordinates.
+
+    Drop-in sibling of :class:`~repro.core.delta_pipeline.ChunkedView` for
+    the dump pipeline's planning layer: same identifying fields (shape,
+    dtype, nbytes, chunk_bytes, n_chunks, trailing_pad) so clean-key reuse
+    and metadata checks are shared, plus the plan and the parts the
+    pipeline fans per-shard tasks out of."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    chunk_bytes: int                  # == plan.tile_bytes
+    n_chunks: int                     # == plan.n_tiles
+    plan: TilePlan
+    parts: List[ShardPart]
+    sharding: Any = None              # source jax sharding (restore layout)
+    trailing_pad: int = 0             # tiles cover exactly: always 0
+
+    def drop_cached_device_grid(self) -> None:
+        for part in self.parts:
+            part.drop_cached_grid()
+
+    def part_map(self) -> Dict[bytes, ShardPart]:
+        """Parts keyed by their tile-id signature (base alignment lookup)."""
+        return {p.tile_ids.tobytes(): p for p in self.parts}
+
+    def row_bytes(self, idx: int) -> Optional[bytes]:
+        """One global chunk's bytes, fetched from the single shard that owns
+        it (verified-read repair path; never a gather)."""
+        import jax
+
+        for part in self.parts:
+            pos = np.flatnonzero(part.tile_ids == idx)
+            if pos.size:
+                row = jax.device_get(part.grid[int(pos[0])])
+                FETCH.note_fetch(part.device, row.nbytes)
+                return np.ascontiguousarray(row).tobytes()
+        return None
+
+
+def _unique_shards(arr: Any) -> Optional[List[Any]]:
+    """Addressable shards deduplicated by block index (replication folds to
+    one copy); None when the array exposes no shard structure."""
+    shards = getattr(arr, "addressable_shards", None)
+    if shards is None:
+        return None
+    seen: Dict[Tuple, Any] = {}
+    for sh in shards:
+        key = tuple(
+            (s.start or 0, s.stop if s.stop is not None else dim)
+            for s, dim in zip(sh.index, arr.shape)
+        )
+        if key not in seen:
+            seen[key] = sh
+    return list(seen.values())
+
+
+def is_partitioned(arr: Any) -> bool:
+    """True when a full host read of ``arr`` must combine blocks from more
+    than one device.  Replicated multi-device arrays are NOT partitioned —
+    one replica holds every byte, so fetching it is not a gather."""
+    shards = _unique_shards(arr)
+    if shards is None:
+        return False
+    return len(shards) > 1
+
+
+def sharded_view(arr: Any, plan: TilePlan) -> ShardedView:
+    """Build the per-shard view of ``arr`` under ``plan``.
+
+    Every unique shard block whose bounds are tile-aligned becomes a
+    :class:`ShardPart`; a layout that does not nest into the plan (or an
+    array with no shard structure) degrades to a single part over the whole
+    array — on a multi-device array that part's grid build is a gather,
+    counted in :class:`FetchStats` (and it trips the transfer guard), so
+    fallbacks are visible, never silent."""
+    parts = _plan_parts(arr, plan)
+    if parts is None:
+        parts = [_whole_array_part(arr, plan)]
+    return ShardedView(
+        shape=plan.shape,
+        dtype=plan.dtype,
+        nbytes=plan.nbytes,
+        chunk_bytes=plan.tile_bytes,
+        n_chunks=plan.n_tiles,
+        plan=plan,
+        parts=parts,
+        sharding=getattr(arr, "sharding", None),
+    )
+
+
+def _plan_parts(arr: Any, plan: TilePlan) -> Optional[List[ShardPart]]:
+    shards = _unique_shards(arr)
+    if not shards:
+        return None
+    tile = plan.tile
+    covered = np.zeros(plan.n_tiles, bool)
+    parts: List[ShardPart] = []
+    for sh in shards:
+        offs: List[int] = []
+        cnts: List[int] = []
+        for sl, t, dim in zip(sh.index, tile, arr.shape):
+            start = sl.start or 0
+            stop = sl.stop if sl.stop is not None else dim
+            if start % t or stop % t:
+                return None               # block not tile-aligned: gather fallback
+            offs.append(start // t)
+            cnts.append((stop - start) // t)
+        ids = _block_tile_ids(tuple(offs), tuple(cnts), plan.grid)
+        if covered[ids].any():
+            return None                   # overlapping blocks: gather fallback
+        covered[ids] = True
+        parts.append(_shard_part(sh, tuple(offs), tuple(cnts), ids, tile))
+    if not covered.all():
+        return None                       # holes: gather fallback
+    return parts
+
+
+def _block_tile_ids(
+    offsets: Tuple[int, ...], counts: Tuple[int, ...], grid: Tuple[int, ...]
+) -> np.ndarray:
+    """Global chunk ids of a tile block, in local row-major order."""
+    axes = [np.arange(o, o + c, dtype=np.int64) for o, c in zip(offsets, counts)]
+    coords = np.meshgrid(*axes, indexing="ij")
+    return np.ravel_multi_index([c.reshape(-1) for c in coords], grid).astype(np.int64)
+
+
+def _shard_part(
+    sh: Any, offsets: Tuple[int, ...], counts: Tuple[int, ...], ids: np.ndarray, tile: Tuple[int, ...]
+) -> ShardPart:
+    data = sh.data
+
+    def build(d=data, c=counts, t=tile):
+        return _device_tile_grid(d, c, t)
+
+    return ShardPart(
+        device=sh.device,
+        offsets=offsets,
+        counts=counts,
+        tile_ids=ids,
+        grid_fn=build,
+        block_fn=lambda d=data: d,
+    )
+
+
+def _whole_array_part(arr: Any, plan: TilePlan) -> ShardPart:
+    def build(a=arr, p=plan):
+        import jax
+
+        host = jax.device_get(a)          # explicit; partitioned = a gather
+        if is_partitioned(a):
+            FETCH.note_gather(int(np.asarray(host).nbytes))
+        return array_to_grid(np.asarray(host), p)
+
+    device = None
+    devs = getattr(arr, "devices", None)
+    if devs is not None:
+        ds = list(devs())
+        device = ds[0] if len(ds) == 1 else None
+    return ShardPart(
+        device=device,
+        offsets=tuple(0 for _ in plan.grid),
+        counts=tuple(plan.grid),
+        tile_ids=np.arange(plan.n_tiles, dtype=np.int64),
+        grid_fn=build,
+    )
+
+
+def view_from_part_grids(
+    plan: TilePlan,
+    parts: List[Tuple[ShardPart, Any]],
+    sharding: Any,
+) -> ShardedView:
+    """A ShardedView over *owned* concrete per-part grids (decode product:
+    the rebuilt generation registers these as the next diff base)."""
+    new_parts = [
+        ShardPart(
+            device=part.device,
+            offsets=part.offsets,
+            counts=part.counts,
+            tile_ids=part.tile_ids,
+            grid_fn=(lambda g=grid: g),
+            owns_grid=True,
+            _grid=grid,
+        )
+        for part, grid in parts
+    ]
+    return ShardedView(
+        shape=plan.shape,
+        dtype=plan.dtype,
+        nbytes=plan.nbytes,
+        chunk_bytes=plan.tile_bytes,
+        n_chunks=plan.n_tiles,
+        plan=plan,
+        parts=new_parts,
+        sharding=sharding,
+    )
+
+
+def assemble_from_parts(view: ShardedView, blocks: List[Any]) -> Any:
+    """Global jax.Array from per-part device blocks (restore scatter)."""
+    import jax
+
+    return jax.make_array_from_single_device_arrays(
+        tuple(view.shape), view.sharding, blocks
+    )
+
+
+# --------------------------------------------------------------------------
+# ShardedArrayState — the device-side CowArrayState analogue
+# --------------------------------------------------------------------------
+class ShardedArrayState:
+    """ForkableState + DeltaEncodable over a dict of (sharded) jax arrays.
+
+    Fork is pure aliasing (jax arrays are immutable); ``set`` rebinds a key
+    and feeds the dirty-key hint, mirroring :class:`CowArrayState`'s write
+    tracking.  ``delta_generation`` exposes every multi-chunk tensor as a
+    :class:`ShardedView` under its canonical :class:`TilePlan`, so dumps
+    diff and drain per shard with zero gathers; sub-chunk tensors go to the
+    host digest path via explicit per-array ``jax.device_get``."""
+
+    def __init__(self, arrays: Optional[Dict[str, Any]] = None):
+        self._arrays: Dict[str, Any] = dict(arrays or {})
+        self._released = False
+        self._dirty: Optional[Set[str]] = None
+        self._dirty_base: Optional[int] = None
+
+    # -- reads / writes ---------------------------------------------------
+    def get(self, key: str) -> Any:
+        return self._arrays[key]
+
+    def keys(self):
+        return self._arrays.keys()
+
+    def set(self, key: str, value: Any) -> None:
+        if self._dirty is not None:
+            self._dirty.add(key)
+        self._arrays[key] = value
+
+    # -- dirty tracking ---------------------------------------------------
+    def reset_dirty_tracking(self, base_ckpt: Optional[int] = None) -> None:
+        self._dirty = set()
+        self._dirty_base = base_ckpt
+
+    def invalidate_dirty_tracking(self) -> None:
+        self._dirty = None
+        self._dirty_base = None
+
+    def dirty_tracking_base(self) -> Optional[int]:
+        return self._dirty_base if self._dirty is not None else None
+
+    def dirty_fraction_hint(self) -> Optional[float]:
+        if self._dirty is None:
+            return None
+        total = sum(int(a.nbytes) for a in self._arrays.values())
+        if total <= 0:
+            return 0.0
+        dirty = sum(
+            int(self._arrays[k].nbytes) for k in self._dirty if k in self._arrays
+        )
+        return min(dirty / total, 1.0)
+
+    # -- ForkableState ----------------------------------------------------
+    def fork(self) -> "ShardedArrayState":
+        clone = ShardedArrayState(self._arrays)
+        clone._dirty = None if self._dirty is None else set(self._dirty)
+        clone._dirty_base = self._dirty_base
+        return clone
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        self._arrays = {}
+
+    def warm(self) -> None:
+        pass                              # immutable arrays: nothing to warm
+
+    def dump_payload(self) -> Dict[str, np.ndarray]:
+        """Full host payload (digest/legacy fallback — this *is* a gather
+        for multi-device arrays, and the ledger says so)."""
+        from repro.kernels import ops as kops
+
+        out: Dict[str, np.ndarray] = {}
+        for key, arr in self._arrays.items():
+            host = kops.shard_fetch_assemble(arr)
+            if is_partitioned(arr):
+                FETCH.note_gather(host.nbytes)
+            out[key] = host
+        return out
+
+    # -- DeltaEncodable ---------------------------------------------------
+    def delta_generation(self, chunk_bytes: int) -> DeltaGeneration:
+        import jax
+
+        views: Dict[str, Any] = {}
+        extras: Dict[str, np.ndarray] = {}
+        for key, arr in self._arrays.items():
+            nbytes = int(arr.nbytes)
+            if nbytes >= chunk_bytes and arr.ndim >= 1 and nbytes > 0:
+                plan = TilePlan.for_array(tuple(arr.shape), arr.dtype, chunk_bytes)
+                views[key] = sharded_view(arr, plan)
+            else:
+                # sub-chunk tensors take the host digest path; a partitioned
+                # one still needs its blocks combined — count that honestly
+                host = np.asarray(jax.device_get(arr))
+                if is_partitioned(arr):
+                    FETCH.note_gather(host.nbytes)
+                extras[key] = host
+        dirty = None if self._dirty is None else frozenset(self._dirty)
+        return DeltaGeneration(views=views, extras=extras, dirty_keys=dirty)
+
+    # -- restore ----------------------------------------------------------
+    @staticmethod
+    def restore_from_payload(
+        payload: Dict[str, Any], shardings: Optional[Dict[str, Any]] = None
+    ) -> "ShardedArrayState":
+        """Rebuild device state from a decoded payload.
+
+        ``shardings`` maps key → target ``jax.sharding.Sharding`` (the
+        *restore-time* mesh layout, possibly different from the dump-time
+        one).  Host arrays scatter per shard via ``jax.device_put`` onto
+        the target sharding; payload values that are already (sharded) jax
+        arrays — the pipeline's device decode path — are resharded the same
+        way, or adopted as-is when no target is given."""
+        import jax
+
+        arrays: Dict[str, Any] = {}
+        for key, val in payload.items():
+            target = shardings.get(key) if shardings else None
+            if target is not None:
+                arrays[key] = jax.device_put(val, target)
+            elif hasattr(val, "addressable_shards"):
+                arrays[key] = val
+            else:
+                arrays[key] = jax.numpy.asarray(val)
+        return ShardedArrayState(arrays)

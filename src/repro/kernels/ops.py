@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,14 @@ __all__ = [
     "delta_compact",
     "delta_encode",
     "fused_encode",
+    "shard_block_encode",
+    "chunk_checksums_device",
     "chunk_checksums_host",
     "device_fetch",
     "start_host_fetch",
+    "start_shard_fetch",
+    "shard_fetch",
+    "shard_fetch_assemble",
     "use_interpret",
     "CHECKSUM_LANES",
 ]
@@ -167,6 +172,64 @@ def fused_encode(old, new, max_changed: int):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("counts", "tile", "max_changed"))
+def shard_block_encode(old, new, counts, tile, max_changed: int):
+    """Block-native diff + compact for one shard part.
+
+    Same (data, idx, count) contract as ``delta_encode``, but over the
+    shard's NATIVE block layout instead of a
+    materialized tile grid: per-tile dirtiness is a compare + reduce (one
+    read of old and new, nothing written back), and only the ``max_changed``
+    dirty tiles' bytes are extracted — each as the row-major tile bitcast to
+    uint8, bit-identical to the matching ``_device_tile_grid`` row.  Device
+    work is O(state) reads + O(delta) writes, where the grid path pays two
+    O(state) byte-transposes per dump (old + new) before it ever diffs.
+    """
+    nd = len(counts)
+    inter: list = []
+    for c, t in zip(counts, tile):
+        inter.extend((c, t))
+    neq = (old != new).reshape(inter)
+    dirty = jnp.any(neq, axis=tuple(2 * i + 1 for i in range(nd))).reshape(-1)
+    count = jnp.sum(dirty.astype(jnp.int32))
+    # ascending order, -1 padding at the tail, first-capacity overflow drop:
+    # the exact delta_compact_ref slot contract
+    idx = jnp.nonzero(dirty, size=max_changed, fill_value=-1)[0].astype(jnp.int32)
+    # extract the selected tiles as a flat gather — work ∝ max_changed tiles,
+    # never an O(block) tile-grid transpose.  Element offsets of one tile
+    # (row-major over the tile, static) + the tile's base offset give each
+    # row's exact element indices in the native block.
+    block_shape = tuple(c * t for c, t in zip(counts, tile))
+    estrides = np.ones(nd, np.int64)
+    for i in range(nd - 2, -1, -1):
+        estrides[i] = estrides[i + 1] * block_shape[i + 1]
+    tcoords = np.indices(tile).reshape(nd, -1)
+    t_off = (tcoords * estrides[:, None]).sum(0)             # (tile_elems,)
+    ccoords = jnp.unravel_index(jnp.maximum(idx, 0), counts)
+    # int32 offsets: fine below 2**31 elements per shard block (8 GiB f32)
+    base = sum(
+        c.astype(jnp.int32) * np.int32(t * s)
+        for c, t, s in zip(ccoords, tile, estrides)
+    )
+    flat_idx = base[:, None] + jnp.asarray(t_off, jnp.int32)[None, :]
+    rows = jnp.take(new.reshape(-1), flat_idx)               # (cap, tile_elems)
+    u8 = jax.lax.bitcast_convert_type(rows, jnp.uint8).reshape(max_changed, -1)
+    data = jnp.where((idx >= 0)[:, None], u8, jnp.uint8(0))
+    return data, idx, count
+
+
+@jax.jit
+def chunk_checksums_device(chunks):
+    """Device-side ``ref.chunk_checksums_ref`` lanes over compacted rows.
+
+    Drain calls this on the power-of-two fetch slice, so the integrity
+    lanes cost O(fetched rows * chunk) instead of O(capacity * chunk) —
+    the block-native encode never pays for checksums on rows it will not
+    ship.
+    """
+    return _ref.chunk_checksums_ref(chunks)
+
+
 # numpy mirror constants of ref.chunk_checksums_ref — kept in lockstep
 _CS_MULT = np.uint32(2654435761)
 _CS_ADD = np.uint32(40503)
@@ -216,3 +279,85 @@ def device_fetch(*arrays) -> List[np.ndarray]:
     """Materialize device arrays on host, overlapping the copies."""
     start_host_fetch(*arrays)
     return [np.asarray(a) for a in arrays]
+
+
+# --------------------------------------------------------------------------
+# shard-granular fetches (the gather-free dump path)
+# --------------------------------------------------------------------------
+def start_shard_fetch(*arrays) -> None:
+    """Begin async device→host copies per addressable shard.
+
+    The sharded analogue of :func:`start_host_fetch`: each shard's DMA
+    starts from its own device, so no cross-device gather is dispatched.
+    Arrays without shard structure fall back to the whole-array prestart."""
+    for a in arrays:
+        shards = getattr(a, "addressable_shards", None)
+        if shards is None:
+            start_host_fetch(a)
+            continue
+        for sh in shards:
+            fn = getattr(sh.data, "copy_to_host_async", None)
+            if fn is not None:
+                try:
+                    fn()
+                except Exception:
+                    pass  # best-effort: the blocking fetch stays correct
+
+
+def shard_fetch(array) -> List[Tuple[Any, np.ndarray]]:
+    """Explicit per-shard device→host fetch: ``[(device, host_block), ...]``.
+
+    Uses ``jax.device_get`` on each shard's single-device block — never
+    materializes the global array, so it is legal under a disallow
+    transfer guard and moves each block exactly once from its own device.
+    Unsharded inputs return a single ``(device_or_None, host_array)``."""
+    import jax
+
+    shards = getattr(array, "addressable_shards", None)
+    if shards is None:
+        dev = None
+        devs = getattr(array, "devices", None)
+        if devs is not None:
+            ds = list(devs())
+            dev = ds[0] if len(ds) == 1 else None
+        return [(dev, np.asarray(jax.device_get(array)))]
+    start_shard_fetch(array)
+    out: List[Tuple[Any, np.ndarray]] = []
+    seen = set()
+    for sh in shards:
+        key = tuple(
+            (s.start or 0, s.stop if s.stop is not None else dim)
+            for s, dim in zip(sh.index, array.shape)
+        )
+        if key in seen:
+            continue  # replicated shard: one copy is enough
+        seen.add(key)
+        out.append((sh.device, np.asarray(jax.device_get(sh.data))))
+    return out
+
+
+def shard_fetch_assemble(array) -> np.ndarray:
+    """Host materialization of a (possibly sharded) array, assembled from
+    per-shard fetches — the full-payload fallback (digest/legacy dumps) for
+    sharded state.  O(S) bytes move, but each byte leaves its own device
+    exactly once and assembly happens in host memory, never on device."""
+    shards = getattr(array, "addressable_shards", None)
+    if shards is None:
+        import jax
+
+        return np.asarray(jax.device_get(array))
+    import jax
+
+    start_shard_fetch(array)
+    out = np.empty(array.shape, dtype=np.dtype(str(array.dtype)))
+    seen = set()
+    for sh in shards:
+        key = tuple(
+            (s.start or 0, s.stop if s.stop is not None else dim)
+            for s, dim in zip(sh.index, array.shape)
+        )
+        if key in seen:
+            continue
+        seen.add(key)
+        out[sh.index] = np.asarray(jax.device_get(sh.data))
+    return out

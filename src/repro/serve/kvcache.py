@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import faults
 from repro.core.delta_pipeline import ChunkedView, DeltaGeneration
+from repro.dist import shard_dump as _sd
 from repro.kernels import ops as kops
 
 __all__ = [
@@ -98,12 +99,19 @@ class PagePool:
         max_pages_per_session: int = 32,
         dtype: Optional[str] = None,
         verify_cow: bool = False,
+        sharding: Optional[Any] = None,
     ):
         self.cfg = cfg
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_pages = max_pages_per_session
         dt = jnp.dtype(dtype or cfg.dtype)
+        # Optional placement for the device pools, over the stacked pool
+        # axes (n_periods, P, page_size, KVH, Hd).  Shard the head/feature
+        # axes (tensor parallelism); leave the page axis (axis 1)
+        # unsharded — page gathers index it with host-chosen page lists and
+        # must stay shard-local for the gather-free dump path.
+        self.sharding = sharding
         # stage -> tag -> stacked (N_periods, P, psz, KVH, Hd)
         self.pools_k: Dict[str, Dict[str, jax.Array]] = {}
         self.pools_v: Dict[str, Dict[str, jax.Array]] = {}
@@ -117,6 +125,9 @@ class PagePool:
                         shape = (stage.n_periods, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
                         sk[tag] = jnp.zeros(shape, dt)
                         sv[tag] = jnp.zeros(shape, dt)
+                        if sharding is not None:
+                            sk[tag] = jax.device_put(sk[tag], sharding)
+                            sv[tag] = jax.device_put(sv[tag], sharding)
                         self.attn_tags.append((f"stage{i}", tag))
             self.pools_k[f"stage{i}"] = sk
             self.pools_v[f"stage{i}"] = sv
@@ -156,6 +167,28 @@ class PagePool:
     def bytes_per_page(self) -> int:
         """Physical bytes one page occupies across every layer's K+V pools."""
         return self._bytes_per_page
+
+    def multi_device(self) -> bool:
+        """True when the pools are spread over more than one device."""
+        if self.sharding is None:
+            return False
+        return len(getattr(self.sharding, "device_set", ())) > 1
+
+    def grid_sharding(self) -> Optional[Any]:
+        """Placement for gathered page grids ``(n_pages, periods, psz, KVH,
+        Hd)``, derived from the pool sharding ``(periods, P, psz, KVH, Hd)``:
+        the page axis becomes the (unsharded) leading axis and the remaining
+        axes keep their pool placement.  None when the pool is unsharded or
+        the sharding carries no NamedSharding-style mesh/spec."""
+        sh = self.sharding
+        spec = getattr(sh, "spec", None)
+        mesh = getattr(sh, "mesh", None)
+        if sh is None or spec is None or mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        s = list(spec) + [None] * max(0, 5 - len(tuple(spec)))
+        return NamedSharding(mesh, PartitionSpec(None, s[0], s[2], s[3], s[4]))
 
     # --------------------------------------------------------- page algebra
     def alloc(self) -> int:
@@ -383,6 +416,65 @@ class PagePool:
             )
 
 
+class _TrackedExtras(dict):
+    """Session extras dict that notes which top-level keys were written.
+
+    Every rebind path (``[]=``, ``del``, ``update``, ``pop``, ``popitem``,
+    ``setdefault``, ``clear``) records the touched key into the owning
+    session's ``_dirty_extras`` set, giving ``delta_generation`` key-granular
+    dirty hints for recurrent state (mamba/xlstm extras) without reading a
+    byte of device memory.  The invariant callers must keep: values are
+    rebound, never mutated in place — jnp arrays are immutable and the
+    engine rebinds whole recurrent-state subtrees, so a nested-``dict``
+    value handed out by ``setdefault``/``[]`` must not be written through
+    (the tracker cannot see it, exactly like writing through a stale page
+    table).  ``setdefault`` conservatively marks its key dirty because the
+    returned default is a candidate for exactly that kind of aliasing.
+    """
+
+    def __init__(self, owner: "PagedSession", data: Optional[Dict[str, Any]] = None):
+        super().__init__(data or {})
+        self._owner = owner
+
+    def _note(self, key: Any) -> None:
+        dirty = self._owner._dirty_extras
+        if dirty is not None:
+            dirty.add(key)
+
+    def __setitem__(self, key, value):
+        self._note(key)
+        super().__setitem__(key, value)
+
+    def __delitem__(self, key):
+        self._note(key)
+        super().__delitem__(key)
+
+    def setdefault(self, key, default=None):
+        self._note(key)
+        return super().setdefault(key, default)
+
+    def pop(self, key, *args):
+        if key in self:
+            self._note(key)
+        return super().pop(key, *args)
+
+    def popitem(self):
+        key, val = super().popitem()
+        self._note(key)
+        return key, val
+
+    def update(self, *args, **kwargs):
+        incoming = dict(*args, **kwargs)
+        for key in incoming:
+            self._note(key)
+        super().update(incoming)
+
+    def clear(self):
+        for key in list(self):
+            self._note(key)
+        super().clear()
+
+
 class PagedSession:
     """A forkable agent session: page table + recurrent/host extras.
 
@@ -402,9 +494,13 @@ class PagedSession:
         self.pool = pool
         self.table = table if table is not None else np.zeros((pool.max_pages,), np.int32)
         self.seq_len = int(seq_len)
+        # top-level extras keys rebound since the lineage was last marked
+        # clean; None = unknown (delta dumps treat every extra as dirty).
+        # Must exist before the tracked dict below is constructed.
+        self._dirty_extras: Optional[set] = None
         # extras: recurrent states (immutable jnp arrays -> alias on fork),
         # sampling rng, last token, conversation metadata...
-        self.extras: Dict[str, Any] = dict(extras or {})
+        self.extras: Dict[str, Any] = _TrackedExtras(self, dict(extras or {}))
         self.tokens: List[int] = list(tokens or [])
         self._released = False
         # page positions written since the lineage was last marked clean;
@@ -423,27 +519,50 @@ class PagedSession:
     # ---------------------------------------------------- dirty tracking
     def reset_dirty_tracking(self, base_ckpt=None) -> None:
         self._dirty_pages = set()
+        self._dirty_extras = set()
         self._dirty_base = base_ckpt
 
     def invalidate_dirty_tracking(self) -> None:
         self._dirty_pages = None
+        self._dirty_extras = None
         self._dirty_base = None
 
     def dirty_tracking_base(self):
         return self._dirty_base if self._dirty_pages is not None else None
 
+    def _extras_nbytes(self) -> Dict[str, int]:
+        """Per-top-level-key extras byte sizes, from ``nbytes`` alone — jnp
+        and numpy arrays both expose it, so no device transfer happens."""
+
+        def size(val: Any) -> int:
+            if isinstance(val, dict):
+                return sum(size(v) for v in val.values())
+            nbytes = getattr(val, "nbytes", None)
+            if nbytes is not None:
+                return int(nbytes)
+            return int(np.asarray(val).nbytes)
+
+        return {name: size(val) for name, val in self.extras.items()}
+
     def dirty_fraction_hint(self) -> Optional[float]:
-        """Fraction of active page positions written since the last
-        mark-clean; None when tracking is invalid.  An upper bound on the
-        per-grid dirty fraction (the adaptive selector's ratio calibration
-        absorbs the scale), used to pick the dump mode per checkpoint."""
-        if self._dirty_pages is None:
+        """Byte-weighted fraction of the session's dumpable state (active KV
+        pages + extras) written since the last mark-clean; None when
+        tracking is invalid.  An upper bound on the per-grid dirty fraction
+        (the adaptive selector's ratio calibration absorbs the scale), used
+        to pick the dump mode per checkpoint.  Weighting by bytes means
+        recurrent-only sessions (zero attention pages, all state in extras)
+        report real churn instead of a constant 0.0."""
+        if self._dirty_pages is None or self._dirty_extras is None:
             return None
         n = self.n_pages
-        if n == 0:
+        bpp = self.pool.bytes_per_page()
+        sizes = self._extras_nbytes()
+        total = n * bpp + sum(sizes.values())
+        if total <= 0:
             return 0.0
-        dirty = sum(1 for pos in self._dirty_pages if pos < n)
-        return min(dirty / n, 1.0)
+        dirty = bpp * sum(1 for pos in self._dirty_pages if pos < n)
+        dirty += sum(sizes.get(key, 0) for key in self._dirty_extras)
+        return min(dirty / total, 1.0)
 
     # ------------------------------------------------------- ForkableState
     def fork(self) -> "PagedSession":
@@ -456,6 +575,7 @@ class PagedSession:
             tokens=list(self.tokens),
         )
         clone._dirty_pages = None if self._dirty_pages is None else set(self._dirty_pages)
+        clone._dirty_extras = None if self._dirty_extras is None else set(self._dirty_extras)
         clone._dirty_base = self._dirty_base
         return clone
 
@@ -534,19 +654,26 @@ class PagedSession:
         The dump pipeline diffs these grids against the parent generation
         with ``kernels.delta_encode``; pages the dirty hint clears never get
         gathered at all, and only compacted dirty pages cross device→host.
+
+        On a multi-device pool the gathered page grids are instead exposed
+        as ``dist.shard_dump.ShardedView``s under the canonical mesh-
+        independent ``TilePlan`` (``chunk_bytes`` sets the tile target), so
+        the pipeline diffs/compacts each shard on its own device and only
+        per-shard dirty tiles cross device→host — chunk ids and digests then
+        match any other mesh layout of the same session state.
         """
-        del chunk_bytes  # KV chunk granularity is the page, not the store's
         extras: Dict[str, np.ndarray] = {
             "meta/seq_len": np.asarray([self.seq_len], np.int64),
             "meta/tokens": np.asarray(self.tokens, np.int64),
         }
         for name, val in self._flat_extras().items():
             extras[f"extra/{name}"] = val
-        views: Dict[str, ChunkedView] = {}
+        views: Dict[str, Any] = {}
         n_pages = self.n_pages
         if n_pages:
             pages = self.active_pages().copy()
             pool = self.pool
+            grid_shard = pool.grid_sharding() if pool.multi_device() else None
             for skey, tag in pool.attn_tags:
                 proto = pool.pools_k[skey][tag]
                 periods, _, psz, kvh, hd = proto.shape
@@ -555,6 +682,17 @@ class PagedSession:
                 row_bytes = row_elems * proto.dtype.itemsize
                 for kv in ("k", "v"):
                     key = f"kv/{skey}/{tag}/{kv}"
+                    if grid_shard is not None:
+                        pools = pool.pools_k if kv == "k" else pool.pools_v
+                        dev = jnp.moveaxis(
+                            pools[skey][tag][:, jnp.asarray(pages, jnp.int32)], 1, 0
+                        )
+                        dev = jax.device_put(dev, grid_shard)
+                        plan = _sd.TilePlan.for_array(
+                            shape, str(proto.dtype), max(int(chunk_bytes), 1)
+                        )
+                        views[key] = _sd.sharded_view(dev, plan)
+                        continue
 
                     def build(p=pool, s=skey, t=tag, which=kv, idx=pages, n=n_pages):
                         pools = p.pools_k if which == "k" else p.pools_v
@@ -571,14 +709,22 @@ class PagedSession:
                         trailing_pad=0,
                         grid_fn=build,
                     )
-        if self._dirty_pages is None:
+        if self._dirty_pages is None or self._dirty_extras is None:
             dirty_keys = None
         else:
-            # meta/extras churn every step and are tiny: always dirty.  KV
-            # grids are dirty only if some page position was written.
-            dirty_keys = frozenset(extras)
+            # Session metadata churns every step and is tiny: always dirty.
+            # Extras are dirty at top-level-key granularity (the tracked
+            # dict notes every rebind); KV grids only if some page position
+            # was written.
+            dirty = {"meta/seq_len", "meta/tokens"}
+            for key in extras:
+                if key.startswith("extra/"):
+                    head = key[len("extra/"):].split("::", 1)[0]
+                    if head in self._dirty_extras:
+                        dirty.add(key)
             if self._dirty_pages:
-                dirty_keys = dirty_keys | frozenset(views)
+                dirty.update(views)
+            dirty_keys = frozenset(dirty)
         return DeltaGeneration(views=views, extras=extras, dirty_keys=dirty_keys)
 
     # --------------------------------------------------------------- write

@@ -2,8 +2,16 @@ import os
 import sys
 
 # Tests must see exactly ONE device (dryrun.py alone forces 512); make sure
-# no leaked XLA_FLAGS from a prior shell changes that.
+# no leaked XLA_FLAGS from a prior shell changes that.  The multi-device
+# lane opts back in explicitly: REPRO_HOST_DEVICES=8 fakes an 8-device host
+# mesh (set here, before jax initializes) so the sharded dump suite runs on
+# CPU-only CI.
 os.environ.pop("XLA_FLAGS", None)
+_host_devices = os.environ.get("REPRO_HOST_DEVICES", "")
+if _host_devices.isdigit() and int(_host_devices) > 1:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_host_devices)}"
+    )
 
 # Kernel sweeps validate the Pallas kernels in interpret mode against the
 # jnp oracles.  Production CPU runs route delta_* through the oracles for

@@ -199,6 +199,81 @@ def test_paged_session_hint_counts_active_dirty_pages():
     sess.release()
 
 
+def test_paged_session_extras_tracking_key_granular():
+    """The tracked extras dict notes every rebind path; delta_generation
+    marks only rebound extras dirty (page/key-granular hints for recurrent
+    state instead of the old always-dirty blanket)."""
+    from repro.configs import get_config
+    from repro.serve import PagePool, PagedSession
+
+    cfg = get_config("olmo-1b-tiny")
+    pool = PagePool(cfg, num_pages=8, page_size=4, max_pages_per_session=4)
+    sess = PagedSession(pool)
+    sess.extras["stage0/mamba"] = {"conv": np.zeros(64, np.float32),
+                                   "ssm": np.zeros(32, np.float32)}
+    sess.extras["rng_counter"] = np.asarray([0], np.int64)
+    sess.reset_dirty_tracking(1)
+    gen = sess.delta_generation(256)
+    # nothing rebound: meta/* stays dirty (it churns every step), extras not
+    assert gen.dirty_keys == frozenset({"meta/seq_len", "meta/tokens"})
+    sess.extras["rng_counter"] = np.asarray([1], np.int64)
+    gen = sess.delta_generation(256)
+    assert "extra/rng_counter" in gen.dirty_keys
+    assert not any(k.startswith("extra/stage0/mamba") for k in gen.dirty_keys)
+    # nested recurrent state rebinds at its top-level key
+    sess.extras["stage0/mamba"] = {"conv": np.ones(64, np.float32),
+                                   "ssm": np.zeros(32, np.float32)}
+    gen = sess.delta_generation(256)
+    assert "extra/stage0/mamba::conv" in gen.dirty_keys
+    assert "extra/stage0/mamba::ssm" in gen.dirty_keys
+    sess.release()
+
+
+def test_tracked_extras_covers_every_write_path():
+    from repro.configs import get_config
+    from repro.serve import PagePool, PagedSession
+
+    cfg = get_config("olmo-1b-tiny")
+    pool = PagePool(cfg, num_pages=8, page_size=4, max_pages_per_session=4)
+    sess = PagedSession(pool, extras={"a": 1, "b": 2, "c": 3, "d": 4})
+    sess.reset_dirty_tracking(1)
+    sess.extras["a"] = 10
+    sess.extras.update(b=20)
+    sess.extras.pop("c")
+    sess.extras.setdefault("e", 5)
+    del sess.extras["d"]
+    assert sess._dirty_extras == {"a", "b", "c", "d", "e"}
+    sess.extras.clear()
+    assert "e" in sess._dirty_extras
+    # fork copies the set; the clone tracks independently
+    sess.extras["f"] = 6
+    clone = sess.fork()
+    clone.extras["g"] = 7
+    assert "g" in clone._dirty_extras and "g" not in sess._dirty_extras
+    clone.release()
+    sess.release()
+
+
+def test_recurrent_only_session_hint_reflects_extras_churn():
+    """Zero attention pages must not pin the hint to 0.0 — recurrent-only
+    sessions (mamba/xlstm) carry all their state in extras."""
+    from repro.configs import get_config
+    from repro.serve import PagePool, PagedSession
+
+    cfg = get_config("olmo-1b-tiny")
+    pool = PagePool(cfg, num_pages=8, page_size=4, max_pages_per_session=4)
+    sess = PagedSession(pool)
+    sess.extras["stage0/mamba"] = {"conv": np.zeros(256, np.float32)}
+    sess.extras["seed"] = np.asarray([1], np.int64)
+    sess.reset_dirty_tracking(1)
+    assert sess.n_pages == 0
+    assert sess.dirty_fraction_hint() == 0.0
+    sess.extras["stage0/mamba"] = {"conv": np.ones(256, np.float32)}
+    hint = sess.dirty_fraction_hint()
+    assert hint == pytest.approx(1024 / (1024 + 8))
+    sess.release()
+
+
 # ---------------------------------------------------------------------------
 # fused vs unfused device path: chunk-for-chunk parity
 # ---------------------------------------------------------------------------

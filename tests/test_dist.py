@@ -64,6 +64,21 @@ def test_enforce_divisible_fallback():
     assert tuple(spec) == (("pod", "data"), None)
 
 
+def test_enforce_divisible_per_dim_independence():
+    """Each dim falls back on its own — a bad axis never poisons the rest."""
+    # dim0 divides, dim1 does not, dim2 has no axes at all
+    spec = enforce_divisible(P("data", "model", None), (32, 17, 5), MESH)
+    assert tuple(spec) == ("data", None, None)
+    # both dims fail → fully replicated
+    spec = enforce_divisible(P("data", "model"), (7, 9), MESH)
+    assert tuple(spec) == (None, None)
+    # tuple axes: the product (2·16=32) is what must divide
+    spec = enforce_divisible(P(("pod", "data"), "model"), (96, 48), MESH3)
+    assert tuple(spec) == (("pod", "data"), "model")
+    spec = enforce_divisible(P(("pod", "data"), "model"), (48, 48), MESH3)
+    assert tuple(spec) == (None, "model")        # 48 % 32 != 0
+
+
 def test_data_axes_and_batch_spec():
     assert data_axes(MESH) == ("data",)
     assert data_axes(MESH3) == ("pod", "data")
@@ -84,7 +99,57 @@ def test_cache_specs_seq_sharded():
 def test_constrain_noop_without_context():
     x = jax.numpy.ones((4, 4))
     y = constrain(x, ("dp", None))
-    assert y is x                                # no ctx → no-op
+    assert y is x                                # no ctx → exact identity
+    # identity regardless of the logical names used
+    assert constrain(x, ("model", "kv")) is x
+    assert constrain(x, (None, None)) is x
+
+
+def test_constrain_literal_axis_passthrough():
+    """Names that are not logical axes pass through as literal mesh axes."""
+    captured = {}
+    real = jax.lax.with_sharding_constraint
+
+    def fake(x, spec):
+        captured["spec"] = spec
+        return x
+
+    jax.lax.with_sharding_constraint = fake
+    try:
+        with activation_sharding(dp=("data",)):
+            constrain(jax.numpy.ones((2, 2)), ("dp", "expert"))
+        assert captured["spec"] == P("data", "expert")
+    finally:
+        jax.lax.with_sharding_constraint = real
+
+
+def test_attn_shard_kv_vs_group_resolution():
+    """GQA head-axis TP routing: ``kv`` and ``group`` are mutually exclusive
+    per architecture (qwen3's 8 KV heads shard directly; MQA/low-KV models
+    like gemma-2b and qwen2-vl-2b shard the query groups instead)."""
+    assert get_config("qwen3-14b").attn_shard == "kv"
+    assert get_config("gemma-2b").attn_shard == "group"
+    assert get_config("qwen2-vl-2b").attn_shard == "group"
+    captured = {}
+    real = jax.lax.with_sharding_constraint
+
+    def fake(x, spec):
+        captured["spec"] = spec
+        return x
+
+    jax.lax.with_sharding_constraint = fake
+    try:
+        for arch, want_kv, want_group in (
+            ("qwen3-14b", "model", None),
+            ("gemma-2b", None, "model"),
+            ("qwen2-vl-2b", None, "model"),
+        ):
+            shard = get_config(arch).attn_shard
+            with activation_sharding(attn_shard=shard):
+                constrain(jax.numpy.ones((2, 2)), ("kv", "group"))
+            assert captured["spec"] == P(want_kv, want_group), arch
+    finally:
+        jax.lax.with_sharding_constraint = real
 
 
 def test_constrain_resolution_under_context():

@@ -1,0 +1,431 @@
+"""Shard-native dumps: canonical tile plans, gather-free per-shard encode,
+cross-mesh digest identity, and sharded restore.
+
+Single-device tests always run; the differential multi-device suite needs a
+faked 8-device host mesh — run it with::
+
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m pytest tests/test_shard_dump.py
+
+(conftest.py translates REPRO_HOST_DEVICES into
+``--xla_force_host_platform_device_count`` before jax initializes).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DeltaCR
+from repro.core.policy import DumpPolicy
+from repro.dist import shard_dump as sd
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs REPRO_HOST_DEVICES=8 (8-device host mesh)"
+)
+
+
+def _mesh(rows, cols):
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices()[: rows * cols]).reshape(rows, cols)
+    return Mesh(devs, ("data", "model"))
+
+
+def _sharding(mesh, *axes):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(mesh, PartitionSpec(*axes))
+
+
+# ---------------------------------------------------------------------------
+# TilePlan: canonical, mesh-independent, invertible
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    shape=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 24, 64]), min_size=1, max_size=4),
+    dtype=st.sampled_from(["float32", "int8", "uint16", "int64"]),
+    chunk_bytes=st.sampled_from([1, 64, 1024, 65536]),
+)
+def test_tileplan_properties(shape, dtype, chunk_bytes):
+    shape = tuple(shape)
+    plan = sd.TilePlan.for_array(shape, dtype, chunk_bytes)
+    assert plan.shape == shape and plan.dtype == dtype
+    for s, g in zip(shape, plan.grid):
+        assert g >= 1 and (g & (g - 1)) == 0, "tile counts are powers of two"
+        assert g <= sd.MAX_TILES_PER_DIM
+        assert s % g == 0, "tiles always divide their dim"
+    # one tile holds >= chunk_bytes unless the plan is already a single tile
+    if any(g > 1 for g in plan.grid):
+        assert plan.tile_bytes >= chunk_bytes
+    assert plan.nbytes == int(np.prod(shape)) * np.dtype(dtype).itemsize
+    # pure function of (shape, dtype, chunk_bytes): deterministic
+    assert plan == sd.TilePlan.for_array(shape, dtype, chunk_bytes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=st.sampled_from([(64,), (8, 24), (4, 16, 8), (2, 4, 6, 8)]),
+    dtype=st.sampled_from(["float32", "int8", "int64"]),
+    chunk_bytes=st.sampled_from([16, 256, 4096]),
+    seed=st.integers(0, 2**16),
+)
+def test_grid_roundtrip(shape, dtype, chunk_bytes, seed):
+    rng = np.random.default_rng(seed)
+    arr = (rng.standard_normal(shape) * 100).astype(dtype)
+    plan = sd.TilePlan.for_array(shape, dtype, chunk_bytes)
+    grid = sd.array_to_grid(arr, plan)
+    assert grid.shape == (plan.n_tiles, plan.tile_bytes) and grid.dtype == np.uint8
+    np.testing.assert_array_equal(sd.grid_to_array(grid, plan), arr)
+
+
+def test_device_grid_matches_host_grid():
+    """The on-device tile build is bit-identical to the host reference."""
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((16, 24)).astype(np.float32)
+    plan = sd.TilePlan.for_array(arr.shape, arr.dtype, 256)
+    view = sd.sharded_view(jnp.asarray(arr), plan)
+    dev = np.concatenate([np.asarray(jax.device_get(p.grid)) for p in view.parts])
+    host = sd.array_to_grid(arr, plan)
+    # single device: one part covering every tile, in global id order
+    assert [p.tile_ids.tolist() for p in view.parts] == [list(range(plan.n_tiles))]
+    np.testing.assert_array_equal(dev, host)
+    # device round-trip back to a block
+    block = sd.device_grid_to_block(
+        view.parts[0].grid, view.parts[0].counts, plan.tile, plan.dtype
+    )
+    np.testing.assert_array_equal(np.asarray(jax.device_get(block)), arr)
+
+
+def test_fetch_stats_ledger():
+    sd.reset_fetch_stats()
+    sd.FETCH.note_fetch("devA", 100)
+    sd.FETCH.note_fetch("devB", 50)
+    sd.FETCH.note_gather(1000)
+    snap = sd.fetch_stats()
+    assert snap["fetched_bytes"] == 150
+    assert snap["by_device"] == {"devA": 100, "devB": 50}
+    assert snap["gather_bytes"] == 1000 and snap["gathers"] == 1
+    sd.reset_fetch_stats()
+    assert sd.fetch_stats()["fetched_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ShardedArrayState (single device): protocol + dump/restore round-trip
+# ---------------------------------------------------------------------------
+
+
+def _cr(restore_fn=None, chunk_bytes=2048):
+    return DeltaCR(
+        policy=DumpPolicy(mode="delta"), chunk_bytes=chunk_bytes, restore_fn=restore_fn
+    )
+
+
+def test_sharded_state_protocol_and_hint():
+    rng = np.random.default_rng(1)
+    s = sd.ShardedArrayState(
+        {"a": jnp.asarray(rng.standard_normal(1024).astype(np.float32)),
+         "b": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+    )
+    assert s.dirty_fraction_hint() is None
+    s.reset_dirty_tracking(7)
+    assert s.dirty_tracking_base() == 7
+    assert s.dirty_fraction_hint() == 0.0
+    s.set("b", s.get("b") + 1)
+    assert s.dirty_fraction_hint() == pytest.approx(256 / 1280)
+    f = s.fork()
+    assert f.dirty_fraction_hint() == pytest.approx(256 / 1280)
+    f.invalidate_dirty_tracking()
+    assert f.dirty_fraction_hint() is None
+    assert s.dirty_fraction_hint() is not None  # fork's tracking is private
+
+
+def test_single_device_dump_restore_roundtrip():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    tiny = rng.standard_normal(4).astype(np.float32)  # sub-chunk → extras path
+    state = sd.ShardedArrayState({"w": jnp.asarray(w), "tiny": jnp.asarray(tiny)})
+    cr = _cr(restore_fn=lambda p: sd.ShardedArrayState.restore_from_payload(p))
+    try:
+        cr.checkpoint(state, 1, None)
+        w2 = w.copy()
+        w2[5] += 1.0
+        state.set("w", jnp.asarray(w2))
+        cr.checkpoint(state, 2, 1)
+        cr.wait_dumps()
+        img = cr.dump_future(2).result()
+        assert img.entries["w"].tile_grid, "multi-chunk tensors dump tiled"
+        got, _how = cr.restore(2)
+        np.testing.assert_array_equal(np.asarray(jax.device_get(got.get("w"))), w2)
+        np.testing.assert_array_equal(np.asarray(jax.device_get(got.get("tiny"))), tiny)
+    finally:
+        cr.shutdown()
+
+
+def test_tiled_images_decode_without_base():
+    """A persisted tiled image must decode from chunks alone (host path)."""
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((32, 48)).astype(np.float32)
+    state = sd.ShardedArrayState({"w": jnp.asarray(w)})
+    cr = _cr(restore_fn=lambda p: sd.ShardedArrayState.restore_from_payload(p))
+    try:
+        cr.checkpoint(state, 1, None)
+        cr.wait_dumps()
+        img = cr.dump_future(1).result()
+        meta = img.entries["w"]
+        plan = sd.TilePlan.from_meta(meta)
+        grid = np.stack(
+            [np.frombuffer(cr.store.get(cid), np.uint8) for cid in meta.chunk_ids]
+        )
+        np.testing.assert_array_equal(sd.grid_to_array(grid, plan), w)
+    finally:
+        cr.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# multi-device: the differential plane
+# ---------------------------------------------------------------------------
+
+LAYOUTS = [
+    ("fsdp_tp", ("data", "model")),
+    ("tp_only", (None, "model")),
+    ("fsdp_only", ("data", None)),
+    ("replicated", ()),
+]
+
+
+def _dump_digests(arrs, shardings, chunk_bytes=2048, mutate=None):
+    """Dump a (possibly sharded) state twice (parent + delta child) and
+    return each checkpoint's {key: (tile_grid, digests)}."""
+    state = sd.ShardedArrayState(
+        {k: jax.device_put(jnp.asarray(v), s) if s is not None else jnp.asarray(v)
+         for (k, v), s in zip(arrs.items(), shardings)}
+    )
+    cr = _cr(chunk_bytes=chunk_bytes)
+    try:
+        cr.checkpoint(state, 1, None)
+        out = {}
+        img1 = cr.dump_future(1).result()
+        out[1] = {
+            k: (m.tile_grid, m.digests, len(m.chunk_ids)) for k, m in img1.entries.items()
+        }
+        if mutate is not None:
+            for k, v in mutate.items():
+                state.set(
+                    k,
+                    jax.device_put(
+                        jnp.asarray(v), state.get(k).sharding
+                    ),
+                )
+            cr.checkpoint(state, 2, 1)
+            img2 = cr.dump_future(2).result()
+            out[2] = {
+                k: (m.tile_grid, m.digests, len(m.chunk_ids))
+                for k, m in img2.entries.items()
+            }
+        return out
+    finally:
+        cr.shutdown()
+
+
+@multidevice
+@pytest.mark.parametrize("name,axes", LAYOUTS)
+def test_sharded_digests_identical_to_single_device(name, axes):
+    """Chunk-for-chunk digest identity: the invariant that makes checkpoint
+    images portable across mesh layouts."""
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    v = rng.standard_normal((128,)).astype(np.float32)
+    w2 = w.copy()
+    w2[7, :16] += 2.0
+
+    mesh = _mesh(4, 2)
+    shard = _sharding(mesh, *axes)
+    v_shard = _sharding(mesh, axes[0] if axes else None)
+    single = _sharding(_mesh(1, 1), None)
+    v_single = _sharding(_mesh(1, 1), None)
+    ref = _dump_digests({"w": w, "v": v}, [single, v_single], mutate={"w": w2})
+    got = _dump_digests({"w": w, "v": v}, [shard, v_shard], mutate={"w": w2})
+    assert got == ref, f"digest drift under layout {name!r}"
+
+
+@multidevice
+def test_sharded_digests_identical_across_meshes():
+    rng = np.random.default_rng(12)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    a = _dump_digests({"w": w}, [_sharding(_mesh(4, 2), "data", "model")])
+    b = _dump_digests({"w": w}, [_sharding(_mesh(2, 4), "data", "model")])
+    c = _dump_digests({"w": w}, [_sharding(_mesh(8, 1), "data", None)])
+    assert a == b == c
+
+
+@multidevice
+def test_gather_free_dump_bytes_proportional_to_delta():
+    """The tentpole gate: only each shard's compacted dirty rows cross
+    device→host, under a disallow transfer guard, zero gathers."""
+    mesh = _mesh(4, 2)
+    shard = _sharding(mesh, "data", "model")
+    rng = np.random.default_rng(13)
+    w = rng.standard_normal((256, 128)).astype(np.float32)
+    arr = jax.device_put(jnp.asarray(w), shard)
+    state = sd.ShardedArrayState({"w": arr})
+    cr = _cr(chunk_bytes=4096)
+    try:
+        cr.checkpoint(state, 1, None)
+        cr.wait_dumps()
+        # dirty exactly one shard's rows: w is split 4-way over dim 0
+        w2 = w.copy()
+        w2[0, 0] += 1.0  # one element → one tile, owned by one device
+        state.set("w", jax.device_put(jnp.asarray(w2), shard))
+        sd.reset_fetch_stats()
+        with sd.no_implicit_transfers():
+            cr.checkpoint(state, 2, 1, priority="sync")
+            cr.wait_dumps()
+        snap = sd.fetch_stats()
+        assert snap["gather_bytes"] == 0 and snap["gathers"] == 0
+        img = cr.dump_future(2).result()
+        plan = sd.TilePlan.from_meta(img.entries["w"])
+        # one dirty tile (+ its idx word): bytes ∝ the delta, and they came
+        # from a single device
+        assert snap["fetched_bytes"] <= plan.tile_bytes + 64
+        assert len([d for d, b in snap["by_device"].items() if b]) == 1
+    finally:
+        cr.shutdown()
+
+
+@multidevice
+def test_misaligned_layout_falls_back_to_counted_gather():
+    """A layout that cannot nest into the canonical plan must still dump
+    correctly — via a *counted* gather, never silently."""
+    rng = np.random.default_rng(14)
+    # chunk_bytes == the tensor's full size → the canonical plan is ONE
+    # tile; any 4-way split of dim 0 then starts mid-tile, which cannot nest
+    w = rng.standard_normal((64, 64)).astype(np.float32)  # 16 KiB
+    quarter = _sharding(_mesh(4, 2), "data", None)
+    arr = jax.device_put(jnp.asarray(w), quarter)
+    state = sd.ShardedArrayState({"w": arr})
+    cr = _cr(chunk_bytes=w.nbytes)
+    try:
+        sd.reset_fetch_stats()
+        cr.checkpoint(state, 1, None, priority="sync")
+        cr.wait_dumps()
+        snap = sd.fetch_stats()
+        assert snap["gathers"] >= 1, "fallback gather must be counted"
+        img = cr.dump_future(1).result()
+        meta = img.entries["w"]
+        grid = np.stack(
+            [np.frombuffer(cr.store.get(cid), np.uint8) for cid in meta.chunk_ids]
+        )
+        np.testing.assert_array_equal(
+            sd.grid_to_array(grid, sd.TilePlan.from_meta(meta)), w
+        )
+    finally:
+        cr.shutdown()
+
+
+@multidevice
+def test_fork_rollback_interleaving_digest_identity():
+    """Fork + mutate + rollback interleavings produce the same images
+    sharded as unsharded — the differential test plane of the tentpole."""
+
+    def run(sharding):
+        rng = np.random.default_rng(21)
+        w = rng.standard_normal((64, 64)).astype(np.float32)
+        state = sd.ShardedArrayState({"w": jax.device_put(jnp.asarray(w), sharding)})
+        cr = _cr(
+            restore_fn=lambda p, s=sharding: sd.ShardedArrayState.restore_from_payload(
+                p, {"w": s}
+            ),
+            chunk_bytes=2048,
+        )
+        digests = []
+        try:
+            cr.checkpoint(state, 1, None)
+            child = state.fork()
+            wa = w.copy()
+            wa[3] += 1.0
+            child.set("w", jax.device_put(jnp.asarray(wa), sharding))
+            cr.checkpoint(child, 2, 1)
+            # rollback to ckpt 1, then diverge differently
+            rolled, _ = cr.restore(1)
+            wb = w.copy()
+            wb[40, 8:] -= 3.0
+            rolled.set("w", jax.device_put(jnp.asarray(wb), sharding))
+            cr.checkpoint(rolled, 3, 1)
+            cr.wait_dumps()
+            for ck in (1, 2, 3):
+                m = cr.dump_future(ck).result().entries["w"]
+                digests.append((m.tile_grid, m.digests, tuple(m.shape)))
+        finally:
+            cr.shutdown()
+        return digests
+
+    ref = run(_sharding(_mesh(1, 1), None))
+    got = run(_sharding(_mesh(4, 2), "data", "model"))
+    assert got == ref
+
+
+@multidevice
+def test_restore_onto_different_mesh():
+    mesh_a = _mesh(4, 2)
+    mesh_b = _mesh(2, 4)
+    sh_a = _sharding(mesh_a, "data", "model")
+    sh_b = _sharding(mesh_b, "data", "model")
+    rng = np.random.default_rng(22)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    state = sd.ShardedArrayState({"w": jax.device_put(jnp.asarray(w), sh_a)})
+    cr = _cr(
+        restore_fn=lambda p: sd.ShardedArrayState.restore_from_payload(p, {"w": sh_b})
+    )
+    try:
+        cr.checkpoint(state, 1, None)
+        w2 = w.copy()
+        w2[10] *= 2.0
+        state.set("w", jax.device_put(jnp.asarray(w2), sh_a))
+        cr.checkpoint(state, 2, 1)
+        cr.wait_dumps()
+        cr.evict_template(2)  # force decode, not template fork
+        got, how = cr.restore(2)
+        out = got.get("w")
+        np.testing.assert_array_equal(np.asarray(jax.device_get(out)), w2)
+    finally:
+        cr.shutdown()
+
+
+@multidevice
+def test_sharded_kv_pool_dump_gather_free():
+    """Sharded paged-KV sessions ride the same shard-native path."""
+    from repro.configs import get_config
+    from repro.serve.kvcache import PagePool, PagedSession
+
+    cfg = get_config("qwen3-14b")  # 8 KV heads: clean 2-way TP split
+    mesh = _mesh(4, 2)
+    pool_shard = _sharding(mesh, None, None, None, "model", None)
+    pool = PagePool(cfg, num_pages=8, page_size=4, max_pages_per_session=4,
+                    sharding=pool_shard)
+    sess = PagedSession(pool)
+    sess.seq_len = 8  # 2 pages
+    sess.table[0] = pool.alloc()
+    sess.table[1] = pool.alloc()
+    sess.reset_dirty_tracking(0)
+    gen = sess.delta_generation(4096)
+    kv_keys = [k for k in gen.views if k.startswith("kv/")]
+    assert kv_keys, "attention pools expose kv views"
+    for k in kv_keys:
+        assert hasattr(gen.views[k], "parts"), "multi-device pool → ShardedView"
+    cr = _cr(chunk_bytes=4096)
+    try:
+        sd.reset_fetch_stats()
+        with sd.no_implicit_transfers():
+            cr.checkpoint(sess, 1, None, priority="sync")
+            cr.wait_dumps()
+        assert sd.fetch_stats()["gather_bytes"] == 0
+        img = cr.dump_future(1).result()
+        for k in kv_keys:
+            assert img.entries[k].tile_grid
+    finally:
+        cr.shutdown()
+        sess.release()
